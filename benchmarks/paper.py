@@ -1,0 +1,186 @@
+"""One benchmark per paper table/figure.
+
+Each ``bench_*`` returns a list of (name, us_per_call, derived) rows, where
+``us_per_call`` times the model/kernel under test on this machine and
+``derived`` is the paper-comparable number (speedup, reduction, ...).
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.core.cmsa_model import utilization_improvement_cmsa
+from repro.core.dataflows import ALL_DATAFLOWS, Dataflow, GemmShape
+from repro.core.energy_model import (
+    DRAM_BANDWIDTH_BYTES,
+    PAPER_ASIC,
+    area_overhead_im2col,
+    bounded_runtime_s,
+    dram_energy_joules,
+    power_overhead_im2col,
+    zero_gating_power_reduction,
+)
+from repro.core.im2col_model import ConvShape, im2col_traffic, lower_to_gemm, model_traffic
+from repro.core.runtime_model import (
+    ArrayShape,
+    fill_latency_axon,
+    fill_latency_sa,
+    runtime_scaleup,
+)
+from repro.core.utilization import utilization_improvement
+from repro.core.workloads import GEMV, MOBILENET_DW, TABLE3, resnet50_convs, yolov3_convs
+
+
+def _timeit(fn, n=5):
+    fn()
+    t0 = time.perf_counter()
+    for _ in range(n):
+        fn()
+    return (time.perf_counter() - t0) / n * 1e6
+
+
+# -------------------------------------------------------------- Fig. 6
+def bench_fig6_fill_latency():
+    rows = []
+    for r in (16, 64, 128, 256):
+        arr = ArrayShape(r, r)
+        us = _timeit(lambda: (fill_latency_sa(arr), fill_latency_axon(arr)))
+        rows.append((f"fig6_fill_{r}x{r}_sa_vs_axon", us,
+                     f"{fill_latency_sa(arr)}->{fill_latency_axon(arr)}"))
+    return rows
+
+
+# -------------------------------------------------------------- Fig. 12 / Table 3
+def bench_fig12_runtime():
+    rows = []
+    for r in (64, 128, 256):
+        arr = ArrayShape(r, r)
+        speeds = []
+        for name, shape in TABLE3.items():
+            t_sa = runtime_scaleup(shape, arr, Dataflow.OS, axon=False,
+                                   overlap_readout=True)
+            t_ax = runtime_scaleup(shape, arr, Dataflow.OS, axon=True,
+                                   overlap_readout=True)
+            speeds.append(t_sa / t_ax)
+        us = _timeit(lambda: [runtime_scaleup(s, arr, Dataflow.OS, axon=True)
+                              for s in TABLE3.values()])
+        rows.append((f"fig12_avg_speedup_{r}x{r}", us,
+                     f"{np.mean(speeds):.3f}x (paper: 1.47x@64, 1.76x@256)"))
+    # per-workload at 256 for the appendix table
+    arr = ArrayShape(256, 256)
+    for name, shape in TABLE3.items():
+        t_sa = runtime_scaleup(shape, arr, Dataflow.OS, axon=False,
+                               overlap_readout=True)
+        t_ax = runtime_scaleup(shape, arr, Dataflow.OS, axon=True,
+                               overlap_readout=True)
+        rows.append((f"fig12_{name}_256", 0.0, f"{t_sa / t_ax:.3f}x"))
+    return rows
+
+
+# -------------------------------------------------------------- Fig. 13
+def bench_fig13_utilization_cmsa():
+    arr = ArrayShape(128, 128)
+    ax, cm = [], []
+    for shape in TABLE3.values():
+        ax.append(utilization_improvement(shape, arr, axon=True))
+        cm.append(utilization_improvement_cmsa(shape, arr))
+    us = _timeit(lambda: [utilization_improvement(s, arr, axon=True)
+                          for s in TABLE3.values()])
+    return [
+        ("fig13_axon_avg_UR_improvement", us, f"{np.mean(ax) * 100:.1f}%"),
+        ("fig13_cmsa_avg_UR_improvement", 0.0, f"{np.mean(cm) * 100:.1f}%"),
+        ("fig13_axon_over_cmsa", 0.0,
+         f"{(np.mean(ax) - np.mean(cm)) * 100:.1f}pp (paper: ~27%)"),
+    ]
+
+
+# -------------------------------------------------------------- Fig. 14
+def bench_fig14_gemv_dwconv():
+    rows = []
+    arr = ArrayShape(64, 64)
+    speeds = []
+    for name, shape in GEMV.items():
+        df = Dataflow.IS  # T = M = 1: fill-dominated
+        t_sa = runtime_scaleup(shape, arr, df, axon=False, overlap_readout=True)
+        t_ax = runtime_scaleup(shape, arr, df, axon=True, overlap_readout=True)
+        speeds.append(t_sa / t_ax)
+        rows.append((f"fig14_{name}", 0.0, f"{t_sa / t_ax:.3f}x"))
+    for conv in MOBILENET_DW[:4]:
+        g = lower_to_gemm(ConvShape(conv.H, conv.W, 1, 1, conv.n,
+                                    stride=conv.stride, padding=conv.padding))
+        t_sa = runtime_scaleup(g, arr, Dataflow.IS, axon=False,
+                               overlap_readout=True)
+        t_ax = runtime_scaleup(g, arr, Dataflow.IS, axon=True,
+                               overlap_readout=True)
+        speeds.append(t_sa / t_ax)
+        rows.append((f"fig14_dw_{conv.name}", 0.0, f"{t_sa / t_ax:.3f}x"))
+    rows.append(("fig14_avg_speedup", 0.0,
+                 f"{np.mean(speeds):.3f}x (paper: 1.8x avg, up to 2x)"))
+    return rows
+
+
+# -------------------------------------------------------------- Fig. 11 + §5.2.1
+def bench_fig11_im2col_traffic():
+    rows = []
+    shapes = [ConvShape(56, 56, 64, 64, 3, 1, 1, "rn50_3x3_56"),
+              ConvShape(28, 28, 128, 128, 3, 1, 1, "rn50_3x3_28"),
+              ConvShape(208, 208, 64, 128, 3, 2, 1, "yolo_3x3_s2"),
+              ConvShape(112, 112, 32, 32, 3, 1, 1, "mbnet_3x3_112")]
+    for c in shapes:
+        t = im2col_traffic(c, feeder_group=16)
+        rows.append((f"fig11_{c.name}", 0.0,
+                     f"{t.reduction * 100:.1f}% reduction"))
+    for net, convs, paper in (("resnet50", resnet50_convs(), (261.2, 153.5)),
+                              ("yolov3", yolov3_convs(), (2540.0, 1117.0))):
+        us = _timeit(lambda: model_traffic(convs))
+        sw, ax = model_traffic(convs)
+        red = 1 - ax / sw
+        paper_red = 1 - paper[1] / paper[0]
+        rows.append((f"traffic_{net}", us,
+                     f"{red * 100:.1f}% (paper {paper_red * 100:.1f}%)"))
+        saved = sw - ax
+        rows.append((f"energy_{net}_saved", 0.0,
+                     f"{dram_energy_joules(saved) * 1e3:.2f} mJ"))
+        # §5.2.1: ~1.25x speedup from reduced traffic at 6.4 GB/s.  Under OUR
+        # batch-1 fp16 traffic both nets are compute-bound on the 256-PE
+        # array, so the bounded model gives ~1x; with the paper's own (~5x
+        # larger, accounting unstated) MB figures the same model lands in
+        # the claimed regime -- report both (fidelity note, EXPERIMENTS.md).
+        comp_cycles = int(sum(lower_to_gemm(c).macs / 256 for c in convs))
+        t_sw = bounded_runtime_s(comp_cycles, sw)
+        t_ax = bounded_runtime_s(comp_cycles, ax)
+        p_sw = bounded_runtime_s(comp_cycles, paper[0] * 1e6)
+        p_ax = bounded_runtime_s(comp_cycles, paper[1] * 1e6)
+        rows.append((f"speedup_{net}_membound", 0.0,
+                     f"ours {t_sw / t_ax:.2f}x; w/ paper-traffic "
+                     f"{p_sw / p_ax:.2f}x (paper ~1.25x)"))
+    return rows
+
+
+# -------------------------------------------------------------- Fig. 10 / 15
+def bench_fig10_15_asic():
+    return [
+        ("fig10_area_overhead_im2col", 0.0,
+         f"{area_overhead_im2col() * 100:.3f}% (paper 0.2%)"),
+        ("fig10_power_overhead_im2col", 0.0,
+         f"{power_overhead_im2col() * 100:.3f}% (paper text 1.6%; its own "
+         f"mW figures give 0.167%)"),
+        ("fig10_peak_throughput", 0.0,
+         f"{PAPER_ASIC.peak_flops / 1e9:.0f} GFLOP/s @550MHz FP16"),
+        ("zero_gating_10pct_sparsity", 0.0,
+         f"{zero_gating_power_reduction(0.10) * 100:.2f}% power (paper 5.3%)"),
+        ("fig15_vs_sauria", 0.0,
+         "axon 2:1-mux im2col vs SAURIA feeder: -3.93% area, -4.5% power "
+         "(paper-reported deltas, encoded as calibration)"),
+    ]
+
+
+ALL_BENCHES = [
+    bench_fig6_fill_latency,
+    bench_fig12_runtime,
+    bench_fig13_utilization_cmsa,
+    bench_fig14_gemv_dwconv,
+    bench_fig11_im2col_traffic,
+    bench_fig10_15_asic,
+]

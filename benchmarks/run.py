@@ -1,0 +1,22 @@
+"""Benchmark harness: one function per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV.  Roofline/dry-run tables live in
+``benchmarks.roofline`` (they read the dry-run JSON artifacts).
+"""
+from __future__ import annotations
+
+
+def main() -> None:
+    from benchmarks.kernels_bench import bench_kernels
+    from benchmarks.paper import ALL_BENCHES
+
+    print("name,us_per_call,derived")
+    for bench in ALL_BENCHES:
+        for name, us, derived in bench():
+            print(f"{name},{us:.1f},{derived}")
+    for name, us, derived in bench_kernels():
+        print(f"{name},{us:.1f},{derived}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,41 @@
+"""The paper's im2col story end-to-end on a conv workload.
+
+1. analytical traffic model (Fig. 11): software im2col vs Axon MUX feeders
+2. the MUX feeder simulator streaming exact im2col windows
+3. the Pallas implicit-im2col kernel (TPU adaptation) vs lax.conv oracle
+
+Run: PYTHONPATH=src python examples/conv_im2col_demo.py
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.axon_sim import simulate_im2col_feeders
+from repro.core.im2col_model import ConvShape, im2col_traffic, lower_to_gemm
+from repro.kernels import ref
+from repro.kernels.im2col_conv import hbm_traffic_model, im2col_conv
+
+conv = ConvShape(56, 56, 64, 64, 3, stride=1, padding=1, name="resnet50-3x3")
+gemm = lower_to_gemm(conv)
+t = im2col_traffic(conv, feeder_group=16)
+print(f"[model] {conv.name}: GeMM M={gemm.M} K={gemm.K} N={gemm.N}")
+print(f"[model] software-im2col streams {t.sw_im2col_elems / 1e6:.1f}M elems; "
+      f"Axon feeders fetch {t.axon_elems / 1e6:.1f}M "
+      f"({t.reduction * 100:.1f}% reduction)")
+
+ifmap = np.arange(144.0).reshape(12, 12)
+sim = simulate_im2col_feeders(ifmap, 3, group=8)
+print(f"[sim] 8 feeder PEs: {sim.sram_reads} SRAM reads, {sim.mux_reads} MUX "
+      f"reuses (1-in-3 schedule), windows == im2col rows: "
+      f"{np.array_equal(sim.windows[0], ifmap[0:3, 0:3].reshape(-1))}")
+
+x = jax.random.normal(jax.random.PRNGKey(0), (1, 28, 28, 16), jnp.float32)
+w = jax.random.normal(jax.random.PRNGKey(1), (3, 3, 16, 32), jnp.float32) * 0.2
+out = im2col_conv(x, w, stride=1, padding=1, block_rows=7, block_cout=32,
+                  block_cin=16, interpret=True)
+want = ref.conv2d_ref(x, w, stride=1, padding=1)
+np.testing.assert_allclose(out, want, rtol=3e-4, atol=3e-4)
+hbm = hbm_traffic_model(x.shape, w.shape, stride=1, padding=1)
+print(f"[pallas] implicit-im2col conv matches lax.conv "
+      f"(max err {float(jnp.abs(out - want).max()):.2e}); modeled HBM cut "
+      f"{hbm['reduction'] * 100:.1f}% vs materialized im2col")

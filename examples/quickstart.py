@@ -1,0 +1,48 @@
+"""Quickstart: the Axon mapper, the simulator, and one training step.
+
+Run: PYTHONPATH=src python examples/quickstart.py
+"""
+import jax
+import numpy as np
+
+from repro.core import ArrayShape, Dataflow, GemmShape, runtime_scaleup
+from repro.core.axon_sim import simulate_os
+from repro.core.mapper import select_asic_mapping, select_tpu_blocking
+from repro.configs import get_config
+from repro.data import SyntheticLMDataset
+from repro.optim import adamw
+from repro.train.train_step import init_train_state, make_train_step
+
+# --- 1. the paper's runtime model: Axon halves the fill latency ------------
+shape = GemmShape(M=1024, K=84, N=1024)          # TF0-like: small K
+arr = ArrayShape(64, 64)
+t_sa = runtime_scaleup(shape, arr, Dataflow.OS, axon=False)
+t_ax = runtime_scaleup(shape, arr, Dataflow.OS, axon=True)
+print(f"[runtime model] 64x64 OS: SA={t_sa} cycles, Axon={t_ax} "
+      f"({t_sa / t_ax:.2f}x)")
+
+# --- 2. the cycle-level simulator proves the orchestration is exact --------
+rng = np.random.default_rng(0)
+A, B = rng.standard_normal((8, 5)), rng.standard_normal((5, 8))
+res = simulate_os(A, B, orchestration="axon")
+np.testing.assert_allclose(res.out, A @ B, rtol=1e-12)
+print(f"[simulator] 8x8 Axon tile: bit-exact GeMM, fill={res.fill_cycles} "
+      f"cycles (conventional would be {8 + 8 - 2})")
+
+# --- 3. the mapper as a framework feature: pick dataflow + TPU blocking ----
+m = select_asic_mapping(shape, arr, axon=True)
+b = select_tpu_blocking(shape)
+print(f"[mapper] ASIC: {m.dataflow.value} @ {m.cycles} cycles;  "
+      f"TPU: {b.loop_order.value} blocks (bm={b.bm}, bk={b.bk}, bn={b.bn}), "
+      f"modeled HBM traffic {b.hbm_traffic_bytes / 1e6:.1f} MB")
+
+# --- 4. one real training step on a reduced architecture -------------------
+cfg = get_config("mixtral-8x7b", reduced=True)
+opt = adamw.OptConfig(lr=1e-3, warmup_steps=2, total_steps=10)
+state = init_train_state(jax.random.PRNGKey(0), cfg, opt)
+step = jax.jit(make_train_step(cfg, opt))
+data = SyntheticLMDataset(vocab=cfg.vocab, seq_len=32, global_batch=4)
+state, metrics = step(state, data.next())
+print(f"[train] {cfg.name}: loss={float(metrics['loss']):.3f} "
+      f"aux={float(metrics['aux']):.3f} (MoE load balance)")
+print("quickstart OK")

@@ -1,0 +1,4 @@
+"""Fault-tolerant checkpointing."""
+from repro.checkpoint.checkpointing import CheckpointManager
+
+__all__ = ["CheckpointManager"]

@@ -1,0 +1,144 @@
+"""Atomic, hash-verified, keep-N checkpointing with async save and elastic
+restore.
+
+Layout: ``<dir>/step_<N>/`` containing ``arrays.npz`` (logical, unsharded
+tensors -- so a restart may use a different mesh shape: elastic restore) and
+``meta.json`` (step, tree structure, sha256 of the npz, data-iterator state).
+Writes go to ``step_<N>.tmp`` and are renamed into place only after fsync,
+so a crash mid-save never corrupts the latest checkpoint.  ``keep_n`` old
+checkpoints are garbage-collected after each successful save.
+"""
+from __future__ import annotations
+
+import hashlib
+import json
+import os
+import shutil
+import threading
+from typing import Any
+
+import jax
+import numpy as np
+
+
+def _flatten(state: Any) -> tuple[list[str], list[np.ndarray]]:
+    flat, _ = jax.tree_util.tree_flatten_with_path(state)
+    keys, arrs = [], []
+    for path, leaf in flat:
+        keys.append(jax.tree_util.keystr(path))
+        arrs.append(np.asarray(leaf))
+    return keys, arrs
+
+
+def _sha256(path: str) -> str:
+    h = hashlib.sha256()
+    with open(path, "rb") as f:
+        for chunk in iter(lambda: f.read(1 << 20), b""):
+            h.update(chunk)
+    return h.hexdigest()
+
+
+class CheckpointManager:
+    def __init__(self, directory: str, *, keep_n: int = 3,
+                 async_save: bool = True):
+        self.dir = directory
+        self.keep_n = keep_n
+        self.async_save = async_save
+        self._thread: threading.Thread | None = None
+        os.makedirs(directory, exist_ok=True)
+
+    # ------------------------------------------------------------- save
+    def save(self, step: int, state: Any, extra: dict | None = None) -> None:
+        keys, arrs = _flatten(state)   # materialize on the main thread
+        if self.async_save:
+            self.wait()
+            self._thread = threading.Thread(
+                target=self._write, args=(step, keys, arrs, extra or {}),
+                daemon=True)
+            self._thread.start()
+        else:
+            self._write(step, keys, arrs, extra or {})
+
+    def wait(self) -> None:
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+
+    def _write(self, step: int, keys, arrs, extra: dict) -> None:
+        final = os.path.join(self.dir, f"step_{step:08d}")
+        tmp = final + ".tmp"
+        if os.path.exists(tmp):
+            shutil.rmtree(tmp)
+        os.makedirs(tmp)
+        npz = os.path.join(tmp, "arrays.npz")
+        np.savez(npz, **{f"a{i}": a for i, a in enumerate(arrs)})
+        meta = {
+            "step": step,
+            "keys": keys,
+            "sha256": _sha256(npz),
+            "extra": extra,
+        }
+        with open(os.path.join(tmp, "meta.json"), "w") as f:
+            json.dump(meta, f)
+            f.flush()
+            os.fsync(f.fileno())
+        if os.path.exists(final):
+            shutil.rmtree(final)
+        os.rename(tmp, final)
+        self._gc()
+
+    def _gc(self) -> None:
+        steps = self.all_steps()
+        for s in steps[: max(0, len(steps) - self.keep_n)]:
+            shutil.rmtree(os.path.join(self.dir, f"step_{s:08d}"),
+                          ignore_errors=True)
+
+    # ---------------------------------------------------------- restore
+    def all_steps(self) -> list[int]:
+        out = []
+        for name in os.listdir(self.dir):
+            if name.startswith("step_") and not name.endswith(".tmp"):
+                try:
+                    out.append(int(name.split("_")[1]))
+                except (IndexError, ValueError):
+                    continue
+        return sorted(out)
+
+    def latest_step(self) -> int | None:
+        steps = self.all_steps()
+        return steps[-1] if steps else None
+
+    def restore(self, template: Any, step: int | None = None,
+                *, shardings: Any = None) -> tuple[Any, dict]:
+        """Restore into the structure of ``template``.
+
+        ``shardings``: optional pytree of NamedSharding matching template --
+        arrays are device_put with them (elastic: the mesh may differ from
+        the one that saved).  Verifies the content hash before loading.
+        """
+        step = self.latest_step() if step is None else step
+        if step is None:
+            raise FileNotFoundError(f"no checkpoints in {self.dir}")
+        d = os.path.join(self.dir, f"step_{step:08d}")
+        with open(os.path.join(d, "meta.json")) as f:
+            meta = json.load(f)
+        npz_path = os.path.join(d, "arrays.npz")
+        if _sha256(npz_path) != meta["sha256"]:
+            raise IOError(f"checkpoint {d} failed hash verification")
+        data = np.load(npz_path)
+        arrs = [data[f"a{i}"] for i in range(len(meta["keys"]))]
+
+        flat_t, treedef = jax.tree_util.tree_flatten_with_path(template)
+        keys_t = [jax.tree_util.keystr(p) for p, _ in flat_t]
+        if keys_t != meta["keys"]:
+            raise ValueError("checkpoint tree structure mismatch")
+        leaves = []
+        flat_s = (jax.tree.leaves(shardings) if shardings is not None
+                  else [None] * len(arrs))
+        for (path, tmpl), arr, shd in zip(flat_t, arrs, flat_s):
+            arr = arr.astype(tmpl.dtype)
+            if shd is not None:
+                leaves.append(jax.device_put(arr, shd))
+            else:
+                leaves.append(jax.numpy.asarray(arr))
+        return jax.tree_util.tree_unflatten(treedef, leaves), meta["extra"]

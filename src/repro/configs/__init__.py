@@ -1,0 +1,29 @@
+"""Architecture configs: one module per assigned architecture (+ paper's own).
+
+``get_config(name)`` resolves any of the ten assigned ids, e.g.
+``get_config("mixtral-8x7b")`` or ``get_config("mixtral-8x7b", reduced=True)``
+for the CPU smoke variant.
+"""
+from __future__ import annotations
+
+import importlib
+
+ARCH_IDS = (
+    "deepseek-v3-671b",
+    "mixtral-8x7b",
+    "yi-9b",
+    "deepseek-coder-33b",
+    "qwen2.5-14b",
+    "llama3-405b",
+    "musicgen-medium",
+    "zamba2-7b",
+    "falcon-mamba-7b",
+    "internvl2-1b",
+)
+
+
+def get_config(name: str, *, reduced: bool = False):
+    mod_name = name.replace("-", "_").replace(".", "_")
+    mod = importlib.import_module(f"repro.configs.{mod_name}")
+    cfg = mod.CONFIG
+    return cfg.reduced() if reduced else cfg

@@ -1,0 +1,22 @@
+"""Mixtral 8x7B [arXiv:2401.04088]: 8 experts top-2, sliding-window attention.
+
+8 experts do not divide the 16-way model axis, so experts shard their FFN dim
+(expert_shard='tp').  SWA window 4096 -> the long_500k decode cell runs with a
+rolling window cache.
+"""
+from repro.configs.base import ModelConfig, StageCfg
+
+CONFIG = ModelConfig(
+    name="mixtral-8x7b",
+    d_model=4096,
+    vocab=32000,
+    n_heads=32,
+    n_kv=8,
+    d_head=128,
+    n_experts=8,
+    top_k=2,
+    d_ff_expert=14336,
+    expert_shard="tp",
+    rope_theta=1e6,
+    stages=(StageCfg(n_layers=32, block="moe", window=4096),),
+)

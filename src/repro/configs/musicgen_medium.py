@@ -1,0 +1,19 @@
+"""MusicGen-medium [arXiv:2306.05284]: decoder-only over EnCodec tokens.
+
+Frontend is a STUB per the brief: input_specs() supplies precomputed frame
+embeddings (B, S, d_model); the 4-codebook delay pattern is collapsed to a
+single stream of vocab 2048 (backbone shapes unchanged, DESIGN.md §7).
+"""
+from repro.configs.base import ModelConfig, StageCfg
+
+CONFIG = ModelConfig(
+    name="musicgen-medium",
+    d_model=1536,
+    vocab=2048,
+    n_heads=24,
+    n_kv=24,
+    d_head=64,
+    d_ff=6144,
+    frontend="audio",
+    stages=(StageCfg(n_layers=48, block="dense"),),
+)

@@ -1,0 +1,40 @@
+"""Axon core: the paper's contribution as reusable models + mapper.
+
+Public surface:
+  dataflows      -- OS/WS/IS GeMM projections (Table 1)
+  runtime_model  -- SCALE-SIM Eq.1-3 + Axon Table 2 runtimes
+  axon_sim       -- cycle-level functional simulator (Fig. 3/4 validation)
+  im2col_model   -- conv lowering + memory-traffic model (Fig. 7/11)
+  energy_model   -- ASIC power/area/DRAM-energy calibration (Fig. 10/15)
+  cmsa_model     -- CMSA comparison model (Fig. 13)
+  utilization    -- PE utilization-rate model
+  mapper         -- dataflow/tiling selection (ASIC + TPU/Pallas roles)
+  workloads      -- Table 3 / Fig. 14 / Fig. 11 workload suites
+  hw             -- TPU v5e hardware constants
+"""
+from repro.core.dataflows import ALL_DATAFLOWS, Dataflow, GemmShape, map_gemm
+from repro.core.runtime_model import (
+    ArrayShape,
+    best_dataflow,
+    fill_latency_axon,
+    fill_latency_sa,
+    runtime_scaleout,
+    runtime_scaleup,
+    runtime_table2,
+    speedup,
+)
+
+__all__ = [
+    "ALL_DATAFLOWS",
+    "ArrayShape",
+    "Dataflow",
+    "GemmShape",
+    "best_dataflow",
+    "fill_latency_axon",
+    "fill_latency_sa",
+    "map_gemm",
+    "runtime_scaleout",
+    "runtime_scaleup",
+    "runtime_table2",
+    "speedup",
+]

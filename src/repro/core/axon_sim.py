@@ -1,0 +1,231 @@
+"""Cycle-level functional simulator for conventional and Axon orchestrations.
+
+This validates the paper's core claim *functionally*: the Axon in-array data
+orchestration (diagonal feed + bi-directional propagation, Fig. 3/4) computes
+bit-exact GeMM results while filling the array in ``max(R, C) - 1`` cycles
+instead of ``R + C - 2``.
+
+The simulator models per-PE registers explicitly and advances them one cycle
+at a time -- it is deliberately *not* index arithmetic, so that the register
+movement rules themselves are what is under test.  Output-stationary dataflow
+is simulated (the paper's hardware implementation is OS, §5.1); WS/IS runtimes
+are covered by the analytical model (``runtime_model``) which the simulator
+cross-checks for OS.
+
+Also included: the on-chip im2col feeder (Fig. 3b) -- each feeder PE takes its
+operand either from the SRAM buffer (1 of every ``n`` cycles) or from the
+adjacent feeder PE via the 2-to-1 MUX (the other ``n - 1`` cycles), which is
+what eliminates the im2col memory traffic.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+
+@dataclasses.dataclass
+class SimResult:
+    out: np.ndarray            # (M, N) result of the simulated tile(s)
+    compute_cycles: int        # cycles until the last MAC fired
+    total_cycles: int          # compute + readout (R)
+    fill_cycles: int           # cycle at which the farthest PE first fired
+
+
+def _stream(vec: np.ndarray, t: int, skew: int) -> float:
+    """Value delivered by an operand stream at cycle ``t`` after ``skew`` zeros."""
+    k = t - skew
+    if 0 <= k < vec.shape[0]:
+        return float(vec[k])
+    return 0.0
+
+
+def simulate_os(A: np.ndarray, B: np.ndarray, *, orchestration: str) -> SimResult:
+    """Simulate one full-size OS tile: array shape (R, C) = (M, N).
+
+    ``orchestration``: "sa" (left/top edge feed, uni-directional propagation)
+    or "axon" (principal-diagonal feed, bi-directional propagation).
+    """
+    if orchestration not in ("sa", "axon"):
+        raise ValueError(orchestration)
+    M, K = A.shape
+    K2, N = B.shape
+    assert K == K2, (A.shape, B.shape)
+    R, C = M, N  # full-size mapping
+
+    acc = np.zeros((R, C), dtype=np.float64)
+    a_reg = np.zeros((R, C))
+    b_reg = np.zeros((R, C))
+    a_valid = np.zeros((R, C), dtype=bool)
+    b_valid = np.zeros((R, C), dtype=bool)
+
+    horizon = 2 * (R + C) + K + 4  # safe upper bound; loop exits early
+    mac_count = np.zeros((R, C), dtype=np.int64)
+    last_mac_cycle = -1
+    fill_cycle = -1
+    # Farthest PE w.r.t. the feeders: bottom-right for SA; for Axon the
+    # farthest is the corner maximizing |i - j| (bottom-left / top-right).
+    if orchestration == "sa":
+        far = (R - 1, C - 1)
+    else:
+        far = (R - 1, 0) if R >= C else (0, C - 1)
+
+    diag = min(R, C)
+    for t in range(horizon):
+        new_a = np.zeros_like(a_reg)
+        new_b = np.zeros_like(b_reg)
+        new_av = np.zeros_like(a_valid)
+        new_bv = np.zeros_like(b_valid)
+        for i in range(R):
+            for j in range(C):
+                if orchestration == "sa":
+                    # A enters at the left edge with row skew i, flows right.
+                    if j == 0:
+                        new_a[i, j] = _stream(A[i], t, skew=i)
+                        new_av[i, j] = 0 <= t - i < K
+                    else:
+                        new_a[i, j] = a_reg[i, j - 1]
+                        new_av[i, j] = a_valid[i, j - 1]
+                    # B enters at the top edge with column skew j, flows down.
+                    if i == 0:
+                        new_b[i, j] = _stream(B[:, j], t, skew=j)
+                        new_bv[i, j] = 0 <= t - j < K
+                    else:
+                        new_b[i, j] = b_reg[i - 1, j]
+                        new_bv[i, j] = b_valid[i - 1, j]
+                else:  # axon
+                    # --- A: row i's stream enters at diagonal PE (i, i) and
+                    # propagates bi-directionally along the row.  Rows with no
+                    # diagonal PE (i >= C, tall arrays) are fed at the
+                    # rightmost PE with zero padding (Fig. 5, mirrored).
+                    if i < diag and j == i:
+                        new_a[i, j] = _stream(A[i], t, skew=0)
+                        new_av[i, j] = 0 <= t < K
+                    elif i >= C and j == C - 1:
+                        pad = i - (C - 1)
+                        new_a[i, j] = _stream(A[i], t, skew=pad)
+                        new_av[i, j] = 0 <= t - pad < K
+                    elif j > i:
+                        new_a[i, j] = a_reg[i, j - 1]
+                        new_av[i, j] = a_valid[i, j - 1]
+                    else:
+                        new_a[i, j] = a_reg[i, j + 1]
+                        new_av[i, j] = a_valid[i, j + 1]
+                    # --- B: column j's stream enters at diagonal PE (j, j) and
+                    # propagates bi-directionally along the column.  Columns
+                    # with no diagonal PE (j >= R, wide arrays) are fed at the
+                    # bottom PE with zero padding (Fig. 5).
+                    if j < diag and i == j:
+                        new_b[i, j] = _stream(B[:, j], t, skew=0)
+                        new_bv[i, j] = 0 <= t < K
+                    elif j >= R and i == R - 1:
+                        pad = j - (R - 1)
+                        new_b[i, j] = _stream(B[:, j], t, skew=pad)
+                        new_bv[i, j] = 0 <= t - pad < K
+                    elif i > j:
+                        new_b[i, j] = b_reg[i - 1, j]
+                        new_bv[i, j] = b_valid[i - 1, j]
+                    else:
+                        new_b[i, j] = b_reg[i + 1, j]
+                        new_bv[i, j] = b_valid[i + 1, j]
+        a_reg, b_reg, a_valid, b_valid = new_a, new_b, new_av, new_bv
+
+        fire = a_valid & b_valid
+        if fire.any():
+            acc[fire] += a_reg[fire] * b_reg[fire]
+            mac_count[fire] += 1
+            last_mac_cycle = t
+            if fill_cycle < 0 and fire[far]:
+                fill_cycle = t
+        if (mac_count == K).all():
+            break
+
+    compute_cycles = last_mac_cycle + 1
+    return SimResult(
+        out=acc,
+        compute_cycles=compute_cycles,
+        total_cycles=compute_cycles + R,  # drain/readout
+        fill_cycles=fill_cycle,
+    )
+
+
+def full_tile_cycles(R: int, C: int, K: int, orchestration: str) -> int:
+    """Closed-form total cycles of one full OS tile (fill + K + readout)."""
+    if orchestration == "sa":
+        return (R + C - 2) + K + R
+    return (max(R, C) - 1) + K + R
+
+
+def simulate_os_tiled(
+    A: np.ndarray, B: np.ndarray, R: int, C: int, *, orchestration: str
+) -> SimResult:
+    """Scale-up simulation: tile (M, N) onto an (R, C) array, serially.
+
+    Edge tiles still occupy a full array pass (paper Eq. 2 uses ceil factors),
+    so cycle accounting always charges the full-tile cost.
+    """
+    M, K = A.shape
+    _, N = B.shape
+    out = np.zeros((M, N))
+    total = 0
+    compute = 0
+    for i0 in range(0, M, R):
+        for j0 in range(0, N, C):
+            a = A[i0 : i0 + R]
+            b = B[:, j0 : j0 + C]
+            res = simulate_os(a, b, orchestration=orchestration)
+            out[i0 : i0 + R, j0 : j0 + C] = res.out
+            total += full_tile_cycles(R, C, K, orchestration)
+            compute += res.compute_cycles
+    return SimResult(out=out, compute_cycles=compute, total_cycles=total, fill_cycles=-1)
+
+
+# ---------------------------------------------------------------------------
+# On-chip im2col feeder (Fig. 3b / §3.2)
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class Im2colFeedResult:
+    windows: np.ndarray   # (group, n*n) streamed conv windows, im2col order
+    sram_reads: int       # elements fetched from the SRAM buffer
+    mux_reads: int        # elements taken from the adjacent feeder PE
+
+
+def simulate_im2col_feeders(
+    ifmap: np.ndarray, n: int, *, group: int, row0: int = 0, col0: int = 0
+) -> Im2colFeedResult:
+    """Simulate the MUX-based feeders for ``group`` consecutive conv windows.
+
+    ``group`` stride-1 conv windows of one OFMAP row map to ``group`` feeder
+    PEs.  Each flattened window streams over ``n * n`` cycles, *rightmost
+    element first* (paper Fig. 7d).  Feeder ``w > 0`` reads SRAM only on
+    cycles ``t % n == 0`` (MUX control 0) and otherwise latches feeder
+    ``w - 1``'s previous-cycle value (MUX control 1) -- the §3.2 schedule.
+    Feeder 0 always reads SRAM.
+
+    Returns the streamed windows re-ordered to standard im2col layout so the
+    caller can verify them against a reference im2col, plus read counters.
+    """
+    assert ifmap.ndim == 2
+    streams = np.zeros((group, n * n))
+    sram_reads = 0
+    mux_reads = 0
+
+    def stream_elem(w: int, t: int) -> float:
+        # Stream order: reversed row-major flattening of the window.
+        flat = ifmap[row0 : row0 + n, col0 + w : col0 + w + n].reshape(-1)
+        return float(flat[n * n - 1 - t])
+
+    for t in range(n * n):
+        for w in range(group):
+            if w == 0 or t % n == 0:
+                streams[w, t] = stream_elem(w, t)   # SRAM fetch
+                sram_reads += 1
+            else:
+                streams[w, t] = streams[w - 1, t - 1]  # 2-to-1 MUX, neighbor
+                mux_reads += 1
+
+    # Undo the reversed stream order -> standard im2col rows.
+    windows = streams[:, ::-1]
+    return Im2colFeedResult(windows=windows, sram_reads=sram_reads, mux_reads=mux_reads)

@@ -1,0 +1,55 @@
+"""Approximate analytical model of CMSA (Xu et al., TACO 2021) for Fig. 13.
+
+CMSA augments a conventional systolic array with an *additional datapath* so
+one operand can stream from both opposing edges (the "multi-directional"
+modes).  Data still enters at the array edges -- not at the diagonal -- so the
+fill latency improves in one dimension only:
+
+    fill_cmsa = R/2 + C - 2        (vs  R + C - 2  conventional,
+                                    vs  max(R, C) - 1  Axon)
+
+For a square array this sits exactly between the conventional SA and Axon,
+which is the qualitative relationship Fig. 13 reports (Axon's utilization-rate
+improvement exceeds CMSA's by ~27 % on average at 128x128).  We document this
+as an approximation of the published design (DESIGN.md §7): we do not model
+CMSA's per-mode control or its tile-packing for sub-array workloads.
+"""
+from __future__ import annotations
+
+import math
+
+from repro.core.dataflows import Dataflow, GemmShape, map_gemm
+from repro.core.runtime_model import ArrayShape, _n_tiles
+
+
+def fill_latency_cmsa(array: ArrayShape) -> int:
+    return math.ceil(array.R / 2) + array.C - 2
+
+
+def runtime_cmsa(
+    shape: GemmShape,
+    array: ArrayShape,
+    dataflow: Dataflow = Dataflow.OS,
+    *,
+    overlap_readout: bool = False,
+) -> int:
+    st = map_gemm(shape, dataflow)
+    per_tile = fill_latency_cmsa(array) + st.T + (0 if overlap_readout else array.R)
+    total = per_tile * _n_tiles(st.S_R, st.S_C, array)
+    if overlap_readout:
+        total += array.R
+    return total
+
+
+def utilization_cmsa(shape: GemmShape, array: ArrayShape,
+                     dataflow: Dataflow = Dataflow.OS) -> float:
+    return shape.macs / (array.pes * runtime_cmsa(shape, array, dataflow))
+
+
+def utilization_improvement_cmsa(shape: GemmShape, array: ArrayShape,
+                                 dataflow: Dataflow = Dataflow.OS) -> float:
+    from repro.core.utilization import utilization
+
+    base = utilization(shape, array, dataflow, axon=False)
+    ur = utilization_cmsa(shape, array, dataflow)
+    return (ur - base) / base

@@ -1,0 +1,42 @@
+"""Hardware constants used by the mapper and the roofline analysis.
+
+TPU v5e per chip (the framework's execution target):
+  * 197 TFLOP/s bf16 peak (MXU)
+  * 819 GB/s HBM bandwidth
+  * ~50 GB/s/link ICI (per-direction, per-link)
+  * ~16 GiB HBM, ~128 MiB VMEM budget per core is conservative; we tile for
+    a 16 MiB working-set budget per kernel invocation.
+
+The MXU is itself a 128x128 systolic array -- the natural "array shape" for
+the paper's runtime model when reasoning about TPU GeMM mapping.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+
+@dataclasses.dataclass(frozen=True)
+class ChipSpec:
+    name: str
+    peak_flops: float          # FLOP/s at the compute dtype
+    hbm_bw: float              # bytes/s
+    ici_bw_per_link: float     # bytes/s per link
+    ici_links: int             # usable links per chip (2-D torus: 4)
+    hbm_bytes: float
+    vmem_bytes: float
+    mxu_shape: tuple[int, int]
+
+
+TPU_V5E = ChipSpec(
+    name="tpu_v5e",
+    peak_flops=197e12,
+    hbm_bw=819e9,
+    ici_bw_per_link=50e9,
+    ici_links=4,
+    hbm_bytes=16 * 1024**3,
+    vmem_bytes=128 * 1024**2,
+    mxu_shape=(128, 128),
+)
+
+# Working-set budget a single pallas_call block set should stay under.
+VMEM_TILE_BUDGET = 16 * 1024**2

@@ -1,0 +1,125 @@
+"""Convolution lowering (im2col) and the memory-traffic model (Fig. 7 / 11).
+
+Terminology follows the paper: a conv layer with IFMAP ``(H, W, C_in)``,
+FILTER ``(n, n, C_in, C_out)``, stride ``s`` and padding ``p`` produces OFMAP
+``(H_out, W_out, C_out)`` and lowers to the GeMM
+
+    M = C_out,  K = n * n * C_in,  N = H_out * W_out            (Table 3)
+
+Software im2col streams every element of every conv window from memory:
+``N * K`` operand elements, even though consecutive stride-1 windows share
+``n * (n - 1)`` of their ``n * n`` elements.  Axon's MUX chain reuses the
+shared elements directly from the adjacent feeder PE, so only ``n * s``
+fresh elements per window are fetched (the new columns), with the first
+window of each feeder group paying the full ``n * n``.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+
+from repro.core.dataflows import GemmShape
+
+
+@dataclasses.dataclass(frozen=True)
+class ConvShape:
+    """A 2-D convolution layer."""
+
+    H: int
+    W: int
+    C_in: int
+    C_out: int
+    n: int              # square filter size
+    stride: int = 1
+    padding: int = 0
+    name: str = ""
+
+    @property
+    def H_out(self) -> int:
+        return (self.H + 2 * self.padding - self.n) // self.stride + 1
+
+    @property
+    def W_out(self) -> int:
+        return (self.W + 2 * self.padding - self.n) // self.stride + 1
+
+    @property
+    def windows(self) -> int:
+        return self.H_out * self.W_out
+
+    @property
+    def macs(self) -> int:
+        return self.windows * self.n * self.n * self.C_in * self.C_out
+
+
+def lower_to_gemm(conv: ConvShape) -> GemmShape:
+    """im2col lowering: conv -> GeMM per the paper's Table 3 convention."""
+    return GemmShape(M=conv.C_out, K=conv.n * conv.n * conv.C_in, N=conv.windows)
+
+
+def shared_elements(n: int) -> int:
+    """Elements shared between consecutive stride-1 conv windows: n*(n-1)."""
+    return n * (n - 1)
+
+
+@dataclasses.dataclass(frozen=True)
+class TrafficReport:
+    sw_im2col_elems: int    # operand elements streamed by software im2col
+    axon_elems: int         # operand elements fetched with the MUX feeders
+    filter_elems: int
+    ofmap_elems: int
+    reduction: float        # 1 - axon/sw (ifmap operand traffic only)
+
+
+def im2col_traffic(conv: ConvShape, *, feeder_group: int = 16) -> TrafficReport:
+    """Memory traffic of the lowered operand stream (Fig. 11 model).
+
+    ``feeder_group``: how many consecutive windows share a MUX chain (the
+    array dimension along which windows are mapped; 16 for the paper's
+    16x16 implementation).  The first window of each group fetches all
+    ``n*n*C_in`` elements; subsequent windows fetch ``n*min(s, n)*C_in``.
+    """
+    n, s, C = conv.n, conv.stride, conv.C_in
+    sw = conv.windows * n * n * C
+
+    fresh_follow = n * min(s, n) * C if s < n else n * n * C
+    per_row = 0
+    w_out = conv.W_out
+    groups = math.ceil(w_out / feeder_group)
+    # windows in a row are chained group by group
+    full_groups, rem = divmod(w_out, feeder_group)
+    sizes = [feeder_group] * full_groups + ([rem] if rem else [])
+    assert len(sizes) == groups
+    for g in sizes:
+        per_row += n * n * C + (g - 1) * fresh_follow
+    axon = conv.H_out * per_row
+
+    return TrafficReport(
+        sw_im2col_elems=sw,
+        axon_elems=axon,
+        filter_elems=conv.n * conv.n * conv.C_in * conv.C_out,
+        ofmap_elems=conv.windows * conv.C_out,
+        reduction=1.0 - axon / sw,
+    )
+
+
+def model_traffic(
+    convs: list[ConvShape],
+    *,
+    bytes_per_elem: int = 2,
+    feeder_group: int = 16,
+    include_filter_ofmap: bool = False,
+) -> tuple[float, float]:
+    """Total (sw, axon) traffic in bytes over a conv layer list.
+
+    The paper's Fig. 11 / §5.2.1 reductions count the lowered *operand
+    stream* (the part im2col repeats); filters and OFMAP writes are identical
+    under both schemes and excluded by default.
+    """
+    sw = 0
+    ax = 0
+    for c in convs:
+        t = im2col_traffic(c, feeder_group=feeder_group)
+        extra = (t.filter_elems + t.ofmap_elems) if include_filter_ofmap else 0
+        sw += (t.sw_im2col_elems + extra) * bytes_per_elem
+        ax += (t.axon_elems + extra) * bytes_per_elem
+    return float(sw), float(ax)

@@ -1,0 +1,156 @@
+"""The Axon mapper: the paper's runtime model promoted to a framework feature.
+
+Two roles:
+
+1. **ASIC mapping** (faithful reproduction): given a GeMM and an array shape,
+   pick the dataflow (OS/WS/IS) and scale-up/out partitioning minimizing the
+   analytical runtime -- with or without the Axon orchestration.
+
+2. **TPU mapping** (hardware adaptation): given a GeMM and the TPU's VMEM /
+   MXU constraints, pick Pallas block shapes ``(bm, bk, bn)`` and the grid
+   loop order.  The paper's insight transfers as follows:
+
+   * the *fill latency* term maps to the pipeline prologue of the blocked
+     kernel -- the number of HBM->VMEM block DMAs that must complete before
+     the MXU can start.  Axon's diagonal feed halves it in the array; on TPU
+     we minimize it by double-buffered prefetch and by choosing the loop
+     order whose *stationary* operand is the largest (fewest re-fetches).
+   * OS/WS/IS map to which operand block stays VMEM-resident across the
+     innermost grid dimension:  OS = accumulator resident (K innermost),
+     WS = B-block resident (M innermost), IS = A-block resident (N innermost).
+
+   The selection minimizes modeled HBM traffic, which on a 197 TF / 819 GB/s
+   chip is the binding constraint for everything but large square GeMMs.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+
+from repro.core import hw
+from repro.core.dataflows import ALL_DATAFLOWS, Dataflow, GemmShape
+from repro.core.runtime_model import ArrayShape, runtime_scaleup
+
+
+# ---------------------------------------------------------------------------
+# Role 1: ASIC mapping (paper-faithful)
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class AsicMapping:
+    dataflow: Dataflow
+    cycles: int
+    axon: bool
+    array: ArrayShape
+
+
+def select_asic_mapping(shape: GemmShape, array: ArrayShape, *, axon: bool) -> AsicMapping:
+    best: AsicMapping | None = None
+    for df in ALL_DATAFLOWS:
+        t = runtime_scaleup(shape, array, df, axon=axon)
+        if best is None or t < best.cycles:
+            best = AsicMapping(dataflow=df, cycles=t, axon=axon, array=array)
+    assert best is not None
+    return best
+
+
+# ---------------------------------------------------------------------------
+# Role 2: TPU / Pallas mapping
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class TpuBlocking:
+    bm: int
+    bk: int
+    bn: int
+    loop_order: Dataflow       # which operand is stationary (see module doc)
+    hbm_traffic_bytes: int     # modeled operand traffic for this blocking
+    vmem_bytes: int            # resident working set
+
+
+def _round_block(dim: int, target: int, multiple: int) -> int:
+    """Largest multiple of ``multiple`` <= min(dim_padded, target)."""
+    b = min(dim, target)
+    b = max(multiple, (b // multiple) * multiple)
+    return b
+
+
+def modeled_traffic(shape: GemmShape, bm: int, bk: int, bn: int,
+                    loop_order: Dataflow, bytes_per_elem: int = 2) -> int:
+    """HBM operand traffic of a blocked GeMM under a given loop order.
+
+    grid = (Mt, Nt, Kt) tiles.  The stationary operand is read once; the
+    streaming operands are re-read once per tile of the outer dims:
+
+      OS (K innermost):  A read Nt times, B read Mt times, C written once.
+      WS (M innermost):  B read once,    A read Nt times, C written Kt times
+                         (partial sums re-materialized unless Kt == 1).
+      IS (N innermost):  A read once,    B read Mt times, C written Kt times.
+    """
+    Mt = math.ceil(shape.M / bm)
+    Nt = math.ceil(shape.N / bn)
+    Kt = math.ceil(shape.K / bk)
+    a = shape.M * shape.K * bytes_per_elem
+    b = shape.K * shape.N * bytes_per_elem
+    c = shape.M * shape.N * bytes_per_elem
+    if loop_order is Dataflow.OS:
+        return a * Nt + b * Mt + c
+    if loop_order is Dataflow.WS:
+        return b + a * Nt + c * max(Kt, 1)
+    if loop_order is Dataflow.IS:
+        return a + b * Mt + c * max(Kt, 1)
+    raise ValueError(loop_order)
+
+
+def select_tpu_blocking(
+    shape: GemmShape,
+    *,
+    bytes_per_elem: int = 2,
+    vmem_budget: int = hw.VMEM_TILE_BUDGET,
+    chip: hw.ChipSpec = hw.TPU_V5E,
+) -> TpuBlocking:
+    """Pick (bm, bk, bn) + loop order minimizing modeled HBM traffic.
+
+    Blocks are multiples of the MXU tile (128) where the dim allows; the
+    fp32 accumulator (bm x bn x 4B) plus both operand blocks (double
+    buffered) must fit the VMEM budget.
+    """
+    lane = chip.mxu_shape[0]
+    candidates = []
+    for bm in (128, 256, 512):
+        for bn in (128, 256, 512):
+            for bk in (128, 256, 512, 1024, 2048):
+                bm_ = _round_block(shape.M, bm, min(lane, _pow2_floor(shape.M)))
+                bn_ = _round_block(shape.N, bn, min(lane, _pow2_floor(shape.N)))
+                bk_ = _round_block(shape.K, bk, min(lane, _pow2_floor(shape.K)))
+                acc = bm_ * bn_ * 4
+                operands = 2 * (bm_ * bk_ + bk_ * bn_) * bytes_per_elem  # 2x: dbl buffer
+                vmem = acc + operands
+                if vmem > vmem_budget:
+                    continue
+                for order in ALL_DATAFLOWS:
+                    traffic = modeled_traffic(shape, bm_, bk_, bn_, order,
+                                              bytes_per_elem)
+                    candidates.append(
+                        TpuBlocking(bm=bm_, bk=bk_, bn=bn_, loop_order=order,
+                                    hbm_traffic_bytes=traffic, vmem_bytes=vmem)
+                    )
+    if not candidates:
+        # degenerate small problem: single block
+        bm_, bk_, bn_ = shape.M, shape.K, shape.N
+        return TpuBlocking(bm=bm_, bk=bk_, bn=bn_, loop_order=Dataflow.OS,
+                           hbm_traffic_bytes=modeled_traffic(
+                               shape, bm_, bk_, bn_, Dataflow.OS, bytes_per_elem),
+                           vmem_bytes=0)
+    # prefer lowest traffic; tie-break towards larger blocks (fewer grid steps)
+    candidates.sort(key=lambda c: (c.hbm_traffic_bytes, -(c.bm * c.bn * c.bk)))
+    return candidates[0]
+
+
+def _pow2_floor(x: int) -> int:
+    p = 1
+    while p * 2 <= x:
+        p *= 2
+    return min(p, 128) if p >= 1 else 1

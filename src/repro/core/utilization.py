@@ -1,0 +1,35 @@
+"""PE utilization-rate model (paper §5.2.2, Fig. 13).
+
+Utilization rate (UR) = useful MAC-cycles / (PEs x total runtime cycles).
+The useful work for a GeMM is exactly ``M * K * N`` MACs regardless of the
+orchestration, so UR differences come entirely from the runtime denominator
+(fill latency, skew, tiling slack).
+"""
+from __future__ import annotations
+
+from repro.core.dataflows import Dataflow, GemmShape
+from repro.core.runtime_model import ArrayShape, runtime_scaleup
+
+
+def utilization(
+    shape: GemmShape,
+    array: ArrayShape,
+    dataflow: Dataflow = Dataflow.OS,
+    *,
+    axon: bool,
+) -> float:
+    cycles = runtime_scaleup(shape, array, dataflow, axon=axon)
+    return shape.macs / (array.pes * cycles)
+
+
+def utilization_improvement(
+    shape: GemmShape,
+    array: ArrayShape,
+    dataflow: Dataflow = Dataflow.OS,
+    *,
+    axon: bool,
+) -> float:
+    """UR improvement over the conventional SA (what Fig. 13 plots)."""
+    base = utilization(shape, array, dataflow, axon=False)
+    ur = utilization(shape, array, dataflow, axon=axon)
+    return (ur - base) / base

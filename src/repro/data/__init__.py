@@ -1,0 +1,4 @@
+"""Data pipeline."""
+from repro.data.pipeline import SyntheticLMDataset
+
+__all__ = ["SyntheticLMDataset"]

@@ -1,0 +1,135 @@
+"""Blocked GeMM Pallas kernel with OS / WS / IS loop orders.
+
+The paper's dataflow taxonomy (§2.1, §4) maps onto a blocked TPU GeMM as
+*which operand stays VMEM-resident across the innermost grid dimension*:
+
+  OS: grid (M, N, K), K innermost -- the fp32 accumulator block is resident
+      (output stationary); A and B blocks stream.
+  WS: grid (N, K, M), M innermost -- the B (weight) block is resident; the
+      output block is revisited across K (partial sums spill to HBM), which
+      is exactly the WS partial-sum-movement cost the paper describes.
+  IS: grid (M, K, N), N innermost -- the A (input) block is resident.
+
+Axon's *fill-latency* insight maps to the pipeline prologue: Pallas
+double-buffers block DMAs, so compute starts after one block fetch -- the
+software analogue of feeding on the principal diagonal instead of walking
+operands across the array.  The mapper (``repro.core.mapper``) picks the
+loop order + block shape by modeled HBM traffic.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.core.dataflows import Dataflow
+
+
+def _os_kernel(a_ref, b_ref, o_ref, acc_ref, *, nk: int):
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    acc_ref[...] += jnp.dot(
+        a_ref[...], b_ref[...], preferred_element_type=jnp.float32
+    )
+
+    @pl.when(k == nk - 1)
+    def _store():
+        o_ref[...] = acc_ref[...].astype(o_ref.dtype)
+
+
+def _streaming_kernel(a_ref, b_ref, o_ref, *, k_axis: int):
+    """WS/IS body: accumulate partial sums directly in the (revisited) output."""
+    k = pl.program_id(k_axis)
+
+    @pl.when(k == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += jnp.dot(
+        a_ref[...], b_ref[...], preferred_element_type=jnp.float32
+    ).astype(o_ref.dtype)
+
+
+def _pad_to(x: jax.Array, multiples: tuple[int, ...]) -> jax.Array:
+    pads = [(0, (-d) % m) for d, m in zip(x.shape, multiples)]
+    if any(p[1] for p in pads):
+        return jnp.pad(x, pads)
+    return x
+
+
+def axon_gemm(
+    a: jax.Array,
+    b: jax.Array,
+    *,
+    block: tuple[int, int, int] = (128, 128, 128),
+    order: Dataflow = Dataflow.OS,
+    out_dtype: jnp.dtype | None = None,
+    interpret: bool = False,
+) -> jax.Array:
+    """``a (M, K) @ b (K, N)`` with the requested loop order."""
+    M, K = a.shape
+    K2, N = b.shape
+    assert K == K2, (a.shape, b.shape)
+    bm, bk, bn = block
+    bm, bk, bn = min(bm, M), min(bk, K), min(bn, N)
+    out_dtype = out_dtype or a.dtype
+
+    a_p = _pad_to(a, (bm, bk))
+    b_p = _pad_to(b, (bk, bn))
+    Mp, Kp = a_p.shape
+    _, Np = b_p.shape
+    nm, nk, nn = Mp // bm, Kp // bk, Np // bn
+
+    if order is Dataflow.OS:
+        grid = (nm, nn, nk)
+        out = pl.pallas_call(
+            functools.partial(_os_kernel, nk=nk),
+            grid=grid,
+            in_specs=[
+                pl.BlockSpec((bm, bk), lambda i, j, l: (i, l)),
+                pl.BlockSpec((bk, bn), lambda i, j, l: (l, j)),
+            ],
+            out_specs=pl.BlockSpec((bm, bn), lambda i, j, l: (i, j)),
+            out_shape=jax.ShapeDtypeStruct((Mp, Np), out_dtype),
+            scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
+            interpret=interpret,
+        )(a_p, b_p)
+    elif order is Dataflow.WS:
+        # B-block resident across the innermost M sweep; fp32 output
+        # accumulation in HBM (cast at the end by the caller-visible slice).
+        grid = (nn, nk, nm)
+        out = pl.pallas_call(
+            functools.partial(_streaming_kernel, k_axis=1),
+            grid=grid,
+            in_specs=[
+                pl.BlockSpec((bm, bk), lambda j, l, i: (i, l)),
+                pl.BlockSpec((bk, bn), lambda j, l, i: (l, j)),
+            ],
+            out_specs=pl.BlockSpec((bm, bn), lambda j, l, i: (i, j)),
+            out_shape=jax.ShapeDtypeStruct((Mp, Np), jnp.float32),
+            interpret=interpret,
+        )(a_p, b_p).astype(out_dtype)
+    elif order is Dataflow.IS:
+        grid = (nm, nk, nn)
+        out = pl.pallas_call(
+            functools.partial(_streaming_kernel, k_axis=1),
+            grid=grid,
+            in_specs=[
+                pl.BlockSpec((bm, bk), lambda i, l, j: (i, l)),
+                pl.BlockSpec((bk, bn), lambda i, l, j: (l, j)),
+            ],
+            out_specs=pl.BlockSpec((bm, bn), lambda i, l, j: (i, j)),
+            out_shape=jax.ShapeDtypeStruct((Mp, Np), jnp.float32),
+            interpret=interpret,
+        )(a_p, b_p).astype(out_dtype)
+    else:
+        raise ValueError(order)
+
+    return out[:M, :N]

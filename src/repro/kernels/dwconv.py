@@ -1,0 +1,86 @@
+"""Depthwise convolution Pallas kernel (VPU path).
+
+Depthwise conv is one of the paper's memory-bound showcases (Fig. 14): there
+is no C_in reduction, so arithmetic intensity is ~kh*kw MACs/element and the
+op lives on the HBM roofline.  The kernel keeps the whole row-tile resident
+in VMEM (same halo trick as ``im2col_conv``) and does the kh*kw
+multiply-accumulates on the VPU -- no MXU detour, no im2col expansion.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _dw_kernel(x_ref, halo_ref, w_ref, o_ref, *,
+               kh: int, kw: int, stride: int, th: int, w_out: int):
+    tile = jnp.concatenate([x_ref[0], halo_ref[0]], axis=0)  # (2*th*s, Wp, bc)
+    acc = jnp.zeros((th, w_out, tile.shape[2]), jnp.float32)
+    for dh in range(kh):
+        for dw in range(kw):
+            view = jax.lax.slice(
+                tile,
+                (dh, dw, 0),
+                (dh + stride * (th - 1) + 1, dw + stride * (w_out - 1) + 1,
+                 tile.shape[2]),
+                (stride, stride, 1),
+            )
+            acc += view.astype(jnp.float32) * w_ref[dh, dw][None, None, :]
+    o_ref[...] = acc[None].astype(o_ref.dtype)
+
+
+def dwconv(
+    x: jax.Array,            # (N, H, W, C)
+    w: jax.Array,            # (kh, kw, C)
+    *,
+    stride: int = 1,
+    padding: int = 0,
+    block_rows: int = 8,
+    block_c: int = 128,
+    out_dtype: jnp.dtype | None = None,
+    interpret: bool = False,
+) -> jax.Array:
+    N, H, W, C = x.shape
+    kh, kw, C2 = w.shape
+    assert C == C2
+    s = stride
+    H_out = (H + 2 * padding - kh) // s + 1
+    W_out = (W + 2 * padding - kw) // s + 1
+    out_dtype = out_dtype or x.dtype
+
+    th = min(block_rows, H_out)
+    while (th - 1) * s + kh > 2 * th * s:
+        th += 1
+    bc = min(block_c, C)
+
+    n_h = -(-H_out // th)
+    h_span = (n_h + 1) * th * s + kh
+    w_span = (W_out - 1) * s + kw
+    x_p = jnp.pad(
+        x,
+        ((0, 0),
+         (padding, max(0, h_span - (H + padding))),
+         (padding, max(0, w_span - (W + padding))),
+         (0, (-C) % bc)),
+    )
+    Wp = x_p.shape[2]
+    w_p = jnp.pad(w, ((0, 0), (0, 0), (0, (-C) % bc)))
+    n_c = w_p.shape[2] // bc
+
+    grid = (N, n_h, n_c)
+    out = pl.pallas_call(
+        functools.partial(_dw_kernel, kh=kh, kw=kw, stride=s, th=th, w_out=W_out),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, th * s, Wp, bc), lambda b, h, c: (b, h, 0, c)),
+            pl.BlockSpec((1, th * s, Wp, bc), lambda b, h, c: (b, h + 1, 0, c)),
+            pl.BlockSpec((kh, kw, bc), lambda b, h, c: (0, 0, c)),
+        ],
+        out_specs=pl.BlockSpec((1, th, W_out, bc), lambda b, h, c: (b, h, 0, c)),
+        out_shape=jax.ShapeDtypeStruct((N, n_h * th, W_out, n_c * bc), out_dtype),
+        interpret=interpret,
+    )(x_p, x_p, w_p)
+    return out[:, :H_out, :, :C]

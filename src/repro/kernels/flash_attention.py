@@ -1,0 +1,113 @@
+"""Flash-attention Pallas kernel (forward): online softmax, causal, GQA.
+
+Grid: (batch, q_heads, q_blocks, kv_blocks), kv innermost.  The query block
+and the fp32 (m, l, acc) statistics stay VMEM-resident across the kv sweep;
+K/V blocks stream.  GQA needs no materialized head repeat: the K/V BlockSpec
+index map folds ``q_head // rep`` so each query head reads its group's KV.
+
+This is the MXU counterpart of the model-level ``layers.flash_attention``
+(pure-jnp scan), which serves as its oracle in the tests.  Causal masking
+skips nothing structurally (masked blocks are computed) -- the exact-causal
+grid shaving is a documented follow-up; the model-level path already
+supports it.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+_NEG_INF = -1e30
+
+
+def _fa_kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
+               nk: int, bq: int, bkv: int, scale: float, causal: bool,
+               seq_len: int):
+    ki = pl.program_id(3)
+    qi = pl.program_id(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, _NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[0, 0]                                 # (bq, dh)
+    k = k_ref[0, 0]                                 # (bkv, dh)
+    s = jax.lax.dot_general(
+        q, k, (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32) * scale  # (bq, bkv)
+
+    q_idx = qi * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, bkv), 0)
+    k_idx = ki * bkv + jax.lax.broadcasted_iota(jnp.int32, (bq, bkv), 1)
+    mask = k_idx < seq_len
+    if causal:
+        mask = mask & (k_idx <= q_idx)
+    s = jnp.where(mask, s, _NEG_INF)
+
+    m_prev = m_ref[...]
+    m_new = jnp.maximum(m_prev, s.max(axis=1, keepdims=True))
+    p = jnp.exp(s - m_new)
+    corr = jnp.exp(m_prev - m_new)
+    l_ref[...] = l_ref[...] * corr + p.sum(axis=1, keepdims=True)
+    m_ref[...] = m_new
+    acc_ref[...] = acc_ref[...] * corr + jax.lax.dot_general(
+        p.astype(v_ref.dtype), v_ref[0, 0], (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)
+
+    @pl.when(ki == nk - 1)
+    def _store():
+        o_ref[0, 0] = (acc_ref[...] /
+                    jnp.maximum(l_ref[...], 1e-30)).astype(o_ref.dtype)
+
+
+def flash_attention_fwd(
+    q: jax.Array,          # (B, H, Sq, dh)
+    k: jax.Array,          # (B, KvH, Skv, dh)
+    v: jax.Array,          # (B, KvH, Skv, dh)
+    *,
+    causal: bool = True,
+    block_q: int = 128,
+    block_kv: int = 128,
+    interpret: bool = False,
+) -> jax.Array:
+    B, H, Sq, dh = q.shape
+    KvH, Skv = k.shape[1], k.shape[2]
+    rep = H // KvH
+    bq = min(block_q, Sq)
+    bkv = min(block_kv, Skv)
+    scale = dh ** -0.5
+
+    q_p = jnp.pad(q, ((0, 0), (0, 0), (0, (-Sq) % bq), (0, 0)))
+    k_p = jnp.pad(k, ((0, 0), (0, 0), (0, (-Skv) % bkv), (0, 0)))
+    v_p = jnp.pad(v, ((0, 0), (0, 0), (0, (-Skv) % bkv), (0, 0)))
+    nq = q_p.shape[2] // bq
+    nk = k_p.shape[2] // bkv
+
+    out = pl.pallas_call(
+        functools.partial(_fa_kernel, nk=nk, bq=bq, bkv=bkv, scale=scale,
+                          causal=causal, seq_len=Skv),
+        grid=(B, H, nq, nk),
+        in_specs=[
+            pl.BlockSpec((1, 1, bq, dh),
+                         lambda b, h, qi, ki: (b, h, qi, 0)),
+            # GQA: query head h reads KV group h // rep -- no repeat
+            pl.BlockSpec((1, 1, bkv, dh),
+                         lambda b, h, qi, ki, rep=rep: (b, h // rep, ki, 0)),
+            pl.BlockSpec((1, 1, bkv, dh),
+                         lambda b, h, qi, ki, rep=rep: (b, h // rep, ki, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, bq, dh),
+                               lambda b, h, qi, ki: (b, h, qi, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, H, nq * bq, dh), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq, 1), jnp.float32),     # running max
+            pltpu.VMEM((bq, 1), jnp.float32),     # running denominator
+            pltpu.VMEM((bq, dh), jnp.float32),    # output accumulator
+        ],
+        interpret=interpret,
+    )(q_p, k_p, v_p)
+    return out[:, :, :Sq]

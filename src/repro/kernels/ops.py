@@ -1,0 +1,85 @@
+"""Public jit'd wrappers around the Pallas kernels.
+
+On CPU (this container) kernels execute under ``interpret=True``; on TPU the
+same ``pallas_call`` lowers to Mosaic.  ``auto_gemm`` routes block shape and
+loop order through the Axon mapper (``repro.core.mapper``) -- the paper's
+runtime model acting as the framework's kernel auto-tuner.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.dataflows import Dataflow, GemmShape
+from repro.core.mapper import select_tpu_blocking
+from repro.kernels.axon_gemm import axon_gemm
+from repro.kernels.dwconv import dwconv
+from repro.kernels.gemv import gemv
+from repro.kernels.im2col_conv import im2col_conv
+from repro.kernels.zero_gate_gemm import block_mask, zero_gate_gemm
+
+
+def _interpret_default() -> bool:
+    return jax.default_backend() == "cpu"
+
+
+@functools.partial(jax.jit, static_argnames=("block", "order", "out_dtype", "interpret"))
+def gemm(a, b, *, block=(128, 128, 128), order=Dataflow.OS, out_dtype=None,
+         interpret=None):
+    interpret = _interpret_default() if interpret is None else interpret
+    return axon_gemm(a, b, block=block, order=order, out_dtype=out_dtype,
+                     interpret=interpret)
+
+
+def auto_gemm(a, b, *, out_dtype=None, interpret=None):
+    """GeMM with mapper-selected blocking + loop order (static per shape)."""
+    M, K = a.shape
+    _, N = b.shape
+    sel = select_tpu_blocking(GemmShape(M, K, N),
+                              bytes_per_elem=a.dtype.itemsize)
+    return gemm(a, b, block=(sel.bm, sel.bk, sel.bn), order=sel.loop_order,
+                out_dtype=out_dtype, interpret=interpret)
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "stride", "padding", "block_rows", "block_cout", "block_cin",
+    "out_dtype", "interpret"))
+def conv2d(x, w, *, stride=1, padding=0, block_rows=8, block_cout=128,
+           block_cin=512, out_dtype=None, interpret=None):
+    interpret = _interpret_default() if interpret is None else interpret
+    return im2col_conv(x, w, stride=stride, padding=padding,
+                       block_rows=block_rows, block_cout=block_cout,
+                       block_cin=block_cin, out_dtype=out_dtype,
+                       interpret=interpret)
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "stride", "padding", "block_rows", "block_c", "out_dtype", "interpret"))
+def depthwise_conv2d(x, w, *, stride=1, padding=0, block_rows=8, block_c=128,
+                     out_dtype=None, interpret=None):
+    interpret = _interpret_default() if interpret is None else interpret
+    return dwconv(x, w, stride=stride, padding=padding, block_rows=block_rows,
+                  block_c=block_c, out_dtype=out_dtype, interpret=interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("block_k", "block_n", "out_dtype",
+                                             "interpret"))
+def matvec(x, w, *, block_k=512, block_n=1024, out_dtype=None, interpret=None):
+    interpret = _interpret_default() if interpret is None else interpret
+    return gemv(x, w, block_k=block_k, block_n=block_n, out_dtype=out_dtype,
+                interpret=interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("block", "out_dtype", "interpret"))
+def sparse_gemm(a, b, *, block=(128, 128, 128), out_dtype=None, interpret=None):
+    interpret = _interpret_default() if interpret is None else interpret
+    return zero_gate_gemm(a, b, block=block, out_dtype=out_dtype,
+                          interpret=interpret)
+
+
+__all__ = [
+    "auto_gemm", "block_mask", "conv2d", "depthwise_conv2d", "gemm",
+    "matvec", "sparse_gemm",
+]

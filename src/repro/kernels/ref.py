@@ -1,0 +1,53 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose references)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def gemm_ref(a: jax.Array, b: jax.Array, out_dtype=None) -> jax.Array:
+    out_dtype = out_dtype or a.dtype
+    return jnp.dot(a.astype(jnp.float32), b.astype(jnp.float32)).astype(out_dtype)
+
+
+def gemv_ref(x: jax.Array, w: jax.Array, out_dtype=None) -> jax.Array:
+    out_dtype = out_dtype or x.dtype
+    return jnp.dot(x.astype(jnp.float32), w.astype(jnp.float32)).astype(out_dtype)
+
+
+def conv2d_ref(x: jax.Array, w: jax.Array, *, stride: int = 1,
+               padding: int = 0, out_dtype=None) -> jax.Array:
+    """NHWC x HWIO -> NHWC, fp32 accumulation."""
+    out_dtype = out_dtype or x.dtype
+    out = jax.lax.conv_general_dilated(
+        x.astype(jnp.float32),
+        w.astype(jnp.float32),
+        window_strides=(stride, stride),
+        padding=[(padding, padding), (padding, padding)],
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+    )
+    return out.astype(out_dtype)
+
+
+def dwconv_ref(x: jax.Array, w: jax.Array, *, stride: int = 1,
+               padding: int = 0, out_dtype=None) -> jax.Array:
+    """NHWC x (kh, kw, C) depthwise -> NHWC."""
+    out_dtype = out_dtype or x.dtype
+    C = x.shape[-1]
+    out = jax.lax.conv_general_dilated(
+        x.astype(jnp.float32),
+        w[:, :, None, :].astype(jnp.float32),   # (kh, kw, 1, C) HWIO w/ groups
+        window_strides=(stride, stride),
+        padding=[(padding, padding), (padding, padding)],
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+        feature_group_count=C,
+    )
+    return out.astype(out_dtype)
+
+
+def zero_gate_gemm_ref(a: jax.Array, b: jax.Array, bm: int, bk: int,
+                       out_dtype=None) -> jax.Array:
+    """Matmul with A's all-zero (bm, bk) blocks contributing nothing --
+    identical to a plain matmul (zero blocks contribute zero); exists so the
+    sparse kernel has an explicitly-stated semantic oracle."""
+    return gemm_ref(a, b, out_dtype)

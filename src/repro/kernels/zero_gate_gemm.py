@@ -1,0 +1,94 @@
+"""Block-sparse zero-gated GeMM: the TPU analogue of the paper's zero gating.
+
+The paper skips individual MACs when either operand is zero, saving *power*
+(5.3 % at 10 % sparsity, §5.2.1).  A TPU cannot clock-gate single MACs from
+software, so the idiomatic translation converts the power saving into a
+*time* saving at block granularity: a precomputed block-occupancy mask lets
+the kernel skip entire (bm, bk) x (bk, bn) MXU passes whose A-block is all
+zero (``@pl.when`` on a mask operand).  With structured sparsity (pruned
+experts, padded capacity buffers, masked attention rows) whole blocks are
+zero and the skip rate approaches the element sparsity.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels.axon_gemm import _pad_to
+
+
+def _zg_kernel(mask_ref, a_ref, b_ref, o_ref, acc_ref, *, nk: int):
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    @pl.when(mask_ref[0, 0] != 0)
+    def _mac():
+        acc_ref[...] += jnp.dot(
+            a_ref[...], b_ref[...], preferred_element_type=jnp.float32
+        )
+
+    @pl.when(k == nk - 1)
+    def _store():
+        o_ref[...] = acc_ref[...].astype(o_ref.dtype)
+
+
+def block_mask(a: jax.Array, bm: int, bk: int) -> jax.Array:
+    """(ceil(M/bm), ceil(K/bk)) int32 occupancy mask of A's blocks."""
+    a_p = _pad_to(a, (bm, bk))
+    Mp, Kp = a_p.shape
+    blocks = a_p.reshape(Mp // bm, bm, Kp // bk, bk)
+    return jnp.any(blocks != 0, axis=(1, 3)).astype(jnp.int32)
+
+
+def zero_gate_gemm(
+    a: jax.Array,
+    b: jax.Array,
+    *,
+    block: tuple[int, int, int] = (128, 128, 128),
+    mask: jax.Array | None = None,
+    out_dtype: jnp.dtype | None = None,
+    interpret: bool = False,
+) -> jax.Array:
+    M, K = a.shape
+    K2, N = b.shape
+    assert K == K2
+    bm, bk, bn = block
+    bm, bk, bn = min(bm, M), min(bk, K), min(bn, N)
+    out_dtype = out_dtype or a.dtype
+
+    a_p = _pad_to(a, (bm, bk))
+    b_p = _pad_to(b, (bk, bn))
+    if mask is None:
+        mask = block_mask(a, bm, bk)
+    Mp, Kp = a_p.shape
+    _, Np = b_p.shape
+    nm, nk, nn = Mp // bm, Kp // bk, Np // bn
+    assert mask.shape == (nm, nk), (mask.shape, (nm, nk))
+
+    out = pl.pallas_call(
+        functools.partial(_zg_kernel, nk=nk),
+        grid=(nm, nn, nk),
+        in_specs=[
+            pl.BlockSpec((1, 1), lambda i, j, l: (i, l)),
+            pl.BlockSpec((bm, bk), lambda i, j, l: (i, l)),
+            pl.BlockSpec((bk, bn), lambda i, j, l: (l, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, l: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((Mp, Np), out_dtype),
+        scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
+        interpret=interpret,
+    )(mask, a_p, b_p)
+    return out[:M, :N]
+
+
+def skip_fraction(mask: jax.Array) -> float:
+    """Fraction of MXU block passes gated off (the 'time' analogue of the
+    paper's power saving)."""
+    return float(1.0 - jnp.mean(mask.astype(jnp.float32)))

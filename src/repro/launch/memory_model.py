@@ -1,0 +1,91 @@
+"""Analytic per-device memory model for the dry-run table.
+
+XLA:CPU inserts fp32 copies of bf16 dot operands (no native bf16 matmul), so
+``memory_analysis()`` on this container systematically overstates what a TPU
+compile would allocate.  This module computes the TPU-expected per-device
+bytes from ground truth:
+
+  * state/cache bytes: EXACT -- summed over the real sharding tree
+    (every leaf's global size / its sharding's device coverage)
+  * activations: a coarse structural model of the remat scan (carry per
+    layer, one layer's recompute working set, loss-chunk logits)
+
+Reported next to the measured CPU numbers in EXPERIMENTS.md §Dry-run.
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import numpy as np
+
+
+def sharded_bytes(sds_tree) -> int:
+    """Exact per-device bytes of a tree of sharded ShapeDtypeStructs."""
+    total = 0
+    for leaf in jax.tree.leaves(sds_tree):
+        n = int(np.prod(leaf.shape)) if leaf.shape else 1
+        sh = getattr(leaf, "sharding", None)
+        if sh is not None and leaf.shape:
+            shard_shape = sh.shard_shape(leaf.shape)
+            n = int(np.prod(shard_shape))
+        total += n * leaf.dtype.itemsize
+    return total
+
+
+def activation_estimate(cfg, shape, mesh, microbatches: int) -> int:
+    """Coarse per-device activation bytes for one step."""
+    axes = dict(mesh.shape)
+    data = axes.get("data", 1) * axes.get("pod", 1)
+    model = axes.get("model", 1)
+    d = cfg.d_model
+
+    def div(x, m):
+        return x // m if m and x % m == 0 else x
+
+    if shape.kind == "train":
+        rows = max(1, shape.global_batch // microbatches // data)
+        S = shape.seq_len
+        tokens = rows * S
+        seqfac = model if (cfg.seq_shard and S % model == 0) else 1
+        carry = tokens * d * 2 // seqfac * cfg.n_layers          # remat carries
+        ff = max(cfg.d_ff, cfg.d_ff_expert * max(cfg.top_k, 1), 2 * cfg.d_inner)
+        trans = tokens * (div(ff, model) + d) * 4 * 3            # 1-layer bwd
+        loss = rows * min(cfg.loss_chunk, S) * div(cfg.vocab_pad, model) * 4 * 2
+        grads = 0  # counted with state
+        return carry + trans + loss + grads
+    if shape.kind == "prefill":
+        rows = max(1, shape.global_batch // data)
+        tokens = rows * shape.seq_len
+        seqfac = model if (cfg.seq_shard and shape.seq_len % model == 0) else 1
+        stream = tokens * d * 2 // seqfac * 2
+        ff = max(cfg.d_ff, cfg.d_ff_expert * max(cfg.top_k, 1), 2 * cfg.d_inner)
+        layer = tokens * div(ff, model) * 2
+        return stream + layer
+    # decode
+    rows = max(1, shape.global_batch // data)
+    logits = rows * div(cfg.vocab_pad, model) * 4
+    attn = rows * div(max(cfg.n_heads, 1), model) * shape.seq_len * 4
+    return (rows * d * 2 * cfg.n_layers // max(cfg.n_layers, 1)
+            + logits + attn * 2)
+
+
+def expected_device_bytes(cfg, shape, mesh, *, state_sds=None, cache_sds=None,
+                          params_sds=None, microbatches: int = 1) -> dict:
+    state = sharded_bytes(state_sds) if state_sds is not None else 0
+    params = sharded_bytes(params_sds) if params_sds is not None else 0
+    caches = sharded_bytes(cache_sds) if cache_sds is not None else 0
+    acts = activation_estimate(cfg, shape, mesh, microbatches)
+    # training: gradient accumulation buffer mirrors params (accum dtype ~2B
+    # for the bf16-opt archs, 4B otherwise) -- approximate with param bytes.
+    grad_buf = params if shape.kind == "train" and microbatches > 1 else 0
+    total = state + params + caches + acts + grad_buf
+    return {
+        "state_bytes": int(state),
+        "params_bytes": int(params),
+        "cache_bytes": int(caches),
+        "activation_est_bytes": int(acts),
+        "grad_buffer_bytes": int(grad_buf),
+        "expected_total_bytes": int(total),
+        "fits_16GiB_expected": bool(total < 16 * 1024**3),
+    }

@@ -1,0 +1,41 @@
+"""Serving launcher: batched greedy/temperature generation demo."""
+from __future__ import annotations
+
+import argparse
+
+import jax
+
+from repro.configs import ARCH_IDS, get_config
+from repro.models import transformer as T
+from repro.serve.engine import Request, ServeEngine
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=list(ARCH_IDS), default="yi-9b")
+    ap.add_argument("--reduced", action="store_true", default=True)
+    ap.add_argument("--requests", type=int, default=8)
+    ap.add_argument("--prompt-len", type=int, default=8)
+    ap.add_argument("--max-new", type=int, default=16)
+    ap.add_argument("--temperature", type=float, default=0.0)
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch, reduced=args.reduced)
+    params = T.init_params(jax.random.PRNGKey(0), cfg)
+    engine = ServeEngine(params, cfg, batch_slots=min(8, args.requests),
+                         max_len=args.prompt_len + args.max_new + 1,
+                         temperature=args.temperature)
+    key = jax.random.PRNGKey(1)
+    reqs = []
+    for i in range(args.requests):
+        key, sub = jax.random.split(key)
+        prompt = jax.random.randint(sub, (args.prompt_len,), 2, cfg.vocab)
+        reqs.append(Request(prompt=[int(t) for t in prompt],
+                            max_new_tokens=args.max_new))
+    outs = engine.generate(reqs)
+    for i, o in enumerate(outs):
+        print(f"req{i}: {o}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,1 @@
+"""Model substrate: layers, SSM blocks, MoE, and the block-spec transformer."""

@@ -1,0 +1,121 @@
+"""Multi-head Latent Attention (DeepSeek-V2/V3).
+
+Prefill: queries via a low-rank bottleneck (q_lora); keys/values via a shared
+compressed latent c_kv (kv_lora) plus a single shared RoPE key channel.
+Decode: the *absorbed* formulation -- w_kv_b folds into the query/output
+projections so attention runs directly against the compressed latent cache
+(B, S, kv_lora + rope) instead of expanded K/V.  The cache is ~14x smaller
+than GQA at these dims (576 vs 2 * 128 * 128 floats/token... per layer).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import (
+    Params,
+    _dense_init,
+    _NEG_INF,
+    apply_rope,
+    flash_attention,
+    init_rmsnorm,
+    rmsnorm,
+)
+from repro.parallel.sharding import constrain
+
+
+def init_mla(key, cfg, dtype=jnp.float32) -> Params:
+    d, h = cfg.d_model, cfg.n_heads
+    ql, kvl = cfg.q_lora, cfg.kv_lora
+    dn, dr, dv = cfg.nope_head, cfg.rope_head, cfg.v_head
+    ks = jax.random.split(key, 6)
+    return {
+        "q_a": _dense_init(ks[0], (d, ql), dtype),
+        "q_a_norm": init_rmsnorm(ql, dtype),
+        "q_b": _dense_init(ks[1], (ql, h * (dn + dr)), dtype),
+        "kv_a": _dense_init(ks[2], (d, kvl + dr), dtype),
+        "kv_a_norm": init_rmsnorm(kvl, dtype),
+        "kv_b": _dense_init(ks[3], (kvl, h * (dn + dv)), dtype),
+        "wo": _dense_init(ks[4], (h * dv, d), dtype),
+    }
+
+
+def _project_qkv_latent(p: Params, x: jax.Array, cfg, positions):
+    """Shared between prefill and decode: q (nope/rope), latent c, k_pe."""
+    B, S, _ = x.shape
+    h = cfg.n_heads
+    dn, dr = cfg.nope_head, cfg.rope_head
+
+    q = rmsnorm(p["q_a_norm"], jnp.einsum("bsd,dq->bsq", x, p["q_a"]))
+    q = jnp.einsum("bsq,qe->bse", q, p["q_b"]).reshape(B, S, h, dn + dr)
+    q = constrain(q, "batch", None, "model", None)
+    q_nope, q_pe = q[..., :dn], q[..., dn:]
+    q_pe = apply_rope(q_pe, positions, cfg.rope_theta)
+
+    ckv = jnp.einsum("bsd,de->bse", x, p["kv_a"])
+    c = rmsnorm(p["kv_a_norm"], ckv[..., : cfg.kv_lora])
+    k_pe = apply_rope(ckv[..., cfg.kv_lora:][:, :, None, :], positions,
+                      cfg.rope_theta)                      # (B, S, 1, dr)
+    return q_nope, q_pe, c, k_pe
+
+
+def mla_fwd(p: Params, x: jax.Array, cfg, *, positions,
+            exact_causal: bool = False,
+            cache: Params | None = None) -> tuple[jax.Array, Params | None]:
+    B, S, D = x.shape
+    h = cfg.n_heads
+    dn, dr, dv = cfg.nope_head, cfg.rope_head, cfg.v_head
+    kvl = cfg.kv_lora
+
+    q_nope, q_pe, c, k_pe = _project_qkv_latent(p, x, cfg, positions)
+
+    if cache is None:
+        kv = jnp.einsum("bsc,ce->bse", c, p["kv_b"]).reshape(B, S, h, dn + dv)
+        kv = constrain(kv, "batch", None, "model", None)
+        k_nope, v = kv[..., :dn], kv[..., dn:]
+        k = jnp.concatenate([k_nope, jnp.broadcast_to(k_pe, (B, S, h, dr))],
+                            axis=-1)
+        q = jnp.concatenate([q_nope, q_pe], axis=-1)
+        out = flash_attention(q, k, v, causal=True, exact_causal=exact_causal)
+        new_cache = None
+    else:
+        # absorbed decode against the compressed cache
+        pos = cache["len"]
+        c_cache = jax.lax.dynamic_update_slice(
+            cache["c"], c.astype(cache["c"].dtype), (0, pos, 0))
+        pe_cache = jax.lax.dynamic_update_slice(
+            cache["k_pe"], k_pe[:, :, 0].astype(cache["k_pe"].dtype),
+            (0, pos, 0))
+        w_kv = p["kv_b"].reshape(kvl, h, dn + dv)
+        w_k, w_v = w_kv[..., :dn], w_kv[..., dn:]
+        # fold k_nope projection into q:  (B,1,h,dn) x (kvl,h,dn) -> (B,1,h,kvl)
+        # all cache-sized contractions stay in the cache dtype with fp32
+        # accumulation -- no fp32 copies of the latent cache.
+        q_eff = jnp.einsum("bthn,chn->bthc", q_nope, w_k
+                           ).astype(c_cache.dtype)
+        scale = (dn + dr) ** -0.5
+        s = (jnp.einsum("bthc,bsc->bths", q_eff, c_cache,
+                        preferred_element_type=jnp.float32)
+             + jnp.einsum("bthr,bsr->bths", q_pe.astype(pe_cache.dtype),
+                          pe_cache, preferred_element_type=jnp.float32)) * scale
+        mask = jnp.arange(c_cache.shape[1]) <= pos
+        s = jnp.where(mask[None, None, None, :], s, _NEG_INF)
+        attn = jax.nn.softmax(s, axis=-1)
+        ctx = jnp.einsum("bths,bsc->bthc", attn.astype(c_cache.dtype),
+                         c_cache, preferred_element_type=jnp.float32)
+        out = jnp.einsum("bthc,chv->bthv", ctx.astype(w_v.dtype), w_v,
+                         preferred_element_type=jnp.float32)
+        out = out.astype(x.dtype)
+        new_cache = {"c": c_cache, "k_pe": pe_cache, "len": pos + 1}
+
+    out = out.reshape(B, S, h * dv)
+    out = jnp.einsum("bse,ed->bsd", out, p["wo"])
+    return constrain(out, "batch", None, None), new_cache
+
+
+def init_mla_cache(cfg, batch: int, max_len: int, dtype=jnp.bfloat16) -> Params:
+    return {
+        "c": jnp.zeros((batch, max_len, cfg.kv_lora), dtype),
+        "k_pe": jnp.zeros((batch, max_len, cfg.rope_head), dtype),
+        "len": jnp.zeros((), jnp.int32),
+    }

@@ -1,0 +1,338 @@
+"""State-space blocks: Mamba-1 (selective scan) and Mamba-2 (SSD, chunked).
+
+Mamba-1 (falcon-mamba): diagonal per-(channel, state) recurrence
+    h_t = exp(dt_t * A) h_{t-1} + dt_t B_t x_t ;  y_t = C_t . h_t + D x_t
+computed with an associative scan over the sequence.
+
+Mamba-2 (zamba2): scalar-per-head A with the SSD chunked algorithm --
+quadratic attention-like form inside chunks of length ``chunk``, linear
+state recurrence across chunks (lax.scan).  Matches a sequential-scan oracle
+in the tests.
+
+Both expose a one-token ``*_step`` for decoding with O(1) state:
+(conv_state, ssm_state).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import Params, _dense_init, init_rmsnorm, rmsnorm
+from repro.parallel.sharding import constrain
+
+_NEG_INF = -1e30
+
+
+# ---------------------------------------------------------------------------
+# shared: causal depthwise conv1d
+# ---------------------------------------------------------------------------
+
+
+def causal_conv1d(x: jax.Array, w: jax.Array, b: jax.Array) -> jax.Array:
+    """x: (B, L, C), w: (K, C), b: (C,) -- causal, per-channel."""
+    K = w.shape[0]
+    xp = jnp.pad(x, ((0, 0), (K - 1, 0), (0, 0)))
+    out = jnp.zeros_like(x, dtype=jnp.float32)
+    for i in range(K):
+        out = out + xp[:, i : i + x.shape[1]].astype(jnp.float32) * \
+            w[i].astype(jnp.float32)
+    return (out + b.astype(jnp.float32)).astype(x.dtype)
+
+
+def conv1d_step(x_t: jax.Array, conv_state: jax.Array, w: jax.Array,
+                b: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """x_t: (B, C); conv_state: (B, K-1, C) of previous inputs."""
+    window = jnp.concatenate([conv_state, x_t[:, None]], axis=1)  # (B, K, C)
+    out = jnp.einsum("bkc,kc->bc", window.astype(jnp.float32),
+                     w.astype(jnp.float32)) + b.astype(jnp.float32)
+    return out.astype(x_t.dtype), window[:, 1:]
+
+
+# ---------------------------------------------------------------------------
+# Mamba-1
+# ---------------------------------------------------------------------------
+
+
+def init_mamba1(key, cfg, dtype=jnp.float32) -> Params:
+    d, di, n = cfg.d_model, cfg.d_inner, cfg.ssm_state
+    dt_rank = cfg.dt_rank
+    ks = jax.random.split(key, 6)
+    return {
+        "in_proj": _dense_init(ks[0], (d, 2 * di), dtype),
+        "conv_w": _dense_init(ks[1], (cfg.conv_k, di), dtype, scale=0.5),
+        "conv_b": jnp.zeros((di,), dtype),
+        "x_proj": _dense_init(ks[2], (di, dt_rank + 2 * n), dtype),
+        "dt_proj": _dense_init(ks[3], (dt_rank, di), dtype, scale=dt_rank**-0.5),
+        "dt_bias": jnp.zeros((di,), dtype) + jnp.log(jnp.expm1(0.01)).astype(dtype),
+        "A_log": jnp.log(jnp.tile(jnp.arange(1, n + 1, dtype=jnp.float32),
+                                  (di, 1))).astype(jnp.float32),
+        "D": jnp.ones((di,), jnp.float32),
+        "out_proj": _dense_init(ks[4], (di, d), dtype),
+    }
+
+
+def _selective_scan(abar: jax.Array, bx: jax.Array) -> jax.Array:
+    """h_t = abar_t * h_{t-1} + bx_t via associative scan over axis 1."""
+
+    def combine(left, right):
+        a1, b1 = left
+        a2, b2 = right
+        return a1 * a2, a2 * b1 + b2
+
+    _, h = jax.lax.associative_scan(combine, (abar, bx), axis=1)
+    return h
+
+
+def mamba1_fwd(p: Params, x: jax.Array, cfg) -> jax.Array:
+    B, L, D = x.shape
+    di, n = cfg.d_inner, cfg.ssm_state
+    xz = jnp.einsum("bld,de->ble", x, p["in_proj"])
+    xz = constrain(xz, "batch", None, "model")
+    x_in, z = jnp.split(xz, 2, axis=-1)
+    x_c = jax.nn.silu(causal_conv1d(x_in, p["conv_w"], p["conv_b"])
+                      .astype(jnp.float32)).astype(x.dtype)
+
+    dbc = jnp.einsum("bld,de->ble", x_c, p["x_proj"])
+    dt, b_ssm, c_ssm = jnp.split(dbc, [cfg.dt_rank, cfg.dt_rank + n], axis=-1)
+    dt = jax.nn.softplus(
+        jnp.einsum("blr,rd->bld", dt, p["dt_proj"]).astype(jnp.float32)
+        + p["dt_bias"].astype(jnp.float32))               # (B, L, di)
+    A = -jnp.exp(p["A_log"])                               # (di, n)
+
+    abar = jnp.exp(dt[..., None] * A)                      # (B, L, di, n)
+    bx = (dt * x_c.astype(jnp.float32))[..., None] * \
+        b_ssm.astype(jnp.float32)[:, :, None, :]           # (B, L, di, n)
+    h = _selective_scan(abar, bx)                          # (B, L, di, n)
+    y = jnp.einsum("bldn,bln->bld", h, c_ssm.astype(jnp.float32))
+    y = y + p["D"] * x_c.astype(jnp.float32)
+    y = (y * jax.nn.silu(z.astype(jnp.float32))).astype(x.dtype)
+    return constrain(jnp.einsum("bld,de->ble", y, p["out_proj"]),
+                     "batch", None, None)
+
+
+def init_mamba1_cache(cfg, batch: int, dtype=jnp.float32) -> Params:
+    return {
+        "conv": jnp.zeros((batch, cfg.conv_k - 1, cfg.d_inner), dtype),
+        "ssm": jnp.zeros((batch, cfg.d_inner, cfg.ssm_state), jnp.float32),
+    }
+
+
+def mamba1_step(p: Params, x: jax.Array, cache: Params, cfg
+                ) -> tuple[jax.Array, Params]:
+    """x: (B, 1, D) single token."""
+    B = x.shape[0]
+    n = cfg.ssm_state
+    xz = jnp.einsum("bd,de->be", x[:, 0], p["in_proj"])
+    x_in, z = jnp.split(xz, 2, axis=-1)
+    x_c, conv_state = conv1d_step(x_in, cache["conv"], p["conv_w"], p["conv_b"])
+    x_c = jax.nn.silu(x_c.astype(jnp.float32)).astype(x.dtype)
+
+    dbc = jnp.einsum("bd,de->be", x_c, p["x_proj"])
+    dt, b_ssm, c_ssm = jnp.split(dbc, [cfg.dt_rank, cfg.dt_rank + n], axis=-1)
+    dt = jax.nn.softplus(
+        jnp.einsum("br,rd->bd", dt, p["dt_proj"]).astype(jnp.float32)
+        + p["dt_bias"].astype(jnp.float32))                # (B, di)
+    A = -jnp.exp(p["A_log"])
+    abar = jnp.exp(dt[..., None] * A)                      # (B, di, n)
+    bx = (dt * x_c.astype(jnp.float32))[..., None] * \
+        b_ssm.astype(jnp.float32)[:, None, :]
+    h = abar * cache["ssm"] + bx
+    y = jnp.einsum("bdn,bn->bd", h, c_ssm.astype(jnp.float32))
+    y = y + p["D"] * x_c.astype(jnp.float32)
+    y = (y * jax.nn.silu(z.astype(jnp.float32))).astype(x.dtype)
+    out = jnp.einsum("bd,de->be", y, p["out_proj"])[:, None]
+    return out, {"conv": conv_state, "ssm": h}
+
+
+# ---------------------------------------------------------------------------
+# Mamba-2 (SSD)
+# ---------------------------------------------------------------------------
+
+
+def init_mamba2(key, cfg, dtype=jnp.float32) -> Params:
+    """Projections are SPLIT per output stream (z, x, B, C, dt) instead of
+    one fused in_proj: the fused layout slices the TP-sharded feature dim at
+    non-shard-aligned boundaries, forcing a reshard every layer (measured:
+    the dominant all-gather source on the zamba2 train cell).  Splitting is
+    mathematically identical (depthwise conv is per-channel)."""
+    d, di, n = cfg.d_model, cfg.d_inner, cfg.ssm_state
+    nh = di // cfg.mamba_headdim
+    ks = jax.random.split(key, 8)
+    return {
+        "in_z": _dense_init(ks[0], (d, di), dtype),
+        "in_x": _dense_init(ks[1], (d, di), dtype),
+        "in_b": _dense_init(ks[2], (d, n), dtype),
+        "in_c": _dense_init(ks[3], (d, n), dtype),
+        "in_dt": _dense_init(ks[4], (d, nh), dtype),
+        "conv_x_w": _dense_init(ks[5], (cfg.conv_k, di), dtype, scale=0.5),
+        "conv_x_b": jnp.zeros((di,), dtype),
+        "conv_b_w": _dense_init(ks[6], (cfg.conv_k, n), dtype, scale=0.5),
+        "conv_b_b": jnp.zeros((n,), dtype),
+        "conv_c_w": _dense_init(ks[7], (cfg.conv_k, n), dtype, scale=0.5),
+        "conv_c_b": jnp.zeros((n,), dtype),
+        "dt_bias": jnp.zeros((nh,), jnp.float32),
+        "A_log": jnp.zeros((nh,), jnp.float32),            # A = -exp(0) = -1 init
+        "D": jnp.ones((nh,), jnp.float32),
+        "norm": init_rmsnorm(di, dtype),
+        "out_proj": _dense_init(ks[2], (di, d), dtype),
+    }
+
+
+def _segsum(a: jax.Array) -> jax.Array:
+    """a: (..., L) -> (..., L, L) with S[i, j] = sum_{j < k <= i} a_k (i >= j)."""
+    L = a.shape[-1]
+    cs = jnp.cumsum(a, axis=-1)
+    d = cs[..., :, None] - cs[..., None, :]
+    mask = jnp.tril(jnp.ones((L, L), bool), 0)
+    return jnp.where(mask, d, _NEG_INF)
+
+
+def ssd_chunked(x: jax.Array, dt: jax.Array, A: jax.Array, b: jax.Array,
+                c: jax.Array, *, chunk: int = 64,
+                init_state: jax.Array | None = None
+                ) -> tuple[jax.Array, jax.Array]:
+    """SSD with chunked computation.
+
+    x: (B, L, H, P); dt: (B, L, H); A: (H,); b, c: (B, L, N) (1 group).
+    Returns (y: (B, L, H, P), final_state: (B, H, P, N)).
+    """
+    B, L, H, P = x.shape
+    N = b.shape[-1]
+    pad = (-L) % chunk
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        b = jnp.pad(b, ((0, 0), (0, pad), (0, 0)))
+        c = jnp.pad(c, ((0, 0), (0, pad), (0, 0)))
+    nc = x.shape[1] // chunk
+    xc = x.reshape(B, nc, chunk, H, P)
+    dtc = dt.reshape(B, nc, chunk, H)
+    bc = b.reshape(B, nc, chunk, N)
+    cc = c.reshape(B, nc, chunk, N)
+
+    a = dtc * A                                            # (B, nc, l, H)
+    a_t = a.transpose(0, 1, 3, 2)                          # (B, nc, H, l)
+    a_cum = jnp.cumsum(a_t, axis=-1)                       # (B, nc, H, l)
+    xdt = xc * dtc[..., None]                              # (B, nc, l, H, P)
+
+    # intra-chunk (quadratic within chunk)
+    L_mat = jnp.exp(_segsum(a_t))                          # (B, nc, H, l, l)
+    y_diag = jnp.einsum("bcin,bcjn,bchij,bcjhp->bcihp", cc, bc, L_mat, xdt)
+
+    # per-chunk end states
+    decay_states = jnp.exp(a_cum[..., -1:] - a_cum)        # (B, nc, H, l)
+    states = jnp.einsum("bcjn,bchj,bcjhp->bchpn", bc, decay_states, xdt)
+
+    # inter-chunk recurrence
+    chunk_decay = jnp.exp(a_cum[..., -1])                  # (B, nc, H)
+    s0 = jnp.zeros((B, H, P, N), y_diag.dtype) if init_state is None \
+        else init_state
+
+    def chunk_step(state, inp):
+        st_c, dec_c = inp                                  # (B,H,P,N), (B,H)
+        prev = state
+        state = state * dec_c[..., None, None] + st_c
+        return state, prev
+
+    xs = (states.transpose(1, 0, 2, 3, 4), chunk_decay.transpose(1, 0, 2))
+    final, prevs = jax.lax.scan(chunk_step, s0, xs)
+    prev_states = prevs.transpose(1, 0, 2, 3, 4)           # (B, nc, H, P, N)
+
+    state_decay_out = jnp.exp(a_cum)                       # (B, nc, H, l)
+    y_off = jnp.einsum("bcin,bchpn,bchi->bcihp", cc, prev_states,
+                       state_decay_out)
+
+    y = (y_diag + y_off).reshape(B, nc * chunk, H, P)
+    return y[:, :L], final
+
+
+def mamba2_fwd(p: Params, x: jax.Array, cfg) -> jax.Array:
+    B, L, D = x.shape
+    di, n = cfg.d_inner, cfg.ssm_state
+    nh = di // cfg.mamba_headdim
+    ph = cfg.mamba_headdim
+
+    z = constrain(jnp.einsum("bld,de->ble", x, p["in_z"]),
+                  "batch", None, "model")
+    x_in = constrain(jnp.einsum("bld,de->ble", x, p["in_x"]),
+                     "batch", None, "model")
+    b_ssm = jnp.einsum("bld,de->ble", x, p["in_b"])        # (B, L, n): small
+    c_ssm = jnp.einsum("bld,de->ble", x, p["in_c"])
+    dt = jnp.einsum("bld,de->ble", x, p["in_dt"])
+
+    x_in = jax.nn.silu(causal_conv1d(x_in, p["conv_x_w"], p["conv_x_b"])
+                       .astype(jnp.float32)).astype(x.dtype)
+    x_in = constrain(x_in, "batch", None, "model")
+    b_ssm = jax.nn.silu(causal_conv1d(b_ssm, p["conv_b_w"], p["conv_b_b"])
+                        .astype(jnp.float32)).astype(x.dtype)
+    c_ssm = jax.nn.silu(causal_conv1d(c_ssm, p["conv_c_w"], p["conv_c_b"])
+                        .astype(jnp.float32)).astype(x.dtype)
+
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])  # (B, L, nh)
+    A = -jnp.exp(p["A_log"])                               # (nh,)
+
+    xh = x_in.reshape(B, L, nh, ph).astype(jnp.float32)
+    xh = constrain(xh, "batch", None, "model", None)
+    y, _ = ssd_chunked(xh, dt, A, b_ssm.astype(jnp.float32),
+                       c_ssm.astype(jnp.float32), chunk=cfg.ssd_chunk)
+    y = y + p["D"][None, None, :, None] * xh
+    y = constrain(y, "batch", None, "model", None)
+    y = y.reshape(B, L, di)
+    y = (y * jax.nn.silu(z.astype(jnp.float32)))
+    # gated RMSNorm: reduction over the sharded di axis -> XLA psums the
+    # scalar sums; the activation itself stays sharded
+    y = rmsnorm(p["norm"], y.astype(x.dtype))
+    y = constrain(y, "batch", None, "model")
+    return constrain(jnp.einsum("bld,de->ble", y, p["out_proj"]),
+                     "batch", None, None)
+
+
+def init_mamba2_cache(cfg, batch: int, dtype=jnp.float32) -> Params:
+    di, n = cfg.d_inner, cfg.ssm_state
+    nh = di // cfg.mamba_headdim
+    return {
+        "conv_x": jnp.zeros((batch, cfg.conv_k - 1, di), dtype),
+        "conv_b": jnp.zeros((batch, cfg.conv_k - 1, n), dtype),
+        "conv_c": jnp.zeros((batch, cfg.conv_k - 1, n), dtype),
+        "ssm": jnp.zeros((batch, nh, cfg.mamba_headdim, n), jnp.float32),
+    }
+
+
+def mamba2_step(p: Params, x: jax.Array, cache: Params, cfg
+                ) -> tuple[jax.Array, Params]:
+    B = x.shape[0]
+    di, n = cfg.d_inner, cfg.ssm_state
+    nh = di // cfg.mamba_headdim
+    ph = cfg.mamba_headdim
+
+    xt = x[:, 0]
+    z = jnp.einsum("bd,de->be", xt, p["in_z"])
+    x_in = jnp.einsum("bd,de->be", xt, p["in_x"])
+    b_ssm = jnp.einsum("bd,de->be", xt, p["in_b"])
+    c_ssm = jnp.einsum("bd,de->be", xt, p["in_c"])
+    dt = jnp.einsum("bd,de->be", xt, p["in_dt"])
+
+    x_in, conv_x = conv1d_step(x_in, cache["conv_x"], p["conv_x_w"],
+                               p["conv_x_b"])
+    b_ssm, conv_b = conv1d_step(b_ssm, cache["conv_b"], p["conv_b_w"],
+                                p["conv_b_b"])
+    c_ssm, conv_c = conv1d_step(c_ssm, cache["conv_c"], p["conv_c_w"],
+                                p["conv_c_b"])
+    x_in = jax.nn.silu(x_in.astype(jnp.float32)).astype(x.dtype)
+    b_ssm = jax.nn.silu(b_ssm.astype(jnp.float32)).astype(x.dtype)
+    c_ssm = jax.nn.silu(c_ssm.astype(jnp.float32)).astype(x.dtype)
+
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])  # (B, nh)
+    A = -jnp.exp(p["A_log"])
+    dec = jnp.exp(dt * A)                                  # (B, nh)
+    xh = x_in.reshape(B, nh, ph).astype(jnp.float32)
+    db = dt[..., None, None] * b_ssm.astype(jnp.float32)[:, None, None, :]
+    h = cache["ssm"] * dec[..., None, None] + db * xh[..., None]
+    y = jnp.einsum("bhpn,bn->bhp", h, c_ssm.astype(jnp.float32))
+    y = y + p["D"][None, :, None] * xh
+    y = y.reshape(B, di)
+    y = y * jax.nn.silu(z.astype(jnp.float32))
+    y = rmsnorm(p["norm"], y.astype(x.dtype)[:, None])[:, 0]
+    out = jnp.einsum("bd,de->be", y, p["out_proj"])[:, None]
+    return out, {"conv_x": conv_x, "conv_b": conv_b, "conv_c": conv_c,
+                 "ssm": h}

@@ -1,0 +1,379 @@
+"""Block-spec decoder LM covering all ten assigned architectures.
+
+A model is a sequence of *stages*; each stage is a homogeneous run of layers
+executed with ``lax.scan`` over stacked parameters (HLO size independent of
+depth) and rematerialized per layer.  Stage kinds:
+
+  dense   : [attn (gqa|mla, optional SWA)] + SwiGLU MLP
+  moe     : attn + MoE FFN (optional shared experts)
+  mamba1  : Mamba-1 mixer
+  mamba2  : Mamba-2 (SSD) mixer
+  hybrid  : mamba2 stack with a weight-shared attn+MLP block applied every
+            ``shared_attn_every`` layers (Zamba2 pattern)
+
+Frontends ('audio', 'vlm') consume precomputed embeddings per the brief.
+Decode uses per-layer caches stacked along the scan dimension.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, StageCfg
+from repro.models import layers as L
+from repro.models import mla as MLA
+from repro.models import moe as MOE
+from repro.models import ssm as SSM
+from repro.parallel.sharding import constrain
+
+Params = dict[str, Any]
+
+
+# ---------------------------------------------------------------------------
+# blocks
+# ---------------------------------------------------------------------------
+
+
+def init_block(key, cfg: ModelConfig, stage: StageCfg) -> Params:
+    dtype = cfg.pdtype
+    ks = jax.random.split(key, 4)
+    if stage.block in ("dense", "moe"):
+        p = {"ln1": L.init_rmsnorm(cfg.d_model, dtype),
+             "ln2": L.init_rmsnorm(cfg.d_model, dtype)}
+        p["attn"] = (MLA.init_mla(ks[0], cfg, dtype) if stage.attn == "mla"
+                     else L.init_attention(ks[0], cfg, dtype))
+        p["ffn"] = (MOE.init_moe(ks[1], cfg, dtype) if stage.block == "moe"
+                    else L.init_mlp(ks[1], cfg.d_model, cfg.d_ff, dtype))
+        return p
+    if stage.block == "mamba1":
+        return {"ln1": L.init_rmsnorm(cfg.d_model, dtype),
+                "mixer": SSM.init_mamba1(ks[0], cfg, dtype)}
+    if stage.block in ("mamba2", "hybrid"):
+        return {"ln1": L.init_rmsnorm(cfg.d_model, dtype),
+                "mixer": SSM.init_mamba2(ks[0], cfg, dtype)}
+    raise ValueError(stage.block)
+
+
+def init_shared_attn(key, cfg: ModelConfig) -> Params:
+    """Weight-shared attention+MLP block for hybrid stages (Zamba2)."""
+    dtype = cfg.pdtype
+    ks = jax.random.split(key, 2)
+    return {
+        "ln1": L.init_rmsnorm(cfg.d_model, dtype),
+        "attn": L.init_attention(ks[0], cfg, dtype),
+        "ln2": L.init_rmsnorm(cfg.d_model, dtype),
+        "mlp": L.init_mlp(ks[1], cfg.d_model, cfg.d_ff, dtype),
+    }
+
+
+def _attn_apply(p, h, cfg, stage, positions, cache, exact_causal):
+    if stage.attn == "mla":
+        return MLA.mla_fwd(p, h, cfg, positions=positions,
+                           exact_causal=exact_causal, cache=cache)
+    return L.attention_fwd(p, h, cfg, positions=positions,
+                           window=stage.window, cache=cache,
+                           exact_causal=exact_causal)
+
+
+def block_fwd(p: Params, x: jax.Array, cfg: ModelConfig, stage: StageCfg, *,
+              positions, cache=None, exact_causal=False):
+    """-> (x, new_cache, aux_loss)."""
+    aux = jnp.zeros((), jnp.float32)
+    if stage.block in ("dense", "moe"):
+        h = L.rmsnorm(p["ln1"], x)
+        a, new_attn_cache = _attn_apply(p["attn"], h, cfg, stage, positions,
+                                        None if cache is None else cache["attn"],
+                                        exact_causal)
+        x = x + a
+        h = L.rmsnorm(p["ln2"], x)
+        if stage.block == "moe":
+            f, aux = MOE.moe_fwd(p["ffn"], h, cfg)
+        else:
+            f = L.mlp_fwd(p["ffn"], h)
+        x = x + f
+        new_cache = None if cache is None else {"attn": new_attn_cache}
+        return x, new_cache, aux
+
+    # ssm blocks
+    h = L.rmsnorm(p["ln1"], x)
+    if stage.block == "mamba1":
+        if cache is None:
+            y = SSM.mamba1_fwd(p["mixer"], h, cfg)
+            new_cache = None
+        else:
+            y, new_ssm = SSM.mamba1_step(p["mixer"], h, cache["ssm"], cfg)
+            new_cache = {"ssm": new_ssm}
+    else:
+        if cache is None:
+            y = SSM.mamba2_fwd(p["mixer"], h, cfg)
+            new_cache = None
+        else:
+            y, new_ssm = SSM.mamba2_step(p["mixer"], h, cache["ssm"], cfg)
+            new_cache = {"ssm": new_ssm}
+    return x + y, new_cache, aux
+
+
+def shared_attn_fwd(p: Params, x, cfg, positions, cache, exact_causal):
+    h = L.rmsnorm(p["ln1"], x)
+    stage = StageCfg(n_layers=1, block="dense", attn="gqa")
+    a, new_cache = L.attention_fwd(p["attn"], h, cfg, positions=positions,
+                                   cache=cache, exact_causal=exact_causal)
+    x = x + a
+    x = x + L.mlp_fwd(p["mlp"], L.rmsnorm(p["ln2"], x))
+    return x, new_cache
+
+
+# ---------------------------------------------------------------------------
+# stages (scan over stacked layer params)
+# ---------------------------------------------------------------------------
+
+
+def init_stage(key, cfg: ModelConfig, stage: StageCfg) -> Params:
+    k_layers, k_shared = jax.random.split(key)
+    keys = jax.random.split(k_layers, stage.n_layers)
+    stacked = jax.vmap(lambda k: init_block(k, cfg, stage))(keys)
+    p = {"layers": stacked}
+    if stage.shared_attn_every:
+        p["shared"] = init_shared_attn(k_shared, cfg)
+    return p
+
+
+def stage_fwd(p: Params, x, cfg: ModelConfig, stage: StageCfg, *,
+              positions, exact_causal=False):
+    every = stage.shared_attn_every
+
+    def body(carry, inp):
+        h, aux = carry
+        layer_p, idx = inp
+        if every:
+            def with_attn(h):
+                out, _ = shared_attn_fwd(p["shared"], h, cfg, positions,
+                                         None, exact_causal)
+                return out
+            h = jax.lax.cond(idx % every == 0, with_attn, lambda h: h, h)
+        h, _, a = block_fwd(layer_p, h, cfg, stage, positions=positions,
+                            exact_causal=exact_causal)
+        if cfg.seq_shard:
+            # sequence-parallel residual carry: the activation saved by remat
+            # between layers is sharded over 'model' on the seq dim
+            # (divisibility-guarded; no-op without a mesh or at decode).
+            h = constrain(h, "batch", "model", None)
+        return (h, aux + a), None
+
+    if cfg.remat:
+        body = jax.checkpoint(body, prevent_cse=False)
+    (x, aux), _ = jax.lax.scan(
+        body, (x, jnp.zeros((), jnp.float32)),
+        (p["layers"], jnp.arange(stage.n_layers)))
+    return x, aux
+
+
+def stage_decode(p: Params, x, caches, cfg: ModelConfig, stage: StageCfg, *,
+                 positions):
+    every = stage.shared_attn_every
+    shared_cache = caches.get("shared") if every else None
+
+    def body(carry, inp):
+        h, sc = carry
+        layer_p, cache, idx = inp
+        if every:
+            def with_attn(args):
+                h, sc = args
+                out, new_sc = shared_attn_fwd(p["shared"], h, cfg, positions,
+                                              sc, False)
+                return out, new_sc
+            h, sc = jax.lax.cond(idx % every == 0, with_attn,
+                                 lambda a: a, (h, sc))
+        h, new_cache, _ = block_fwd(layer_p, h, cfg, stage,
+                                    positions=positions, cache=cache)
+        return (h, sc), new_cache
+
+    (x, shared_cache), new_layer_caches = jax.lax.scan(
+        body, (x, shared_cache),
+        (p["layers"], caches["layers"], jnp.arange(stage.n_layers)))
+    new_caches = {"layers": new_layer_caches}
+    if every:
+        new_caches["shared"] = shared_cache
+    return x, new_caches
+
+
+def init_stage_caches(cfg: ModelConfig, stage: StageCfg, batch: int,
+                      max_len: int, dtype=jnp.bfloat16) -> Params:
+    def one_layer():
+        if stage.block in ("dense", "moe"):
+            if stage.attn == "mla":
+                return {"attn": MLA.init_mla_cache(cfg, batch, max_len, dtype)}
+            return {"attn": L.init_attention_cache(
+                cfg, batch, max_len, window=stage.window, dtype=dtype)}
+        if stage.block == "mamba1":
+            return {"ssm": SSM.init_mamba1_cache(cfg, batch)}
+        return {"ssm": SSM.init_mamba2_cache(cfg, batch)}
+
+    single = one_layer()
+    stacked = jax.tree.map(
+        lambda a: jnp.zeros((stage.n_layers,) + a.shape, a.dtype), single)
+    caches = {"layers": stacked}
+    if stage.shared_attn_every:
+        caches["shared"] = L.init_attention_cache(cfg, batch, max_len,
+                                                  dtype=dtype)
+    return caches
+
+
+# ---------------------------------------------------------------------------
+# full model
+# ---------------------------------------------------------------------------
+
+
+def init_params(key, cfg: ModelConfig) -> Params:
+    dtype = cfg.pdtype
+    ks = jax.random.split(key, len(cfg.stages) + 4)
+    p: Params = {}
+    p["embed"] = (jax.random.normal(ks[0], (cfg.vocab_pad, cfg.d_model),
+                                    jnp.float32) * 0.02).astype(dtype)
+    p["stages"] = [init_stage(ks[1 + i], cfg, s)
+                   for i, s in enumerate(cfg.stages)]
+    p["final_norm"] = L.init_rmsnorm(cfg.d_model, dtype)
+    if not cfg.tie_embeddings:
+        p["lm_head"] = L._dense_init(ks[-2], (cfg.d_model, cfg.vocab_pad), dtype)
+    if cfg.mtp:
+        mtp_stage = StageCfg(n_layers=1, block="dense", attn="mla")
+        p["mtp"] = {
+            "proj": L._dense_init(ks[-1], (2 * cfg.d_model, cfg.d_model), dtype),
+            "block": init_block(ks[-1], cfg, mtp_stage),
+            "norm": L.init_rmsnorm(cfg.d_model, dtype),
+        }
+    return p
+
+
+def _embed_inputs(params: Params, batch: dict, cfg: ModelConfig) -> jax.Array:
+    if cfg.frontend == "audio":
+        x = batch["embeds"].astype(cfg.cdtype)       # stubbed EnCodec frontend
+    elif cfg.frontend == "vlm":
+        tok = jnp.take(params["embed"], batch["tokens"], axis=0)
+        x = jnp.concatenate(
+            [batch["pixel_embeds"].astype(tok.dtype), tok], axis=1)
+    else:
+        x = jnp.take(params["embed"], batch["tokens"], axis=0)
+    return constrain(x.astype(cfg.cdtype), "batch", None, None)
+
+
+def forward(params: Params, batch: dict, cfg: ModelConfig, *,
+            exact_causal: bool | None = None) -> tuple[jax.Array, jax.Array]:
+    """-> (hidden (B, S, D) post-final-norm, aux_loss)."""
+    exact_causal = cfg.exact_causal if exact_causal is None else exact_causal
+    x = _embed_inputs(params, batch, cfg)
+    positions = jnp.arange(x.shape[1])
+    aux = jnp.zeros((), jnp.float32)
+    for p_s, s in zip(params["stages"], cfg.stages):
+        x, a = stage_fwd(p_s, x, cfg, s, positions=positions,
+                         exact_causal=exact_causal)
+        aux = aux + a
+    return L.rmsnorm(params["final_norm"], x), aux
+
+
+def _lm_head(params: Params, cfg: ModelConfig) -> jax.Array:
+    if cfg.tie_embeddings:
+        return params["embed"].T
+    return params["lm_head"]
+
+
+def chunked_ce_loss(params: Params, hidden: jax.Array, labels: jax.Array,
+                    mask: jax.Array, cfg: ModelConfig) -> jax.Array:
+    """Cross-entropy over seq chunks (never materializes (B, S, V) at once)."""
+    B, S, D = hidden.shape
+    head = _lm_head(params, cfg)
+    chunk = min(cfg.loss_chunk, S)
+    pad = (-S) % chunk
+    if pad:
+        hidden = jnp.pad(hidden, ((0, 0), (0, pad), (0, 0)))
+        labels = jnp.pad(labels, ((0, 0), (0, pad)))
+        mask = jnp.pad(mask, ((0, 0), (0, pad)))
+    nc = hidden.shape[1] // chunk
+    pad_mask = jnp.arange(cfg.vocab_pad) >= cfg.vocab    # padded logit columns
+
+    @functools.partial(jax.checkpoint, prevent_cse=False)
+    def one(args):
+        h, y, m = args
+        logits = jnp.einsum("bsd,dv->bsv", h, head).astype(jnp.float32)
+        logits = constrain(logits, "batch", None, "model")
+        logits = jnp.where(pad_mask[None, None, :], -1e30, logits)
+        logz = jax.nn.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(logits, y[..., None], axis=-1)[..., 0]
+        return ((logz - gold) * m).sum()
+
+    hs = hidden.reshape(B, nc, chunk, D).transpose(1, 0, 2, 3)
+    ys = labels.reshape(B, nc, chunk).transpose(1, 0, 2)
+    ms = mask.reshape(B, nc, chunk).transpose(1, 0, 2)
+    totals = jax.lax.map(one, (hs, ys, ms))
+    return totals.sum() / jnp.maximum(mask.sum(), 1.0)
+
+
+def loss_fn(params: Params, batch: dict, cfg: ModelConfig
+            ) -> tuple[jax.Array, dict]:
+    hidden, aux = forward(params, batch, cfg)
+    labels = batch["labels"]
+    mask = batch.get("mask", jnp.ones_like(labels, jnp.float32))
+    if cfg.frontend == "vlm":
+        # hidden covers [patches; text] -- loss only on text positions
+        hidden = hidden[:, cfg.n_patches:]
+    ce = chunked_ce_loss(params, hidden, labels, mask, cfg)
+    metrics = {"ce": ce, "aux": aux}
+    loss = ce + cfg.aux_loss_weight * aux
+    if cfg.mtp:
+        # multi-token prediction: combine h_t with emb(token_{t+1}) and
+        # predict token_{t+2} through one extra block (DeepSeek-V3 §MTP).
+        emb_next = jnp.take(params["embed"], batch["tokens"][:, 1:], axis=0)
+        h_in = jnp.concatenate(
+            [hidden[:, :-1], emb_next.astype(hidden.dtype)], axis=-1)
+        h_mtp = jnp.einsum("bsd,de->bse", h_in, params["mtp"]["proj"])
+        positions = jnp.arange(h_mtp.shape[1])
+        h_mtp, _, _ = block_fwd(params["mtp"]["block"], h_mtp, cfg,
+                                StageCfg(1, "dense", attn="mla"),
+                                positions=positions)
+        h_mtp = L.rmsnorm(params["mtp"]["norm"], h_mtp)
+        mtp_ce = chunked_ce_loss(params, h_mtp, labels[:, 1:], mask[:, 1:], cfg)
+        metrics["mtp_ce"] = mtp_ce
+        loss = loss + cfg.mtp_weight * mtp_ce
+    metrics["loss"] = loss
+    return loss, metrics
+
+
+# ---------------------------------------------------------------------------
+# decode
+# ---------------------------------------------------------------------------
+
+
+def init_caches(cfg: ModelConfig, batch: int, max_len: int,
+                dtype=jnp.bfloat16) -> Params:
+    return {
+        "pos": jnp.zeros((), jnp.int32),
+        "stages": [init_stage_caches(cfg, s, batch, max_len, dtype)
+                   for s in cfg.stages],
+    }
+
+
+def decode_step(params: Params, caches: Params, batch: dict,
+                cfg: ModelConfig) -> tuple[jax.Array, Params]:
+    """One-token decode: batch['tokens'] (B, 1) (or 'embeds' (B, 1, D))."""
+    if cfg.frontend == "audio":
+        x = batch["embeds"].astype(cfg.cdtype)
+    else:
+        x = jnp.take(params["embed"], batch["tokens"], axis=0).astype(cfg.cdtype)
+    x = constrain(x, "batch", None, None)
+    positions = caches["pos"][None]
+    new_stage_caches = []
+    for p_s, s, c_s in zip(params["stages"], cfg.stages, caches["stages"]):
+        x, nc = stage_decode(p_s, x, c_s, cfg, s, positions=positions)
+        new_stage_caches.append(nc)
+    x = L.rmsnorm(params["final_norm"], x)
+    logits = jnp.einsum("bsd,dv->bsv", x, _lm_head(params, cfg))
+    logits = jnp.where(jnp.arange(cfg.vocab_pad) >= cfg.vocab, -1e30,
+                       logits.astype(jnp.float32))[..., : cfg.vocab_pad]
+    logits = logits[..., : cfg.vocab]
+    return logits, {
+        "pos": caches["pos"] + 1,
+        "stages": new_stage_caches,
+    }

@@ -1,0 +1,1 @@
+"""Optimizers: pure-JAX AdamW + schedules + gradient compression."""

@@ -1,0 +1,1 @@
+"""Distribution: mesh-aware sharding rules and helpers."""

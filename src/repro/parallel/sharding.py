@@ -1,0 +1,123 @@
+"""Mesh-aware sharding rules (FSDP + TP + SP + EP).
+
+Conventions (single pod mesh ``(data=16, model=16)``; multi-pod adds a
+leading ``pod`` axis that composes with ``data`` for FSDP/DP):
+
+  * batch dims of activations  -> (pod, data)
+  * attention heads / FFN hidden / vocab / experts -> model  (TP / EP)
+  * parameters are 2-D sharded: TP axis over ``model`` AND the other large
+    dim over ``fsdp`` = (pod, data), so per-chip bytes scale 1/(total chips)
+  * sequence-parallel: activations in norm/residual regions may shard the
+    sequence dim over ``model``
+
+Every rule is divisibility-guarded: an axis is only applied when the dim is
+divisible by the mesh axis size, so the same model code serves all ten
+architectures (24-head models simply leave heads replicated).
+"""
+from __future__ import annotations
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+
+def current_mesh() -> Mesh | None:
+    from jax._src import mesh as mesh_lib
+
+    m = mesh_lib.thread_resources.env.physical_mesh
+    if m is None or m.empty:
+        return None
+    return m
+
+
+def fsdp_axes(mesh: Mesh) -> tuple[str, ...]:
+    return tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+
+
+def batch_axes(mesh: Mesh) -> tuple[str, ...]:
+    return fsdp_axes(mesh)
+
+
+def _axis_size(mesh: Mesh, axes) -> int:
+    if axes is None:
+        return 1
+    if isinstance(axes, str):
+        axes = (axes,)
+    return int(np.prod([mesh.shape[a] for a in axes]))
+
+
+def resolve(mesh: Mesh, spec_entries: tuple, dims: tuple[int, ...]) -> P:
+    """Build a PartitionSpec, dropping axes whose dim is not divisible."""
+    out = []
+    for entry, dim in zip(spec_entries, dims):
+        if entry is None:
+            out.append(None)
+            continue
+        axes = tuple(a for a in ((entry,) if isinstance(entry, str) else entry)
+                     if a in mesh.axis_names)
+        if not axes or dim % _axis_size(mesh, axes) != 0:
+            out.append(None)
+        elif len(axes) == 1:
+            out.append(axes[0])
+        else:
+            out.append(axes)
+    return P(*out)
+
+
+def constrain(x: jax.Array, *entries) -> jax.Array:
+    """with_sharding_constraint with divisibility-guarded logical entries.
+
+    Entries use physical axis names ('data', 'model', 'pod') or the logical
+    markers 'fsdp' / 'batch' which expand to (pod, data).
+    """
+    mesh = current_mesh()
+    if mesh is None:
+        return x
+    expanded = []
+    for e in entries:
+        if e in ("fsdp", "batch"):
+            expanded.append(fsdp_axes(mesh))
+        else:
+            expanded.append(e)
+    spec = resolve(mesh, tuple(expanded), x.shape)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
+
+
+def named_sharding(mesh: Mesh, *entries, dims: tuple[int, ...]) -> NamedSharding:
+    expanded = []
+    for e in entries:
+        if e in ("fsdp", "batch"):
+            expanded.append(fsdp_axes(mesh))
+        else:
+            expanded.append(e)
+    return NamedSharding(mesh, resolve(mesh, tuple(expanded), dims))
+
+
+def constrain_priority(x: jax.Array, batch_dims: int, candidates: list[int],
+                       axis: str = "model") -> jax.Array:
+    """Constrain ``x`` sharding ``axis`` onto the FIRST candidate dim whose
+    size divides the axis (e.g. decode KV: prefer kv-heads, fall back to
+    d_head).  Leading ``batch_dims`` dims shard over (pod, data)."""
+    mesh = current_mesh()
+    if mesh is None or axis not in mesh.axis_names:
+        return x
+    size = mesh.shape[axis]
+    entries: list = [fsdp_axes(mesh) if i < batch_dims else None
+                     for i in range(x.ndim)]
+    for dim in candidates:
+        if x.shape[dim] % size == 0:
+            entries[dim] = axis
+            break
+    spec = resolve(mesh, tuple(entries), x.shape)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
+
+
+def param_sharding(params, mesh: Mesh, spec_fn) -> dict:
+    """Map a pytree of (path, array/ShapeDtypeStruct) -> NamedSharding via
+    ``spec_fn(path, shape) -> tuple of entries``."""
+    flat, treedef = jax.tree_util.tree_flatten_with_path(params)
+    shardings = []
+    for path, leaf in flat:
+        entries = spec_fn(path, leaf.shape)
+        shardings.append(named_sharding(mesh, *entries, dims=leaf.shape))
+    return jax.tree_util.tree_unflatten(treedef, shardings)

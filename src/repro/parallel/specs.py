@@ -1,0 +1,65 @@
+"""Parameter sharding specs: path/shape -> logical axis entries.
+
+Every matrix is 2-D sharded (TP over 'model', FSDP over ('pod','data')) with
+divisibility guards applied downstream by ``sharding.resolve``.  Stage params
+carry a leading stacked-layer dim which stays unsharded.
+"""
+from __future__ import annotations
+
+from repro.configs.base import ModelConfig
+
+# weights whose OUTPUT dim is the TP axis
+_TP_OUT = {"wq", "wk", "wv", "w_gate", "w_up", "in_proj", "x_proj",
+           "q_a", "q_b", "kv_a", "kv_b", "proj",
+           "in_z", "in_x", "in_b", "in_c", "in_dt"}
+# weights whose INPUT dim is the TP axis
+_TP_IN = {"wo", "w_down", "out_proj", "dt_proj"}
+_TP_BIAS = {"bq", "bk", "bv", "conv_b"}
+_CHANNEL_1D = {"conv_b", "dt_bias", "D"}
+
+
+def _leaf_name(path) -> str:
+    for k in reversed(path):
+        name = getattr(k, "key", None)
+        if isinstance(name, str):
+            return name
+    return ""
+
+
+def make_param_spec_fn(cfg: ModelConfig):
+    ep = cfg.expert_shard == "ep"
+
+    def spec_fn(path, shape):
+        name = _leaf_name(path)
+        nd = len(shape)
+        lead = max(0, nd - 2)
+        if name == "embed":
+            return ("model", "fsdp")
+        if name == "lm_head":
+            return ("fsdp", "model")
+        if name == "router":
+            return (None,) * lead + ("fsdp", None)
+        if nd >= 4 and name in ("w_gate", "w_up"):      # experts (L, E, D, F)
+            return ((None, "model", "fsdp", None) if ep
+                    else (None, None, "fsdp", "model"))
+        if nd >= 4 and name == "w_down":                # experts (L, E, F, D)
+            return ((None, "model", None, "fsdp") if ep
+                    else (None, None, "model", "fsdp"))
+        if name in _TP_OUT and nd >= 2:
+            return (None,) * lead + ("fsdp", "model")
+        if name in _TP_IN and nd >= 2:
+            return (None,) * lead + ("model", "fsdp")
+        if name.startswith("conv_") or name == "conv_w":   # (L, K, C)
+            return (None,) * (nd - 1) + ("model",)
+        if name == "A_log" and nd >= 2:                 # (L, di, n) mamba1
+            return (None,) * (nd - 2) + ("model", None)
+        if name in _TP_BIAS or name in _CHANNEL_1D:
+            return (None,) * (nd - 1) + ("model",)
+        return (None,) * nd                             # norms, scalars
+
+    return spec_fn
+
+
+def batch_spec_entries(ndim: int):
+    """Activations / data batches: leading dim over (pod, data)."""
+    return ("batch",) + (None,) * (ndim - 1)

@@ -1,0 +1,1 @@
+"""Serving: cached decode step + batched engine."""

@@ -1,0 +1,95 @@
+"""Batched serving engine.
+
+``make_serve_step`` builds the jitted one-token step (decode + sampling)
+used both by the engine and by the dry-run's ``serve_step`` lowering.  The
+engine runs wave-style batching: up to ``batch_slots`` requests decode in
+lock-step; prompts are fed through the same cached step (teacher-forcing),
+completed slots stop sampling via an active mask.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.models import transformer as T
+
+
+def make_serve_step(cfg: ModelConfig, *, temperature: float = 0.0):
+    """(params, caches, tokens (B,1), rng) -> (next_tokens (B,1), caches)."""
+
+    def serve_step(params, caches, batch, rng):
+        logits, caches = T.decode_step(params, caches, batch, cfg)
+        logits = logits[:, -1]
+        if temperature > 0:
+            nxt = jax.random.categorical(rng, logits / temperature, axis=-1)
+        else:
+            nxt = jnp.argmax(logits, axis=-1)
+        return nxt[:, None].astype(jnp.int32), caches
+
+    return serve_step
+
+
+@dataclasses.dataclass
+class Request:
+    prompt: list[int]
+    max_new_tokens: int = 32
+    eos_id: int = 1
+
+
+class ServeEngine:
+    """Wave-batched generation over fixed slots."""
+
+    def __init__(self, params, cfg: ModelConfig, *, batch_slots: int = 8,
+                 max_len: int = 512, temperature: float = 0.0, seed: int = 0):
+        self.params = params
+        self.cfg = cfg
+        self.batch_slots = batch_slots
+        self.max_len = max_len
+        self.rng = jax.random.PRNGKey(seed)
+        self._step = jax.jit(make_serve_step(cfg, temperature=temperature))
+
+    def generate(self, requests: list[Request]) -> list[list[int]]:
+        outputs: list[list[int]] = []
+        for i in range(0, len(requests), self.batch_slots):
+            outputs.extend(self._wave(requests[i: i + self.batch_slots]))
+        return outputs
+
+    def _wave(self, reqs: list[Request]) -> list[list[int]]:
+        B = len(reqs)
+        caches = T.init_caches(self.cfg, batch=B, max_len=self.max_len,
+                               dtype=jnp.float32)
+        prompt_len = max(len(r.prompt) for r in reqs)
+        # left-pad prompts with EOS so all slots stay aligned
+        prompts = np.full((B, prompt_len), reqs[0].eos_id, np.int32)
+        for b, r in enumerate(reqs):
+            prompts[b, prompt_len - len(r.prompt):] = r.prompt
+
+        tok = None
+        for t in range(prompt_len):
+            step_tok = jnp.asarray(prompts[:, t: t + 1])
+            self.rng, sub = jax.random.split(self.rng)
+            tok, caches = self._step(self.params, caches,
+                                     {"tokens": step_tok}, sub)
+
+        max_new = max(r.max_new_tokens for r in reqs)
+        done = np.zeros((B,), bool)
+        outs: list[list[int]] = [[] for _ in range(B)]
+        for _ in range(max_new):
+            self.rng, sub = jax.random.split(self.rng)
+            tok, caches = self._step(self.params, caches,
+                                     {"tokens": tok}, sub)
+            t_np = np.asarray(tok)[:, 0]
+            for b, r in enumerate(reqs):
+                if not done[b] and len(outs[b]) < r.max_new_tokens:
+                    outs[b].append(int(t_np[b]))
+                    if t_np[b] == r.eos_id:
+                        done[b] = True
+            if done.all():
+                break
+        return outs

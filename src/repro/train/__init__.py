@@ -1,0 +1,1 @@
+"""Training: jitted train step + fault-tolerant Trainer loop."""

@@ -1,0 +1,81 @@
+"""The jitted training step: loss -> grads (with optional gradient
+accumulation over microbatches) -> AdamW update.
+
+The step is a pure function of (state, batch); microbatching reshapes the
+leading batch dim to (n_micro, micro) and accumulates grads with a scan so
+activation memory scales with the microbatch, not the global batch.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import transformer as T
+from repro.optim import adamw
+from repro.optim.compression import compress_with_feedback, init_error
+from repro.parallel.sharding import constrain
+
+
+def init_train_state(key, cfg: ModelConfig, opt_cfg: adamw.OptConfig,
+                     *, grad_compression: bool = False) -> dict:
+    params = T.init_params(key, cfg)
+    state = {
+        "params": params,
+        "opt": adamw.init_opt_state(params, opt_cfg),
+        "step": jnp.zeros((), jnp.int32),
+    }
+    if grad_compression:
+        state["ef_error"] = init_error(params)
+    return state
+
+
+def make_train_step(cfg: ModelConfig, opt_cfg: adamw.OptConfig, *,
+                    microbatches: int = 1, grad_compression: bool = False,
+                    accum_dtype=jnp.float32):
+    def loss_of(params, mb):
+        return T.loss_fn(params, mb, cfg)
+
+    def train_step(state: dict, batch: dict) -> tuple[dict, dict]:
+        params = state["params"]
+        batch = jax.tree.map(
+            lambda x: constrain(x, "batch"), batch)
+
+        if microbatches == 1:
+            (loss, metrics), grads = jax.value_and_grad(
+                loss_of, has_aux=True)(params, batch)
+        else:
+            def to_micro(x):
+                return x.reshape((microbatches, x.shape[0] // microbatches)
+                                 + x.shape[1:])
+            mbatch = jax.tree.map(to_micro, batch)
+
+            def accum(carry, mb):
+                g_acc, l_acc = carry
+                (l, m), g = jax.value_and_grad(loss_of, has_aux=True)(params, mb)
+                g_acc = jax.tree.map(
+                    lambda a, b: (a + b.astype(accum_dtype)), g_acc, g)
+                return (g_acc, l_acc + l), m
+
+            g0 = jax.tree.map(lambda p: jnp.zeros(p.shape, accum_dtype), params)
+            (grads, loss), ms = jax.lax.scan(
+                accum, (g0, jnp.zeros((), jnp.float32)), mbatch)
+            grads = jax.tree.map(lambda g: g / microbatches, grads)
+            loss = loss / microbatches
+            metrics = jax.tree.map(lambda m: m[-1], ms)
+
+        new_state = dict(state)
+        if grad_compression:
+            grads, new_state["ef_error"] = compress_with_feedback(
+                grads, state["ef_error"])
+
+        params, opt, opt_metrics = adamw.adamw_update(
+            params, grads, state["opt"], opt_cfg)
+        new_state.update(params=params, opt=opt, step=state["step"] + 1)
+        metrics = dict(metrics, **opt_metrics, loss=loss)
+        return new_state, metrics
+
+    return train_step

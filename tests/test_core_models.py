@@ -1,0 +1,186 @@
+"""im2col traffic, energy, utilization/CMSA and mapper model tests."""
+import math
+
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core import hw
+from repro.core.cmsa_model import utilization_improvement_cmsa
+from repro.core.dataflows import Dataflow, GemmShape
+from repro.core.energy_model import (
+    PAPER_ASIC,
+    area_overhead_im2col,
+    dram_energy_joules,
+    power_overhead_im2col,
+    zero_gating_power_reduction,
+)
+from repro.core.im2col_model import ConvShape, im2col_traffic, lower_to_gemm, model_traffic
+from repro.core.mapper import modeled_traffic, select_asic_mapping, select_tpu_blocking
+from repro.core.runtime_model import ArrayShape
+from repro.core.utilization import utilization, utilization_improvement
+from repro.core.workloads import GEMV, TABLE3, resnet50_convs, yolov3_convs
+
+
+class TestIm2colModel:
+    def test_fig7_example(self):
+        # 3x3 filter on 6x6 ifmap -> 4x4 OFMAP, 16 windows.
+        conv = ConvShape(6, 6, 1, 1, 3)
+        assert conv.H_out == conv.W_out == 4
+        g = lower_to_gemm(conv)
+        assert (g.M, g.K, g.N) == (1, 9, 16)
+
+    def test_table3_conv_lowerings(self):
+        # Resnet50_0: 7x7x3 stride-2 conv -> K = 147 (Table 3).
+        conv = ConvShape(500, 500, 3, 64, 7, stride=2, padding=0)
+        g = lower_to_gemm(conv)
+        assert g.K == 147 and g.M == 64
+        # YOLO_v3_0: 3x3x32 -> K = 288.
+        conv = ConvShape(416, 416, 32, 64, 3, stride=2, padding=1)
+        assert lower_to_gemm(conv).K == 288
+
+    def test_reduction_approaches_two_thirds_for_3x3(self):
+        conv = ConvShape(224, 224, 64, 64, 3, stride=1, padding=1)
+        t = im2col_traffic(conv, feeder_group=224)
+        assert 0.6 < t.reduction < 0.67
+
+    def test_no_reduction_for_1x1(self):
+        conv = ConvShape(56, 56, 256, 64, 1)
+        t = im2col_traffic(conv)
+        assert t.reduction == 0.0
+        assert t.axon_elems == t.sw_im2col_elems
+
+    @given(n=st.sampled_from([1, 3, 5, 7]), s=st.sampled_from([1, 2]),
+           hw_=st.sampled_from([14, 28, 56]), c=st.sampled_from([3, 16, 64]))
+    @settings(max_examples=40)
+    def test_axon_never_more_traffic(self, n, s, hw_, c):
+        conv = ConvShape(hw_, hw_, c, 32, n, stride=s, padding=n // 2)
+        t = im2col_traffic(conv)
+        assert t.axon_elems <= t.sw_im2col_elems
+
+    def test_sram_read_model_matches_feeder_sim(self):
+        # analytical fresh-element count == the simulated feeder's SRAM reads
+        from repro.core.axon_sim import simulate_im2col_feeders
+        n, group = 3, 8
+        ifmap = np.arange(400.0).reshape(20, 20)
+        sim = simulate_im2col_feeders(ifmap, n, group=group)
+        conv = ConvShape(20, n + group - 1 + 2, 1, 1, n)  # one window row ~ group+2
+        # per-group model: n^2 + (g-1)*n
+        assert sim.sram_reads == n * n + (group - 1) * n
+
+    def test_resnet50_yolo_traffic_reductions(self):
+        # §5.2.1: ResNet50 conv traffic 261.2MB -> 153.5MB (41.2% reduction);
+        # YOLOv3 2540 -> 1117MB (56.0%).  Our layer lists are the public
+        # architectures (batch-1 @224/@416 fp16, so the absolute MB differ
+        # from the paper's unstated batch/precision), but the *reduction
+        # ratio* -- the actual claim -- must reproduce to within 10 points.
+        sw_r, ax_r = model_traffic(resnet50_convs(), bytes_per_elem=2)
+        sw_y, ax_y = model_traffic(yolov3_convs(), bytes_per_elem=2)
+        paper_r = 1 - 153.5 / 261.2   # 0.412
+        paper_y = 1 - 1117 / 2540     # 0.560
+        assert abs((1 - ax_r / sw_r) - paper_r) < 0.10, (sw_r, ax_r)
+        assert abs((1 - ax_y / sw_y) - paper_y) < 0.10, (sw_y, ax_y)
+
+    def test_fig11_over_60pct_for_sota_3x3(self):
+        # Fig. 11: >60% memory-access reduction for SOTA conv shapes.
+        for conv in [ConvShape(56, 56, 64, 64, 3, stride=1, padding=1),
+                     ConvShape(28, 28, 128, 128, 3, stride=1, padding=1),
+                     ConvShape(14, 14, 256, 256, 3, stride=1, padding=1)]:
+            t = im2col_traffic(conv, feeder_group=16)
+            assert t.reduction > 0.60, (conv, t.reduction)
+
+
+class TestEnergyModel:
+    def test_paper_overheads(self):
+        assert area_overhead_im2col() == pytest.approx(0.002, abs=5e-4)  # ~0.2%
+        # Paper text says "1.6%", but its own measurements (59.98 vs
+        # 59.88 mW) give 0.167% -- a 10x internal inconsistency in the paper;
+        # we encode the measured values (see EXPERIMENTS.md §Fidelity).
+        assert power_overhead_im2col() == pytest.approx(0.00167, abs=2e-4)
+
+    def test_zero_gating_calibration(self):
+        # 10% sparsity -> 5.3% total power reduction (§5.2.1)
+        assert zero_gating_power_reduction(0.10) == pytest.approx(0.053, abs=1e-3)
+
+    def test_dram_energy(self):
+        # 107.7 MB saved on ResNet50 -> ~12.9 mJ (paper prints "12MJ", a unit
+        # typo; the model reproduces the number in millijoules).
+        saved = (261.2 - 153.5) * 1e6
+        assert dram_energy_joules(saved) == pytest.approx(12.9e-3, rel=0.01)
+
+    def test_peak_throughput_consistent(self):
+        # 256 PEs * 550 MHz * 2 flops = 281.6 GFLOP/s ~ paper's 284 GFLOP/s.
+        derived = 256 * PAPER_ASIC.freq_hz * 2
+        assert derived == pytest.approx(PAPER_ASIC.peak_flops, rel=0.02)
+
+
+class TestUtilization:
+    def test_ur_bounded(self):
+        arr = ArrayShape(128, 128)
+        for shape in TABLE3.values():
+            for axon in (False, True):
+                u = utilization(shape, arr, Dataflow.OS, axon=axon)
+                assert 0 < u <= 1
+
+    def test_axon_ur_improvement_positive(self):
+        arr = ArrayShape(128, 128)
+        for shape in TABLE3.values():
+            assert utilization_improvement(shape, arr, axon=True) >= 0
+
+    def test_axon_beats_cmsa_on_average(self):
+        # Fig. 13: Axon outperforms CMSA by ~27% on average (128x128).
+        arr = ArrayShape(128, 128)
+        ax, cm = [], []
+        for shape in TABLE3.values():
+            ax.append(utilization_improvement(shape, arr, axon=True))
+            cm.append(utilization_improvement_cmsa(shape, arr))
+        assert sum(ax) / len(ax) > sum(cm) / len(cm)
+
+    def test_high_ur_workloads_have_small_improvement(self):
+        # §5.2.2: GPT3 matmul1/addmm/lmhead already run at ~91% UR on the SA,
+        # so the improvement is small for both Axon and CMSA.
+        arr = ArrayShape(128, 128)
+        for name in ("GPT3_1", "GPT3_2", "GPT3_3"):
+            base = utilization(TABLE3[name], arr, Dataflow.OS, axon=False)
+            assert base > 0.85, (name, base)
+            assert utilization_improvement(TABLE3[name], arr, axon=True) < 0.15
+
+
+class TestMapper:
+    def test_asic_mapping_picks_min(self):
+        from repro.core.runtime_model import runtime_scaleup
+        arr = ArrayShape(64, 64)
+        for shape in list(TABLE3.values())[:8]:
+            m = select_asic_mapping(shape, arr, axon=True)
+            want = min(runtime_scaleup(shape, arr, df, axon=True)
+                       for df in Dataflow)
+            assert m.cycles == want
+
+    def test_tpu_blocking_fits_vmem(self):
+        for shape in TABLE3.values():
+            b = select_tpu_blocking(shape)
+            assert b.vmem_bytes <= hw.VMEM_TILE_BUDGET
+
+    def test_tpu_blocking_traffic_sane(self):
+        # blocked traffic >= compulsory traffic (each operand once).
+        for shape in TABLE3.values():
+            b = select_tpu_blocking(shape)
+            compulsory = 2 * (shape.M * shape.K + shape.K * shape.N + shape.M * shape.N)
+            assert b.hbm_traffic_bytes >= compulsory
+
+    @given(m=st.integers(1, 4096), k=st.integers(1, 4096), n=st.integers(1, 4096))
+    @settings(max_examples=30, deadline=None)
+    def test_tpu_blocking_total_property(self, m, k, n):
+        shape = GemmShape(m, k, n)
+        b = select_tpu_blocking(shape)
+        assert b.bm >= 1 and b.bk >= 1 and b.bn >= 1
+        assert b.bm <= max(shape.M, 128) and b.bn <= max(shape.N, 128)
+
+    def test_gemv_prefers_reading_weights_once(self):
+        # GEMV: the weight matrix dominates traffic; the chosen loop order
+        # must not re-read it (Nt==1 or IS/WS order with single pass).
+        shape = GEMV["MV_1"]
+        b = select_tpu_blocking(shape)
+        w_bytes = shape.K * shape.N * 2
+        assert b.hbm_traffic_bytes < 1.5 * w_bytes + 2 * (shape.M * shape.K + shape.M * shape.N) * 2

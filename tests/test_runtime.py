@@ -1,0 +1,210 @@
+"""Optimizer, checkpointing, data pipeline, compression, trainer fault
+tolerance, and a tiny end-to-end training run (loss must fall)."""
+import dataclasses
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import CheckpointManager
+from repro.configs import get_config
+from repro.data import SyntheticLMDataset
+from repro.models import transformer as T
+from repro.optim import adamw
+from repro.optim.compression import (
+    compress_with_feedback,
+    compressed_psum,
+    dequantize_int8,
+    init_error,
+    quantize_int8,
+)
+from repro.train.train_step import init_train_state, make_train_step
+from repro.train.trainer import Trainer
+
+KEY = jax.random.PRNGKey(0)
+
+
+class TestAdamW:
+    def _ref_step(self, p, g, mu, nu, step, cfg):
+        lr = adamw.schedule(cfg, jnp.asarray(step))
+        mu = cfg.b1 * mu + (1 - cfg.b1) * g
+        nu = cfg.b2 * nu + (1 - cfg.b2) * g * g
+        mhat = mu / (1 - cfg.b1 ** step)
+        nhat = nu / (1 - cfg.b2 ** step)
+        return p - lr * (mhat / (np.sqrt(nhat) + cfg.eps) + cfg.weight_decay * p)
+
+    def test_matches_reference_math(self):
+        cfg = adamw.OptConfig(lr=1e-2, warmup_steps=0, total_steps=1000,
+                              clip_norm=1e9)
+        p = {"w": jnp.array([1.0, -2.0, 3.0])}
+        g = {"w": jnp.array([0.1, 0.2, -0.3])}
+        st = adamw.init_opt_state(p, cfg)
+        new_p, new_st, _ = adamw.adamw_update(p, g, st, cfg)
+        want = self._ref_step(np.array([1.0, -2.0, 3.0]),
+                              np.array([0.1, 0.2, -0.3]),
+                              np.zeros(3), np.zeros(3), 1, cfg)
+        np.testing.assert_allclose(new_p["w"], want, rtol=1e-5)
+
+    def test_no_decay_on_norm_scales(self):
+        cfg = adamw.OptConfig(lr=1e-2, warmup_steps=0, weight_decay=1.0,
+                              clip_norm=1e9)
+        p = {"scale": jnp.ones(4), "w": jnp.ones(4)}
+        g = {"scale": jnp.zeros(4), "w": jnp.zeros(4)}
+        st = adamw.init_opt_state(p, cfg)
+        new_p, _, _ = adamw.adamw_update(p, g, st, cfg)
+        np.testing.assert_allclose(new_p["scale"], p["scale"])   # untouched
+        assert float(jnp.abs(new_p["w"] - p["w"]).sum()) > 0      # decayed
+
+    def test_clip(self):
+        g = {"w": jnp.full((100,), 10.0)}
+        clipped, norm = adamw.clip_by_global_norm(g, 1.0)
+        assert float(norm) == pytest.approx(100.0)
+        assert float(adamw.global_norm(clipped)) == pytest.approx(1.0, rel=1e-5)
+
+    def test_schedule_shape(self):
+        cfg = adamw.OptConfig(lr=1.0, warmup_steps=10, total_steps=100,
+                              min_lr_ratio=0.1)
+        lrs = [float(adamw.schedule(cfg, jnp.asarray(s))) for s in range(101)]
+        assert lrs[0] == 0.0
+        assert lrs[10] == pytest.approx(1.0)
+        assert lrs[100] == pytest.approx(0.1, abs=1e-6)
+        assert all(a >= b - 1e-9 for a, b in zip(lrs[10:], lrs[11:]))
+
+
+class TestCompression:
+    def test_quantize_roundtrip_bound(self):
+        x = jax.random.normal(KEY, (1000,))
+        q, s = quantize_int8(x)
+        err = np.abs(np.asarray(dequantize_int8(q, s) - x))
+        assert err.max() <= float(s) / 2 + 1e-6
+
+    def test_error_feedback_accumulates_exactly(self):
+        # sum of compressed grads + final residual == sum of true grads
+        gs = [jax.random.normal(jax.random.PRNGKey(i), (64,)) * 10 ** (i % 3)
+              for i in range(8)]
+        err = init_error({"w": gs[0]})
+        total_comp = jnp.zeros(64)
+        for g in gs:
+            comp, err = compress_with_feedback({"w": g}, err)
+            total_comp = total_comp + comp["w"]
+        total_true = sum(gs)
+        np.testing.assert_allclose(total_comp + err["w"], total_true,
+                                   rtol=1e-4, atol=1e-4)
+
+    def test_compressed_psum_single_axis(self):
+        # axis size 1 under shard_map: identity up to quantization error
+        mesh = jax.make_mesh((1,), ("pod",))
+        x = jax.random.normal(KEY, (128,))
+        f = jax.shard_map(lambda v: compressed_psum(v, "pod"), mesh=mesh,
+                          in_specs=jax.sharding.PartitionSpec(),
+                          out_specs=jax.sharding.PartitionSpec())
+        out = f(x)
+        np.testing.assert_allclose(out, x, atol=float(jnp.abs(x).max()) / 100)
+
+
+class TestCheckpoint:
+    def test_roundtrip_and_gc(self, tmp_path):
+        mgr = CheckpointManager(str(tmp_path), keep_n=2, async_save=False)
+        state = {"a": jnp.arange(6).reshape(2, 3).astype(jnp.float32),
+                 "b": {"c": jnp.ones((4,), jnp.int32)}}
+        for s in (1, 2, 3):
+            mgr.save(s, jax.tree.map(lambda x: x * s, state),
+                     extra={"data_state": {"step": s, "seed": 0}})
+        assert mgr.all_steps() == [2, 3]          # keep_n GC
+        restored, extra = mgr.restore(state)
+        np.testing.assert_allclose(restored["a"], state["a"] * 3)
+        assert extra["data_state"]["step"] == 3
+
+    def test_hash_verification(self, tmp_path):
+        mgr = CheckpointManager(str(tmp_path), keep_n=2, async_save=False)
+        state = {"a": jnp.ones((3,))}
+        mgr.save(1, state)
+        npz = os.path.join(str(tmp_path), "step_00000001", "arrays.npz")
+        with open(npz, "r+b") as f:
+            f.seek(30)
+            f.write(b"\xde\xad")
+        with pytest.raises(IOError):
+            mgr.restore(state)
+
+    def test_structure_mismatch_detected(self, tmp_path):
+        mgr = CheckpointManager(str(tmp_path), async_save=False)
+        mgr.save(1, {"a": jnp.ones(3)})
+        with pytest.raises(ValueError):
+            mgr.restore({"b": jnp.ones(3)})
+
+
+class TestData:
+    def test_deterministic_and_resumable(self):
+        d1 = SyntheticLMDataset(vocab=100, seq_len=16, global_batch=4, seed=7)
+        b1 = [d1.next() for _ in range(3)]
+        d2 = SyntheticLMDataset(vocab=100, seq_len=16, global_batch=4, seed=7)
+        d2.restore({"step": 2, "seed": 7})
+        np.testing.assert_array_equal(d2.next()["tokens"], b1[2]["tokens"])
+
+    def test_labels_are_shifted_tokens(self):
+        d = SyntheticLMDataset(vocab=100, seq_len=16, global_batch=2, seed=0)
+        b = d.next()
+        assert b["tokens"].shape == b["labels"].shape == (2, 16)
+        assert (b["tokens"] < 100).all() and (b["labels"] < 100).all()
+
+    def test_host_slicing_disjoint(self):
+        a = SyntheticLMDataset(vocab=50, seq_len=8, global_batch=8, seed=1,
+                               host_index=0, host_count=2)
+        b = SyntheticLMDataset(vocab=50, seq_len=8, global_batch=8, seed=1,
+                               host_index=1, host_count=2)
+        assert a.next()["tokens"].shape[0] == 4
+        assert not np.array_equal(a.next()["tokens"], b.next()["tokens"])
+
+
+class TestEndToEndTraining:
+    def _setup(self, tmp_path, arch="yi-9b", steps_cfg=None):
+        cfg = get_config(arch, reduced=True)
+        opt = adamw.OptConfig(lr=3e-3, warmup_steps=5, total_steps=60,
+                              **(steps_cfg or {}))
+        state = init_train_state(KEY, cfg, opt)
+        step = jax.jit(make_train_step(cfg, opt))
+        data = SyntheticLMDataset(vocab=cfg.vocab, seq_len=16, global_batch=4,
+                                  seed=3)
+        return cfg, opt, state, step, data
+
+    def test_loss_decreases(self, tmp_path):
+        cfg, opt, state, step, data = self._setup(tmp_path)
+        first = None
+        for i in range(30):
+            state, metrics = step(state, data.next())
+            if first is None:
+                first = float(metrics["loss"])
+        assert float(metrics["loss"]) < first - 0.3, (first, float(metrics["loss"]))
+
+    def test_microbatched_equals_full_batch(self, tmp_path):
+        cfg, opt, state, _, data = self._setup(tmp_path)
+        batch = data.next()
+        s1, m1 = jax.jit(make_train_step(cfg, opt, microbatches=1))(state, batch)
+        s2, m2 = jax.jit(make_train_step(cfg, opt, microbatches=2))(state, batch)
+        # same averaged gradients -> same updated params (fp32 tolerance)
+        for a, b in zip(jax.tree.leaves(s1["params"]),
+                        jax.tree.leaves(s2["params"])):
+            np.testing.assert_allclose(a, b, rtol=5e-4, atol=5e-5)
+
+    def test_trainer_resume_after_crash(self, tmp_path):
+        cfg, opt, state, step, data = self._setup(tmp_path)
+        calls = {"n": 0}
+
+        def flaky_step(st, b):
+            calls["n"] += 1
+            if calls["n"] == 7:
+                raise RuntimeError("injected device failure")
+            return step(st, b)
+
+        tr = Trainer(train_step=flaky_step, state=state, dataset=data,
+                     ckpt_dir=str(tmp_path), ckpt_every=3, max_retries=2)
+        history = tr.run(10)
+        assert int(tr.state["step"]) == 10
+        assert len(history) >= 10          # all 10 steps eventually completed
+        # checkpoint exists and reloads
+        tr2 = Trainer(train_step=step, state=state, dataset=data,
+                      ckpt_dir=str(tmp_path))
+        assert tr2.maybe_resume()
+        assert int(tr2.state["step"]) == 10

@@ -1,0 +1,144 @@
+"""Analytical runtime model vs the paper's closed forms (Tables 1-2, Eqs. 1-3)."""
+import math
+
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core.dataflows import ALL_DATAFLOWS, Dataflow, GemmShape, map_gemm
+from repro.core.runtime_model import (
+    ArrayShape,
+    fill_latency_axon,
+    fill_latency_sa,
+    runtime_scaleout,
+    runtime_scaleup,
+    runtime_table2,
+    speedup,
+)
+
+dims = st.integers(min_value=1, max_value=512)
+
+
+class TestFillLatency:
+    def test_square_halves(self):
+        # §3.1: for R == C the fill drops from 2R-2 to R-1 (exactly half).
+        for r in (2, 4, 16, 64, 256):
+            a = ArrayShape(r, r)
+            assert fill_latency_sa(a) == 2 * r - 2
+            assert fill_latency_axon(a) == r - 1
+
+    def test_paper_256_example(self):
+        # §3.1: (256, 256) -> 510 cycles becomes 255.
+        a = ArrayShape(256, 256)
+        assert fill_latency_sa(a) == 510
+        assert fill_latency_axon(a) == 255
+
+    @given(r=dims, c=dims)
+    def test_axon_never_worse(self, r, c):
+        a = ArrayShape(r, c)
+        assert fill_latency_axon(a) <= fill_latency_sa(a)
+
+
+class TestTable2ClosedForms:
+    """runtime_scaleup with a full-size array must equal Table 2 exactly."""
+
+    @given(m=st.integers(1, 64), k=st.integers(1, 64), n=st.integers(1, 64))
+    @settings(max_examples=200)
+    def test_full_size_mapping(self, m, k, n):
+        shape = GemmShape(m, k, n)
+        for df in ALL_DATAFLOWS:
+            st_map = map_gemm(shape, df)
+            arr = ArrayShape(st_map.S_R, st_map.S_C)
+            for axon in (False, True):
+                got = runtime_scaleup(shape, arr, df, axon=axon)
+                want = runtime_table2(shape, df, axon=axon)
+                assert got == want, (df, axon, shape)
+
+
+class TestScaling:
+    def test_eq2_tiling_factors(self):
+        # 2x2 tiles of a 16x16 array: runtime scales by exactly 4.
+        shape = GemmShape(32, 100, 32)
+        arr = ArrayShape(16, 16)
+        one = GemmShape(16, 100, 16)
+        assert runtime_scaleup(shape, arr, Dataflow.OS, axon=False) == \
+            4 * runtime_scaleup(one, arr, Dataflow.OS, axon=False)
+
+    def test_eq3_scaleout(self):
+        shape = GemmShape(64, 128, 64)
+        arr = ArrayShape(16, 16)
+        t_1 = runtime_scaleout(shape, arr, Dataflow.OS,
+                               partitions_r=1, partitions_c=1, axon=False)
+        t_4 = runtime_scaleout(shape, arr, Dataflow.OS,
+                               partitions_r=2, partitions_c=2, axon=False)
+        assert t_1 == runtime_scaleup(shape, arr, Dataflow.OS, axon=False)
+        assert t_4 == t_1 // 4  # perfectly divisible here
+
+    @given(m=dims, k=dims, n=dims,
+           r=st.sampled_from([4, 8, 16, 32]), c=st.sampled_from([4, 8, 16, 32]))
+    @settings(max_examples=200)
+    def test_axon_always_at_least_as_fast(self, m, k, n, r, c):
+        shape = GemmShape(m, k, n)
+        arr = ArrayShape(r, c)
+        for df in ALL_DATAFLOWS:
+            assert runtime_scaleup(shape, arr, df, axon=True) <= \
+                runtime_scaleup(shape, arr, df, axon=False)
+
+    def test_speedup_bounded_by_2(self):
+        # fill halves; total speedup is < 2 and approaches 2 only when the
+        # fill term dominates (T small, square array).
+        shape = GemmShape(256, 1, 256)
+        arr = ArrayShape(256, 256)
+        s = speedup(shape, arr, Dataflow.OS)
+        assert 1.0 < s < 2.0
+        assert s > 1.4  # fill-dominated regime
+
+
+class TestPaperHeadlines:
+    """Paper-verifiable claims on the Table 3 suite (Fig. 12).
+
+    Note (EXPERIMENTS.md §Fidelity): the paper's *suite averages* (1.47x at
+    64x64, 1.76x at 256x256) are not derivable from Eq. 2 / Table 2 as
+    printed -- with the per-tile readout term the square-array speedup is
+    bounded by 1.5x.  We therefore assert the claims that ARE unambiguous:
+    the closed forms themselves (TestTable2ClosedForms), the 510->255 fill
+    halving, 'up to 2x' in the fill-dominated limit (with readout pipelined
+    under the next tile's fill), monotone improvement with array size, and
+    the temporal-dimension-limited workloads (DB0) seeing ~no benefit.
+    """
+
+    def _speedups(self, r, overlap=True, df=Dataflow.OS):
+        # Same dataflow on both sides: the paper's comparison is
+        # per-dataflow ("speeds up GeMM irrespective of dataflow"), and the
+        # implemented hardware is OS (§5.1).
+        from repro.core.workloads import TABLE3
+        arr = ArrayShape(r, r)
+        out = {}
+        for name, shape in TABLE3.items():
+            t_sa = runtime_scaleup(shape, arr, df, axon=False,
+                                   overlap_readout=overlap)
+            t_ax = runtime_scaleup(shape, arr, df, axon=True,
+                                   overlap_readout=overlap)
+            out[name] = t_sa / t_ax
+        return out
+
+    def test_all_workloads_speed_up(self):
+        for name, s in self._speedups(64).items():
+            assert s >= 1.0, name
+
+    def test_up_to_2x_in_fill_dominated_limit(self):
+        # GEMM_0 / GEMM_1 have T == 10 under OS; nearly pure fill.
+        s = self._speedups(256)
+        assert s["GEMM_1"] > 1.8, s["GEMM_1"]
+
+    def test_db0_temporal_limited(self):
+        # §5.2.1: DB0's runtime is limited by the temporal dimension
+        # (K = 50000); scaling up / Axon barely helps.
+        s = self._speedups(256)
+        assert s["DB0"] < 1.05, s["DB0"]
+
+    def test_larger_arrays_speed_up_more(self):
+        def avg(r):
+            v = list(self._speedups(r).values())
+            return sum(v) / len(v)
+        assert avg(256) > avg(64) > 1.1
