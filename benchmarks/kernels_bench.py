@@ -11,6 +11,8 @@ import time
 import jax
 import jax.numpy as jnp
 
+from repro import axon
+from repro.core import mapper
 from repro.core.dataflows import Dataflow, GemmShape
 from repro.core.mapper import select_tpu_blocking
 from repro.kernels import ref
@@ -71,4 +73,29 @@ def bench_kernels():
                                         interpret=True))
     rows.append(("kernel_zero_gate_50pct", us,
                  f"{skip_fraction(mask) * 100:.0f}% MXU passes skipped"))
+    rows.append(bench_mapper_cache())
     return rows
+
+
+def bench_mapper_cache(repeats: int = 20):
+    """Repeated-shape dispatch through ``axon.einsum``: the mapper's
+    candidate sweep must run ONCE per unique (shape, dtype) key, not per
+    call.  The us column is the steady-state per-call dispatch time with a
+    warm cache; the derived column reports sweep invocations."""
+    mapper.mapper_cache_clear()
+    key = jax.random.PRNGKey(0)
+    a = jax.random.normal(key, (64, 256), jnp.float32)
+    b = jax.random.normal(jax.random.PRNGKey(1), (256, 128), jnp.float32)
+    with axon.policy(backend="interpret"):
+        axon.einsum("mk,kn->mn", a, b)          # cold call: pays the sweep
+        t0 = time.perf_counter()
+        for _ in range(repeats):
+            jax.block_until_ready(axon.einsum("mk,kn->mn", a, b))
+        us = (time.perf_counter() - t0) / repeats * 1e6
+    calls = 1 + repeats
+    sweeps = mapper.sweep_calls()
+    assert sweeps == 1, (
+        f"mapper sweep ran {sweeps}x for {calls} same-shape calls")
+    info = mapper.mapper_cache_info()
+    return ("mapper_cache_64x256x128", us,
+            f"{calls} calls -> {sweeps} sweep ({info.hits} cache hits)")

@@ -1,0 +1,2 @@
+"""Axon reproduction: systolic-array-inspired Pallas kernels, mapper, and
+model zoo behind the unified ``repro.axon`` operator API."""

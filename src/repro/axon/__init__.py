@@ -1,0 +1,45 @@
+"""``repro.axon`` -- the unified, policy-scoped operator API.
+
+One production entry point for every contraction in the repo::
+
+    from repro import axon
+
+    y = axon.einsum("bsd,df->bsf", x, w)          # mapper-selected kernel
+    with axon.policy(backend="interpret"):        # scoped override
+        y = axon.matmul(a, b)
+
+Kernel, mapper, and backend improvements land behind this facade; call
+sites never thread ``interpret=`` / ``block=`` / ``order=`` kwargs again.
+"""
+from repro.axon.dispatch import (
+    conv2d,
+    depthwise_conv2d,
+    einsum,
+    explain,
+    matmul,
+    plan_contraction,
+)
+from repro.axon.policy import (
+    BACKENDS,
+    ExecutionPolicy,
+    current_policy,
+    policy,
+    set_default_policy,
+)
+from repro.core.mapper import mapper_cache_clear, mapper_cache_info
+
+__all__ = [
+    "BACKENDS",
+    "ExecutionPolicy",
+    "conv2d",
+    "current_policy",
+    "depthwise_conv2d",
+    "einsum",
+    "explain",
+    "mapper_cache_clear",
+    "mapper_cache_info",
+    "matmul",
+    "plan_contraction",
+    "policy",
+    "set_default_policy",
+]

@@ -1,0 +1,441 @@
+"""The unified operator front door: ``axon.einsum`` / ``matmul`` / ``conv2d``.
+
+Every contraction in the repo flows through here.  ``einsum`` parses the
+spec, classifies it (batch / M / N / contraction label groups), and -- when
+the current :class:`~repro.axon.policy.ExecutionPolicy` asks for the Pallas
+backend -- lowers matmul-shaped contractions onto the Axon kernels:
+
+  * 2-D GeMMs (including any contraction whose batch labels appear only on
+    the LHS, which fold into M) -> the mapper-selected ``axon_gemm``;
+  * small-M contractions (M <= 8: matvecs, decode-step projections) -> the
+    memory-bound ``gemv`` kernel;
+  * shared-batch contractions (e.g. MoE's per-expert GeMMs) -> ``vmap`` over
+    the 2-D kernel;
+  * anything else (3+ operands, repeated labels, traced sums) -> XLA.
+
+Mapper decisions are LRU-cached per (shape, dtype) in ``repro.core.mapper``,
+so the candidate sweep runs once per unique GeMM shape per process.  Kernel
+dispatches carry a ``jax.custom_vjp`` whose backward is two more Axon GeMMs
+(dA = g @ B^T, dB = A^T @ g), so the training path stays on-kernel end to
+end.  Under the ``xla`` backend every call is a plain ``jnp.einsum`` --
+bit-identical to calling jnp directly.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+import string
+
+import jax
+import jax.numpy as jnp
+
+from repro.axon import registry
+from repro.axon.policy import ExecutionPolicy, current_policy
+from repro.core.dataflows import Dataflow, GemmShape
+from repro.core.mapper import select_tpu_blocking
+from repro.kernels.axon_gemm import axon_gemm
+from repro.kernels.dwconv import dwconv
+from repro.kernels.gemv import gemv as gemv_kernel
+from repro.kernels.im2col_conv import im2col_conv
+from repro.kernels.zero_gate_gemm import zero_gate_gemm
+from repro.kernels import ref
+
+
+# ---------------------------------------------------------------------------
+# einsum spec -> contraction plan
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class ContractionPlan:
+    """A two-operand einsum lowered to ``(B, M, K) @ (B, K, N)``."""
+
+    kind: str                        # "gemm" | "gemv"
+    lhs_perm: tuple[int, ...]        # lhs axes -> (batch..., m..., k...)
+    rhs_perm: tuple[int, ...]        # rhs axes -> (batch..., k..., n...)
+    B: int
+    M: int
+    K: int
+    N: int
+    out_group_shape: tuple[int, ...]  # (batch dims..., m dims..., n dims...)
+    out_perm: tuple[int, ...]         # grouped order -> einsum output order
+
+
+@functools.lru_cache(maxsize=4096)
+def plan_contraction(spec: str, lhs_shape: tuple[int, ...],
+                     rhs_shape: tuple[int, ...]) -> ContractionPlan | None:
+    """Classify a two-operand einsum; None = not kernel-mappable (use XLA)."""
+    if "->" not in spec or "." in spec:
+        return None
+    inputs, out = spec.split("->")
+    parts = [p.strip() for p in inputs.split(",")]
+    if len(parts) != 2:
+        return None
+    la, lb, lo = parts[0], parts[1], out.strip()
+    if (len(set(la)) != len(la) or len(set(lb)) != len(lb)
+            or len(set(lo)) != len(lo)):
+        return None                               # repeated labels (traces)
+    if len(la) != len(lhs_shape) or len(lb) != len(rhs_shape):
+        return None
+    if 0 in lhs_shape or 0 in rhs_shape:
+        return None      # empty operands: XLA returns the empty/zeros result
+    sa, sb, so = set(la), set(lb), set(lo)
+    if not so <= (sa | sb):
+        return None
+    if (sa - sb - so) or (sb - sa - so):
+        return None                               # single-operand sum-out
+    contract = [c for c in la if c in sb and c not in so]
+    if not contract:
+        return None                               # outer product
+    size: dict[str, int] = dict(zip(la, lhs_shape))
+    for lbl, d in zip(lb, rhs_shape):
+        if size.get(lbl, d) != d:
+            return None
+        size[lbl] = d
+    batch = [c for c in lo if c in sa and c in sb]
+    m_lbls = [c for c in lo if c in sa and c not in sb]
+    n_lbls = [c for c in lo if c in sb and c not in sa]
+
+    lhs_perm = tuple(la.index(c) for c in batch + m_lbls + contract)
+    rhs_perm = tuple(lb.index(c) for c in batch + contract + n_lbls)
+    prod = lambda lbls: functools.reduce(
+        lambda x, y: x * y, (size[c] for c in lbls), 1)
+    B, M, K, N = prod(batch), prod(m_lbls), prod(contract), prod(n_lbls)
+    grouped = batch + m_lbls + n_lbls
+    out_perm = tuple(grouped.index(c) for c in lo)
+    # vector-output (N == 1) and rank-1 (K == 1) contractions are not
+    # matmul-shaped enough to feed the MXU kernels -- XLA fuses the
+    # equivalent dot/broadcast far better (the SSM decode einsums hit this).
+    if N == 1 or K == 1:
+        return None
+    # small-M contractions (decode-step projections, matvecs) ride the
+    # streaming GEMV kernel: M rows sit on the sublane dim of one (M, bk)
+    # block instead of spawning a bm=1-degenerate GeMM grid.
+    kind = "gemv" if (B == 1 and M <= 8) else "gemm"
+    return ContractionPlan(
+        kind=kind, lhs_perm=lhs_perm, rhs_perm=rhs_perm, B=B, M=M, K=K, N=N,
+        out_group_shape=tuple(size[c] for c in grouped), out_perm=out_perm)
+
+
+# ---------------------------------------------------------------------------
+# kernel callables (config-static wrappers with custom VJPs)
+# ---------------------------------------------------------------------------
+
+
+@functools.lru_cache(maxsize=None)
+def _gemm_callable(block: tuple[int, int, int], order: Dataflow,
+                   interpret: bool, out_dtype: str):
+    """2-D GeMM with an Axon-kernel backward (dA = g B^T, dB = A^T g).
+
+    Backward operands stay in their native dtypes -- the kernel accumulates
+    partial products in fp32 internally, so upcasting copies of g/A/B would
+    double HBM traffic for no precision gain."""
+    bm, bk, bn = block
+    out_dt = jnp.dtype(out_dtype)
+
+    @jax.custom_vjp
+    def mm(a, b):
+        return axon_gemm(a, b, block=block, order=order, out_dtype=out_dt,
+                         interpret=interpret)
+
+    def fwd(a, b):
+        return mm(a, b), (a, b)
+
+    def bwd(res, g):
+        a, b = res
+        da = axon_gemm(g, b.T, block=(bm, bn, bk),
+                       order=order, out_dtype=a.dtype, interpret=interpret)
+        db = axon_gemm(a.T, g, block=(bk, bm, bn),
+                       order=order, out_dtype=b.dtype, interpret=interpret)
+        return da, db
+
+    mm.defvjp(fwd, bwd)
+    # jit at the callable level: eager callers (benchmarks, the ops shims,
+    # ad-hoc use) compile once per config instead of re-tracing per call
+    return jax.jit(mm)
+
+
+@functools.lru_cache(maxsize=None)
+def _gemv_callable(block_k: int, block_n: int, interpret: bool,
+                   out_dtype: str):
+    """(1, K) x (K, N) via the streaming GEMV kernel; jnp backward."""
+    out_dt = jnp.dtype(out_dtype)
+
+    @jax.custom_vjp
+    def mv(x, w):
+        return gemv_kernel(x, w, block_k=block_k, block_n=block_n,
+                           out_dtype=out_dt, interpret=interpret)
+
+    def fwd(x, w):
+        return mv(x, w), (x, w)
+
+    def bwd(res, g):
+        x, w = res
+        gf = g.astype(jnp.float32)
+        dx = (gf @ w.astype(jnp.float32).T).astype(x.dtype)
+        dw = (x.astype(jnp.float32).T @ gf).astype(w.dtype)
+        return dx, dw
+
+    mv.defvjp(fwd, bwd)
+    return jax.jit(mv)
+
+
+@functools.lru_cache(maxsize=None)
+def _zero_gate_callable(block: tuple[int, int, int], interpret: bool,
+                        out_dtype: str):
+    out_dt = jnp.dtype(out_dtype)
+
+    @jax.custom_vjp
+    def zg(a, b):
+        return zero_gate_gemm(a, b, block=block, out_dtype=out_dt,
+                              interpret=interpret)
+
+    def fwd(a, b):
+        return zg(a, b), (a, b)
+
+    def bwd(res, g):
+        a, b = res
+        gf = g.astype(jnp.float32)
+        da = (gf @ b.astype(jnp.float32).T).astype(a.dtype)
+        db = (a.astype(jnp.float32).T @ gf).astype(b.dtype)
+        return da, db
+
+    zg.defvjp(fwd, bwd)
+    return jax.jit(zg)
+
+
+# ---------------------------------------------------------------------------
+# registry entries
+# ---------------------------------------------------------------------------
+
+
+def _mapped_blocking(pol: ExecutionPolicy, M: int, K: int, N: int,
+                     itemsize: int) -> tuple[tuple[int, int, int], Dataflow]:
+    block, order = pol.block, pol.order
+    if block is not None:
+        # pinned block: no sweep -- the mapper's order would have been
+        # scored against its own block choice, not this one
+        return block, (order if order is not None else Dataflow.OS)
+    sel = select_tpu_blocking(GemmShape(M, K, N), bytes_per_elem=itemsize)
+    return ((sel.bm, sel.bk, sel.bn),
+            order if order is not None else sel.loop_order)
+
+
+@registry.register("gemm")
+def _gemm_impl(at, bt, pol: ExecutionPolicy, out_dtype):
+    B, M, K = at.shape
+    N = bt.shape[2]
+    _check_accum_dtype(pol)
+    block, order = _mapped_blocking(pol, M, K, N, jnp.dtype(at.dtype).itemsize)
+    mm = _gemm_callable(block, order, pol.interpret(),
+                        jnp.dtype(out_dtype).name)
+    if B == 1:
+        return mm(at[0], bt[0])[None]
+    return jax.vmap(mm)(at, bt)
+
+
+def _check_accum_dtype(pol: ExecutionPolicy) -> None:
+    if jnp.dtype(pol.accum_dtype) != jnp.float32:
+        raise NotImplementedError(
+            "the Axon kernels accumulate in float32; "
+            f"policy accum_dtype={pol.accum_dtype} is not implemented")
+
+
+@registry.register("gemv")
+def _gemv_impl(at, bt, pol: ExecutionPolicy, out_dtype):
+    # at: (1, M, K) with M <= 8 -- the M rows are the kernel's small batch
+    _, _, K = at.shape
+    N = bt.shape[2]
+    _check_accum_dtype(pol)
+    if pol.block is not None:
+        bk, bn = pol.block[1], pol.block[2]
+    else:
+        bk, bn = min(512, K), min(1024, N)
+    mv = _gemv_callable(bk, bn, pol.interpret(), jnp.dtype(out_dtype).name)
+    return mv(at[0], bt[0])[None]
+
+
+@registry.register("zero_gate")
+def _zero_gate_impl(at, bt, pol: ExecutionPolicy, out_dtype):
+    _, M, K = at.shape
+    N = bt.shape[2]
+    _check_accum_dtype(pol)
+    block, _ = _mapped_blocking(pol, M, K, N, jnp.dtype(at.dtype).itemsize)
+    zg = _zero_gate_callable(block, pol.interpret(),
+                             jnp.dtype(out_dtype).name)
+    return zg(at[0], bt[0])[None]
+
+
+@registry.register("xla_einsum")
+def _xla_einsum(spec, *operands, precision=None, preferred_element_type=None):
+    return jnp.einsum(spec, *operands, precision=precision,
+                      preferred_element_type=preferred_element_type)
+
+
+@functools.lru_cache(maxsize=None)
+def _conv_callable(fn, **static_kwargs):
+    return jax.jit(functools.partial(fn, **static_kwargs))
+
+
+@registry.register("conv2d")
+def _conv2d_impl(x, w, pol: ExecutionPolicy, stride, padding, out_dtype,
+                 block_rows=8, block_cout=128, block_cin=512):
+    conv = _conv_callable(
+        im2col_conv, stride=stride, padding=padding, block_rows=block_rows,
+        block_cout=block_cout, block_cin=block_cin,
+        out_dtype=None if out_dtype is None else jnp.dtype(out_dtype),
+        interpret=pol.interpret())
+    return conv(x, w)
+
+
+@registry.register("xla_conv2d")
+def _xla_conv2d(x, w, *, stride, padding, out_dtype):
+    return ref.conv2d_ref(x, w, stride=stride, padding=padding,
+                          out_dtype=out_dtype)
+
+
+@registry.register("dwconv")
+def _dwconv_impl(x, w, pol: ExecutionPolicy, stride, padding, out_dtype,
+                 block_rows=8, block_c=128):
+    conv = _conv_callable(
+        dwconv, stride=stride, padding=padding, block_rows=block_rows,
+        block_c=block_c,
+        out_dtype=None if out_dtype is None else jnp.dtype(out_dtype),
+        interpret=pol.interpret())
+    return conv(x, w)
+
+
+@registry.register("xla_dwconv")
+def _xla_dwconv(x, w, *, stride, padding, out_dtype):
+    return ref.dwconv_ref(x, w, stride=stride, padding=padding,
+                          out_dtype=out_dtype)
+
+
+# ---------------------------------------------------------------------------
+# public operators
+# ---------------------------------------------------------------------------
+
+
+def einsum(spec: str, *operands, precision=None, preferred_element_type=None,
+           policy: ExecutionPolicy | None = None) -> jax.Array:
+    """Policy-dispatched einsum.
+
+    Under the ``xla`` backend this is exactly ``jnp.einsum`` (bit-identical).
+    Under ``pallas`` / ``interpret``, matmul-shaped two-operand contractions
+    are lowered onto the Axon kernels (fp32 accumulation); the rest fall back
+    to XLA.
+    """
+    pol = policy if policy is not None else current_policy()
+    if pol.resolved_backend() != "xla" and len(operands) == 2 \
+            and precision is None:
+        a, b = operands
+        # kernels accumulate in fp32: only exact for floating operands
+        # (integer einsums stay on the exact XLA path)
+        if (hasattr(a, "shape") and hasattr(b, "shape")
+                and hasattr(a, "dtype") and hasattr(b, "dtype")
+                and jnp.issubdtype(a.dtype, jnp.floating)
+                and jnp.issubdtype(b.dtype, jnp.floating)):
+            plan = plan_contraction(spec, tuple(a.shape), tuple(b.shape))
+            if plan is not None:
+                return _dispatch(plan, a, b, pol, preferred_element_type)
+    return registry.get("xla_einsum")(
+        spec, *operands, precision=precision,
+        preferred_element_type=preferred_element_type)
+
+
+def _dispatch(plan: ContractionPlan, a, b, pol: ExecutionPolicy,
+              preferred_element_type) -> jax.Array:
+    # Match jnp.einsum dtype semantics: preferred_element_type is both the
+    # accumulation and the result dtype; default result type promotes.
+    if preferred_element_type is not None:
+        out_dtype = jnp.dtype(preferred_element_type)
+    else:
+        out_dtype = jnp.result_type(a.dtype, b.dtype)
+    at = jax.lax.transpose(a, plan.lhs_perm).reshape(plan.B, plan.M, plan.K)
+    bt = jax.lax.transpose(b, plan.rhs_perm).reshape(plan.B, plan.K, plan.N)
+    kind = plan.kind
+    # zero-gating covers every unbatched kernel dispatch; shared-batch
+    # contractions (B > 1) fall back to the dense kernel -- the mask operand
+    # would need a batched pallas grid that the kernel doesn't implement yet.
+    if pol.zero_gate and plan.B == 1:
+        kind = "zero_gate"
+    out = registry.get(kind)(at, bt, pol, out_dtype)      # (B, M, N)
+    out = out.reshape(plan.out_group_shape)
+    return jax.lax.transpose(out, plan.out_perm)
+
+
+# labels usable for leading batch dims without colliding with m/k/n
+_LEAD_LABELS = "".join(c for c in string.ascii_lowercase if c not in "mkn")
+
+
+def matmul(a, b, *, policy: ExecutionPolicy | None = None,
+           preferred_element_type=None) -> jax.Array:
+    """``a @ b`` through the Axon dispatch (leading lhs dims fold into M)."""
+    if a.ndim == 1 and b.ndim == 2:
+        return einsum("k,kn->n", a, b, policy=policy,
+                      preferred_element_type=preferred_element_type)
+    if a.ndim >= 2 and b.ndim == 2 and a.ndim - 2 <= len(_LEAD_LABELS):
+        lead = _LEAD_LABELS[:a.ndim - 2]
+        spec = f"{lead}mk,kn->{lead}mn"
+        return einsum(spec, a, b, policy=policy,
+                      preferred_element_type=preferred_element_type)
+    if a.ndim == b.ndim and a.ndim >= 3 and a.shape[:-2] == b.shape[:-2] \
+            and a.ndim - 2 <= len(_LEAD_LABELS):
+        lead = _LEAD_LABELS[:a.ndim - 2]
+        spec = f"{lead}mk,{lead}kn->{lead}mn"
+        return einsum(spec, a, b, policy=policy,
+                      preferred_element_type=preferred_element_type)
+    return jnp.matmul(a, b, preferred_element_type=preferred_element_type)
+
+
+def conv2d(x, w, *, stride: int = 1, padding: int = 0, out_dtype=None,
+           block_rows: int = 8, block_cout: int = 128, block_cin: int = 512,
+           policy: ExecutionPolicy | None = None) -> jax.Array:
+    """NHWC x HWIO conv through the on-chip-im2col kernel (or XLA).
+
+    The ``block_*`` tiling kwargs only affect the kernel backends (XLA picks
+    its own tiling)."""
+    pol = policy if policy is not None else current_policy()
+    if pol.resolved_backend() == "xla":
+        return registry.get("xla_conv2d")(x, w, stride=stride,
+                                          padding=padding, out_dtype=out_dtype)
+    return registry.get("conv2d")(x, w, pol, stride, padding, out_dtype,
+                                  block_rows=block_rows,
+                                  block_cout=block_cout, block_cin=block_cin)
+
+
+def depthwise_conv2d(x, w, *, stride: int = 1, padding: int = 0,
+                     out_dtype=None, block_rows: int = 8, block_c: int = 128,
+                     policy: ExecutionPolicy | None = None) -> jax.Array:
+    """NHWC x (kh, kw, C) depthwise conv (VPU kernel path, no im2col)."""
+    pol = policy if policy is not None else current_policy()
+    if pol.resolved_backend() == "xla":
+        return registry.get("xla_dwconv")(x, w, stride=stride,
+                                          padding=padding, out_dtype=out_dtype)
+    return registry.get("dwconv")(x, w, pol, stride, padding, out_dtype,
+                                  block_rows=block_rows, block_c=block_c)
+
+
+def explain(spec: str, *operands) -> dict:
+    """Describe how ``einsum(spec, *operands)`` would dispatch (for tests,
+    benchmarks, and humans).  Operands may be arrays or shape tuples."""
+    shapes = tuple(tuple(getattr(o, "shape", o)) for o in operands)
+    pol = current_policy()
+    info = {"backend": pol.resolved_backend(), "kind": "xla",
+            "reason": None}
+    if pol.resolved_backend() == "xla":
+        info["reason"] = "xla backend selected by policy"
+        return info
+    if len(shapes) != 2:
+        info["reason"] = f"{len(shapes)} operands (kernels take 2)"
+        return info
+    plan = plan_contraction(spec, *shapes)
+    if plan is None:
+        info["reason"] = "spec is not a matmul-shaped contraction"
+        return info
+    kind = plan.kind
+    if pol.zero_gate and plan.B == 1:
+        kind = "zero_gate"
+    info.update(kind=kind, B=plan.B, M=plan.M, K=plan.K, N=plan.N,
+                vmapped=plan.B > 1)
+    return info

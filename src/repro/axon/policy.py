@@ -1,0 +1,113 @@
+"""Execution policy: the single knob surface for the unified operator API.
+
+Every ``axon.einsum`` / ``axon.matmul`` / ``axon.conv2d`` call resolves its
+backend, blocking, and accumulation dtype from the *current* policy instead
+of threading ``interpret=`` / ``block=`` / ``order=`` kwargs through every
+layer.  The policy is read at trace time, so a jitted model staged under
+``with axon.policy(backend="interpret")`` bakes the Pallas-interpreter path
+into that compilation and nothing else.
+
+Backends:
+
+  auto      : Pallas kernels on TPU, XLA elsewhere (the production default).
+  pallas    : always dispatch to the Axon Pallas kernels (interpreted off-TPU
+              so the same policy runs in CI).
+  interpret : force ``interpret=True`` pallas_calls (kernel bodies execute in
+              Python -- the debugging/verification path).
+  xla       : plain jnp/lax lowering, bit-identical to calling jnp directly.
+"""
+from __future__ import annotations
+
+import contextlib
+import contextvars
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.dataflows import Dataflow
+
+BACKENDS = ("auto", "pallas", "xla", "interpret")
+
+
+@dataclasses.dataclass(frozen=True)
+class ExecutionPolicy:
+    """Scoped execution configuration for all Axon operators.
+
+    ``block`` / ``order`` = None means "ask the mapper" (``auto`` mapping);
+    setting them pins the Pallas blocking / loop order for every dispatch in
+    scope.  ``accum_dtype`` is the dtype kernels accumulate partial products
+    in (float32 only for now); result dtypes follow jnp.einsum semantics,
+    i.e. the per-call ``preferred_element_type``.
+    """
+
+    backend: str = "auto"
+    block: tuple[int, int, int] | None = None   # fixed (bm, bk, bn)
+    order: Dataflow | None = None               # fixed loop order
+    # kernel partial-product accumulation dtype; float32 is the only value
+    # the Pallas kernels implement (others raise at dispatch).  The XLA
+    # backend is unaffected (use preferred_element_type per call there).
+    accum_dtype: Any = jnp.float32
+    zero_gate: bool = False    # route 2-D GeMMs through the zero-gating kernel
+    # None = infer (interpret off-TPU so 'pallas' runs everywhere); an
+    # explicit bool forces it -- False surfaces real pallas_call compile
+    # errors on hosts that cannot lower Mosaic.
+    force_interpret: bool | None = None
+
+    def __post_init__(self) -> None:
+        if self.backend not in BACKENDS:
+            raise ValueError(
+                f"backend must be one of {BACKENDS}, got {self.backend!r}")
+
+    def resolved_backend(self) -> str:
+        """Collapse ``auto`` to the concrete backend for this process."""
+        if self.backend == "auto":
+            return "pallas" if jax.default_backend() == "tpu" else "xla"
+        return self.backend
+
+    def interpret(self) -> bool:
+        """Whether Pallas kernels in scope run under ``interpret=True``."""
+        if self.force_interpret is not None:
+            return self.force_interpret
+        if self.backend == "interpret":
+            return True
+        return jax.default_backend() == "cpu"
+
+
+_DEFAULT = ExecutionPolicy()
+# None marks "no scope active": current_policy() falls through to _DEFAULT,
+# so set_default_policy takes effect in every thread/context at once.
+_CURRENT: contextvars.ContextVar[ExecutionPolicy | None] = \
+    contextvars.ContextVar("axon_policy", default=None)
+
+
+def current_policy() -> ExecutionPolicy:
+    cur = _CURRENT.get()
+    return _DEFAULT if cur is None else cur
+
+
+def set_default_policy(p: ExecutionPolicy) -> ExecutionPolicy:
+    """Replace the process-wide default (what applies outside any
+    ``policy`` scope, in every thread); returns the previous default."""
+    global _DEFAULT
+    old = _DEFAULT
+    _DEFAULT = p
+    return old
+
+
+@contextlib.contextmanager
+def policy(p: ExecutionPolicy | None = None, /, **overrides):
+    """Scope a policy: ``with axon.policy(backend="interpret"): ...``.
+
+    Accepts either a full ``ExecutionPolicy`` or field overrides applied on
+    top of the current one.  Nests and restores on exit (including on error).
+    """
+    base = current_policy()
+    new = dataclasses.replace(base, **overrides) if p is None else (
+        dataclasses.replace(p, **overrides) if overrides else p)
+    token = _CURRENT.set(new)
+    try:
+        yield new
+    finally:
+        _CURRENT.reset(token)

@@ -1,0 +1,35 @@
+"""Kernel registry: one table from operator kind to implementation.
+
+The dispatcher (``repro.axon.dispatch``) never imports kernels directly -- it
+looks them up here, so swapping a kernel (a new Mosaic GeMM, a GPU Triton
+backend, a quantized path) is a one-line registration instead of a sweep over
+every call site.
+"""
+from __future__ import annotations
+
+from typing import Callable
+
+_REGISTRY: dict[str, Callable] = {}
+
+
+def register(kind: str) -> Callable[[Callable], Callable]:
+    """Decorator: ``@register("gemm")`` binds an implementation to a kind."""
+
+    def deco(fn: Callable) -> Callable:
+        _REGISTRY[kind] = fn
+        return fn
+
+    return deco
+
+
+def get(kind: str) -> Callable:
+    try:
+        return _REGISTRY[kind]
+    except KeyError:
+        raise KeyError(
+            f"no kernel registered for {kind!r}; have {sorted(_REGISTRY)}"
+        ) from None
+
+
+def kinds() -> list[str]:
+    return sorted(_REGISTRY)

@@ -25,6 +25,7 @@ Two roles:
 from __future__ import annotations
 
 import dataclasses
+import functools
 import math
 
 from repro.core import hw
@@ -116,7 +117,44 @@ def select_tpu_blocking(
     Blocks are multiples of the MXU tile (128) where the dim allows; the
     fp32 accumulator (bm x bn x 4B) plus both operand blocks (double
     buffered) must fit the VMEM budget.
+
+    Decisions are LRU-cached per (shape, bytes_per_elem, budget, chip): the
+    exhaustive candidate sweep runs once per unique key per process, not per
+    call (``repro.axon`` dispatches every model contraction through here).
     """
+    return _select_tpu_blocking_cached(shape, bytes_per_elem, vmem_budget,
+                                       chip)
+
+
+def mapper_cache_info():
+    """(hits, misses, maxsize, currsize) of the blocking-decision cache."""
+    return _select_tpu_blocking_cached.cache_info()
+
+
+def mapper_cache_clear() -> None:
+    """Drop cached decisions and reset the sweep counter (for tests/benches)."""
+    global _sweep_calls
+    _select_tpu_blocking_cached.cache_clear()
+    _sweep_calls = 0
+
+
+_sweep_calls = 0
+
+
+def sweep_calls() -> int:
+    """How many times the candidate sweep actually ran (cache misses)."""
+    return _sweep_calls
+
+
+@functools.lru_cache(maxsize=4096)
+def _select_tpu_blocking_cached(
+    shape: GemmShape,
+    bytes_per_elem: int,
+    vmem_budget: int,
+    chip: hw.ChipSpec,
+) -> TpuBlocking:
+    global _sweep_calls
+    _sweep_calls += 1
     lane = chip.mxu_shape[0]
     candidates = []
     for bm in (128, 256, 512):

@@ -1,82 +1,92 @@
-"""Public jit'd wrappers around the Pallas kernels.
+"""DEPRECATED: thin shims over the unified ``repro.axon`` operator API.
 
-On CPU (this container) kernels execute under ``interpret=True``; on TPU the
-same ``pallas_call`` lowers to Mosaic.  ``auto_gemm`` routes block shape and
-loop order through the Axon mapper (``repro.core.mapper``) -- the paper's
-runtime model acting as the framework's kernel auto-tuner.
+This module was the public face of the Pallas kernels; every entry point now
+delegates to ``repro.axon`` (policy-scoped, mapper-cached dispatch).  New
+code should call ``axon.matmul`` / ``axon.einsum`` / ``axon.conv2d`` under a
+``with axon.policy(...)`` scope instead of threading ``interpret=`` /
+``block=`` / ``order=`` kwargs per call.
 """
 from __future__ import annotations
 
-import functools
+import dataclasses
+import warnings
 
-import jax
-import jax.numpy as jnp
-
-from repro.core.dataflows import Dataflow, GemmShape
-from repro.core.mapper import select_tpu_blocking
-from repro.kernels.axon_gemm import axon_gemm
-from repro.kernels.dwconv import dwconv
-from repro.kernels.gemv import gemv
-from repro.kernels.im2col_conv import im2col_conv
-from repro.kernels.zero_gate_gemm import block_mask, zero_gate_gemm
+from repro import axon
+from repro.axon.policy import ExecutionPolicy
+from repro.core.dataflows import Dataflow
+from repro.kernels.zero_gate_gemm import block_mask  # re-export (unchanged)
 
 
-def _interpret_default() -> bool:
-    return jax.default_backend() == "cpu"
+def _warn(name: str, repl: str) -> None:
+    warnings.warn(
+        f"repro.kernels.ops.{name} is deprecated; use {repl} "
+        f"(see repro.axon)", DeprecationWarning, stacklevel=3)
 
 
-@functools.partial(jax.jit, static_argnames=("block", "order", "out_dtype", "interpret"))
+def _policy(interpret, block=None, order=None) -> ExecutionPolicy:
+    # interpret=None -> auto (interpreted off-TPU); an explicit bool is
+    # honored, so interpret=False still surfaces compile errors on CPU as
+    # the old kwargs-based API did.
+    backend = "interpret" if interpret else "pallas"
+    return ExecutionPolicy(backend=backend, block=block, order=order,
+                           force_interpret=interpret)
+
+
 def gemm(a, b, *, block=(128, 128, 128), order=Dataflow.OS, out_dtype=None,
          interpret=None):
-    interpret = _interpret_default() if interpret is None else interpret
-    return axon_gemm(a, b, block=block, order=order, out_dtype=out_dtype,
-                     interpret=interpret)
+    _warn("gemm", "axon.matmul with policy(block=..., order=...)")
+    out = axon.matmul(a, b, policy=_policy(interpret, block, order),
+                      preferred_element_type=out_dtype)
+    return out if out_dtype else out.astype(a.dtype)
 
 
 def auto_gemm(a, b, *, out_dtype=None, interpret=None):
-    """GeMM with mapper-selected blocking + loop order (static per shape)."""
-    M, K = a.shape
-    _, N = b.shape
-    sel = select_tpu_blocking(GemmShape(M, K, N),
-                              bytes_per_elem=a.dtype.itemsize)
-    return gemm(a, b, block=(sel.bm, sel.bk, sel.bn), order=sel.loop_order,
-                out_dtype=out_dtype, interpret=interpret)
+    """GeMM with mapper-selected blocking + loop order (cached per shape)."""
+    _warn("auto_gemm", "axon.matmul")
+    out = axon.matmul(a, b, policy=_policy(interpret),
+                      preferred_element_type=out_dtype)
+    return out if out_dtype else out.astype(a.dtype)
 
 
-@functools.partial(jax.jit, static_argnames=(
-    "stride", "padding", "block_rows", "block_cout", "block_cin",
-    "out_dtype", "interpret"))
 def conv2d(x, w, *, stride=1, padding=0, block_rows=8, block_cout=128,
            block_cin=512, out_dtype=None, interpret=None):
-    interpret = _interpret_default() if interpret is None else interpret
-    return im2col_conv(x, w, stride=stride, padding=padding,
+    _warn("conv2d", "axon.conv2d")
+    return axon.conv2d(x, w, stride=stride, padding=padding,
                        block_rows=block_rows, block_cout=block_cout,
                        block_cin=block_cin, out_dtype=out_dtype,
-                       interpret=interpret)
+                       policy=_policy(interpret))
 
 
-@functools.partial(jax.jit, static_argnames=(
-    "stride", "padding", "block_rows", "block_c", "out_dtype", "interpret"))
 def depthwise_conv2d(x, w, *, stride=1, padding=0, block_rows=8, block_c=128,
                      out_dtype=None, interpret=None):
-    interpret = _interpret_default() if interpret is None else interpret
-    return dwconv(x, w, stride=stride, padding=padding, block_rows=block_rows,
-                  block_c=block_c, out_dtype=out_dtype, interpret=interpret)
+    _warn("depthwise_conv2d", "axon.depthwise_conv2d")
+    return axon.depthwise_conv2d(x, w, stride=stride, padding=padding,
+                                 block_rows=block_rows, block_c=block_c,
+                                 out_dtype=out_dtype,
+                                 policy=_policy(interpret))
 
 
-@functools.partial(jax.jit, static_argnames=("block_k", "block_n", "out_dtype",
-                                             "interpret"))
 def matvec(x, w, *, block_k=512, block_n=1024, out_dtype=None, interpret=None):
-    interpret = _interpret_default() if interpret is None else interpret
-    return gemv(x, w, block_k=block_k, block_n=block_n, out_dtype=out_dtype,
-                interpret=interpret)
+    _warn("matvec", "axon.einsum('k,kn->n', ...)")
+    # bm=8: batched inputs beyond the gemv kernel's small-batch window (M>8)
+    # fall to the GeMM kernel with a full-sublane row block, not bm=1
+    pol = _policy(interpret, block=(8, block_k, block_n))
+    if x.ndim == 1:
+        out = axon.einsum("k,kn->n", x, w, policy=pol,
+                          preferred_element_type=out_dtype)
+    else:
+        out = axon.einsum("bk,kn->bn", x, w, policy=pol,
+                          preferred_element_type=out_dtype)
+    return out if out_dtype else out.astype(x.dtype)
 
 
-@functools.partial(jax.jit, static_argnames=("block", "out_dtype", "interpret"))
-def sparse_gemm(a, b, *, block=(128, 128, 128), out_dtype=None, interpret=None):
-    interpret = _interpret_default() if interpret is None else interpret
-    return zero_gate_gemm(a, b, block=block, out_dtype=out_dtype,
-                          interpret=interpret)
+def sparse_gemm(a, b, *, block=(128, 128, 128), out_dtype=None,
+                interpret=None):
+    _warn("sparse_gemm", "axon.matmul with policy(zero_gate=True)")
+    pol = dataclasses.replace(_policy(interpret, block, Dataflow.OS),
+                              zero_gate=True)
+    out = axon.matmul(a, b, policy=pol, preferred_element_type=out_dtype)
+    return out if out_dtype else out.astype(a.dtype)
 
 
 __all__ = [

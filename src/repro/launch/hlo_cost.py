@@ -33,8 +33,11 @@ _WHILE_RE = re.compile(r"while\(.*?\), condition=%?([\w.\-]+), body=%?([\w.\-]+)
 _COND_RE = re.compile(r"conditional\(")
 _CALLED_RE = re.compile(r"(?:to_apply|calls)=%?([\w.\-]+)")
 _BRANCHES_RE = re.compile(r"branch_computations=\{([^}]*)\}")
+# operands may carry inline types: dot(f32[128,64]{1,0} %lhs, f32[...] %rhs)
+_OPERAND = r"(?:\w+\[[\d,]*\](?:\{[^}]*\})? )?%?([\w.\-]+)"
 _DOT_RE = re.compile(
-    r"= (\w+)\[([\d,]*)\][^=]*? dot\(%?([\w.\-]+), %?([\w.\-]+)\)(.*)$")
+    r"= (\w+)\[([\d,]*)\][^=]*? dot\(" + _OPERAND + r", " + _OPERAND
+    + r"\)(.*)$")
 _CONTRACT_RE = re.compile(r"lhs_contracting_dims=\{([\d,]*)\}")
 _COLL_RE = re.compile(
     r"= (\w+)\[([\d,]*)\][^=]*? (all-reduce|all-gather|reduce-scatter|"

@@ -15,6 +15,7 @@ from typing import Any
 import jax
 import jax.numpy as jnp
 
+from repro import axon
 from repro.parallel.sharding import constrain, constrain_priority
 
 Params = dict[str, Any]
@@ -120,7 +121,7 @@ def flash_attention(
             kj, vj, j = inp
             # bf16 x bf16 -> fp32 accumulation (preferred_element_type):
             # never materialize fp32 copies of K/V blocks.
-            s = jnp.einsum("bqgrd,bkgd->bqgrk", qi, kj,
+            s = axon.einsum("bqgrd,bkgd->bqgrk", qi, kj,
                            preferred_element_type=jnp.float32)
             q_idx = q_offset + off + jnp.arange(bq)
             kv_idx = j * bkv + jnp.arange(bkv)
@@ -134,7 +135,7 @@ def flash_attention(
             p = jnp.exp(s - m_new[..., None])
             corr = jnp.exp(m - m_new)
             l = l * corr + p.sum(axis=-1)
-            acc = acc * corr[..., None] + jnp.einsum(
+            acc = acc * corr[..., None] + axon.einsum(
                 "bqgrk,bkgd->bqgrd", p.astype(vj.dtype), vj,
                 preferred_element_type=jnp.float32)
             return (m_new, l, acc), None
@@ -194,7 +195,7 @@ def decode_attention(
     qf = constrain_priority(qf, 1, [1])
     # keep the cache in its storage dtype; accumulate in fp32 via
     # preferred_element_type (no fp32 copy of the cache is materialized)
-    s = jnp.einsum("bgrd,bkgd->bgrk", qf, k_cache,
+    s = axon.einsum("bgrd,bkgd->bgrk", qf, k_cache,
                    preferred_element_type=jnp.float32)
     kv_idx = jnp.arange(S)
     mask = kv_idx < cache_len
@@ -202,7 +203,7 @@ def decode_attention(
         mask = mask & (kv_idx >= cache_len - window)
     s = jnp.where(mask[None, None, None, :], s, _NEG_INF)
     p = jax.nn.softmax(s, axis=-1)
-    out = jnp.einsum("bgrk,bkgd->bgrd", p.astype(v_cache.dtype), v_cache,
+    out = axon.einsum("bgrk,bkgd->bgrd", p.astype(v_cache.dtype), v_cache,
                      preferred_element_type=jnp.float32)
     return out.reshape(B, 1, H, dv).astype(q.dtype)
 
@@ -240,9 +241,9 @@ def attention_fwd(
 ) -> tuple[jax.Array, Params | None]:
     B, S, D = x.shape
     h, kv, dh = cfg.n_heads, cfg.n_kv, cfg.d_head
-    q = jnp.einsum("bsd,de->bse", x, p["wq"])
-    k = jnp.einsum("bsd,de->bse", x, p["wk"])
-    v = jnp.einsum("bsd,de->bse", x, p["wv"])
+    q = axon.einsum("bsd,de->bse", x, p["wq"])
+    k = axon.einsum("bsd,de->bse", x, p["wk"])
+    v = axon.einsum("bsd,de->bse", x, p["wv"])
     if cfg.qkv_bias:
         q, k, v = q + p["bq"], k + p["bk"], v + p["bv"]
     q = q.reshape(B, S, h, dh)
@@ -274,7 +275,7 @@ def attention_fwd(
         new_cache = {"k": k_cache, "v": v_cache, "len": pos + 1}
 
     out = out.reshape(B, S, h * dh)
-    out = jnp.einsum("bse,ed->bsd", out, p["wo"])
+    out = axon.einsum("bse,ed->bsd", out, p["wo"])
     return constrain(out, "batch", None, None), new_cache
 
 
@@ -303,9 +304,9 @@ def init_mlp(key, d: int, f: int, dtype=jnp.float32) -> Params:
 
 
 def mlp_fwd(p: Params, x: jax.Array) -> jax.Array:
-    g = jnp.einsum("bsd,df->bsf", x, p["w_gate"])
-    u = jnp.einsum("bsd,df->bsf", x, p["w_up"])
+    g = axon.einsum("bsd,df->bsf", x, p["w_gate"])
+    u = axon.einsum("bsd,df->bsf", x, p["w_up"])
     h = jax.nn.silu(g.astype(jnp.float32)).astype(x.dtype) * u
     h = constrain(h, "batch", None, "model")
-    return constrain(jnp.einsum("bsf,fd->bsd", h, p["w_down"]),
+    return constrain(axon.einsum("bsf,fd->bsd", h, p["w_down"]),
                      "batch", None, None)

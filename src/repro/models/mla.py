@@ -12,6 +12,7 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
+from repro import axon
 from repro.models.layers import (
     Params,
     _dense_init,
@@ -46,13 +47,13 @@ def _project_qkv_latent(p: Params, x: jax.Array, cfg, positions):
     h = cfg.n_heads
     dn, dr = cfg.nope_head, cfg.rope_head
 
-    q = rmsnorm(p["q_a_norm"], jnp.einsum("bsd,dq->bsq", x, p["q_a"]))
-    q = jnp.einsum("bsq,qe->bse", q, p["q_b"]).reshape(B, S, h, dn + dr)
+    q = rmsnorm(p["q_a_norm"], axon.einsum("bsd,dq->bsq", x, p["q_a"]))
+    q = axon.einsum("bsq,qe->bse", q, p["q_b"]).reshape(B, S, h, dn + dr)
     q = constrain(q, "batch", None, "model", None)
     q_nope, q_pe = q[..., :dn], q[..., dn:]
     q_pe = apply_rope(q_pe, positions, cfg.rope_theta)
 
-    ckv = jnp.einsum("bsd,de->bse", x, p["kv_a"])
+    ckv = axon.einsum("bsd,de->bse", x, p["kv_a"])
     c = rmsnorm(p["kv_a_norm"], ckv[..., : cfg.kv_lora])
     k_pe = apply_rope(ckv[..., cfg.kv_lora:][:, :, None, :], positions,
                       cfg.rope_theta)                      # (B, S, 1, dr)
@@ -70,7 +71,7 @@ def mla_fwd(p: Params, x: jax.Array, cfg, *, positions,
     q_nope, q_pe, c, k_pe = _project_qkv_latent(p, x, cfg, positions)
 
     if cache is None:
-        kv = jnp.einsum("bsc,ce->bse", c, p["kv_b"]).reshape(B, S, h, dn + dv)
+        kv = axon.einsum("bsc,ce->bse", c, p["kv_b"]).reshape(B, S, h, dn + dv)
         kv = constrain(kv, "batch", None, "model", None)
         k_nope, v = kv[..., :dn], kv[..., dn:]
         k = jnp.concatenate([k_nope, jnp.broadcast_to(k_pe, (B, S, h, dr))],
@@ -91,25 +92,25 @@ def mla_fwd(p: Params, x: jax.Array, cfg, *, positions,
         # fold k_nope projection into q:  (B,1,h,dn) x (kvl,h,dn) -> (B,1,h,kvl)
         # all cache-sized contractions stay in the cache dtype with fp32
         # accumulation -- no fp32 copies of the latent cache.
-        q_eff = jnp.einsum("bthn,chn->bthc", q_nope, w_k
+        q_eff = axon.einsum("bthn,chn->bthc", q_nope, w_k
                            ).astype(c_cache.dtype)
         scale = (dn + dr) ** -0.5
-        s = (jnp.einsum("bthc,bsc->bths", q_eff, c_cache,
+        s = (axon.einsum("bthc,bsc->bths", q_eff, c_cache,
                         preferred_element_type=jnp.float32)
-             + jnp.einsum("bthr,bsr->bths", q_pe.astype(pe_cache.dtype),
+             + axon.einsum("bthr,bsr->bths", q_pe.astype(pe_cache.dtype),
                           pe_cache, preferred_element_type=jnp.float32)) * scale
         mask = jnp.arange(c_cache.shape[1]) <= pos
         s = jnp.where(mask[None, None, None, :], s, _NEG_INF)
         attn = jax.nn.softmax(s, axis=-1)
-        ctx = jnp.einsum("bths,bsc->bthc", attn.astype(c_cache.dtype),
+        ctx = axon.einsum("bths,bsc->bthc", attn.astype(c_cache.dtype),
                          c_cache, preferred_element_type=jnp.float32)
-        out = jnp.einsum("bthc,chv->bthv", ctx.astype(w_v.dtype), w_v,
+        out = axon.einsum("bthc,chv->bthv", ctx.astype(w_v.dtype), w_v,
                          preferred_element_type=jnp.float32)
         out = out.astype(x.dtype)
         new_cache = {"c": c_cache, "k_pe": pe_cache, "len": pos + 1}
 
     out = out.reshape(B, S, h * dv)
-    out = jnp.einsum("bse,ed->bsd", out, p["wo"])
+    out = axon.einsum("bse,ed->bsd", out, p["wo"])
     return constrain(out, "batch", None, None), new_cache
 
 

@@ -17,6 +17,7 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
+from repro import axon
 from repro.models.layers import Params, _dense_init, init_rmsnorm, rmsnorm
 from repro.parallel.sharding import constrain
 
@@ -43,7 +44,7 @@ def conv1d_step(x_t: jax.Array, conv_state: jax.Array, w: jax.Array,
                 b: jax.Array) -> tuple[jax.Array, jax.Array]:
     """x_t: (B, C); conv_state: (B, K-1, C) of previous inputs."""
     window = jnp.concatenate([conv_state, x_t[:, None]], axis=1)  # (B, K, C)
-    out = jnp.einsum("bkc,kc->bc", window.astype(jnp.float32),
+    out = axon.einsum("bkc,kc->bc", window.astype(jnp.float32),
                      w.astype(jnp.float32)) + b.astype(jnp.float32)
     return out.astype(x_t.dtype), window[:, 1:]
 
@@ -86,16 +87,16 @@ def _selective_scan(abar: jax.Array, bx: jax.Array) -> jax.Array:
 def mamba1_fwd(p: Params, x: jax.Array, cfg) -> jax.Array:
     B, L, D = x.shape
     di, n = cfg.d_inner, cfg.ssm_state
-    xz = jnp.einsum("bld,de->ble", x, p["in_proj"])
+    xz = axon.einsum("bld,de->ble", x, p["in_proj"])
     xz = constrain(xz, "batch", None, "model")
     x_in, z = jnp.split(xz, 2, axis=-1)
     x_c = jax.nn.silu(causal_conv1d(x_in, p["conv_w"], p["conv_b"])
                       .astype(jnp.float32)).astype(x.dtype)
 
-    dbc = jnp.einsum("bld,de->ble", x_c, p["x_proj"])
+    dbc = axon.einsum("bld,de->ble", x_c, p["x_proj"])
     dt, b_ssm, c_ssm = jnp.split(dbc, [cfg.dt_rank, cfg.dt_rank + n], axis=-1)
     dt = jax.nn.softplus(
-        jnp.einsum("blr,rd->bld", dt, p["dt_proj"]).astype(jnp.float32)
+        axon.einsum("blr,rd->bld", dt, p["dt_proj"]).astype(jnp.float32)
         + p["dt_bias"].astype(jnp.float32))               # (B, L, di)
     A = -jnp.exp(p["A_log"])                               # (di, n)
 
@@ -103,10 +104,10 @@ def mamba1_fwd(p: Params, x: jax.Array, cfg) -> jax.Array:
     bx = (dt * x_c.astype(jnp.float32))[..., None] * \
         b_ssm.astype(jnp.float32)[:, :, None, :]           # (B, L, di, n)
     h = _selective_scan(abar, bx)                          # (B, L, di, n)
-    y = jnp.einsum("bldn,bln->bld", h, c_ssm.astype(jnp.float32))
+    y = axon.einsum("bldn,bln->bld", h, c_ssm.astype(jnp.float32))
     y = y + p["D"] * x_c.astype(jnp.float32)
     y = (y * jax.nn.silu(z.astype(jnp.float32))).astype(x.dtype)
-    return constrain(jnp.einsum("bld,de->ble", y, p["out_proj"]),
+    return constrain(axon.einsum("bld,de->ble", y, p["out_proj"]),
                      "batch", None, None)
 
 
@@ -122,25 +123,25 @@ def mamba1_step(p: Params, x: jax.Array, cache: Params, cfg
     """x: (B, 1, D) single token."""
     B = x.shape[0]
     n = cfg.ssm_state
-    xz = jnp.einsum("bd,de->be", x[:, 0], p["in_proj"])
+    xz = axon.einsum("bd,de->be", x[:, 0], p["in_proj"])
     x_in, z = jnp.split(xz, 2, axis=-1)
     x_c, conv_state = conv1d_step(x_in, cache["conv"], p["conv_w"], p["conv_b"])
     x_c = jax.nn.silu(x_c.astype(jnp.float32)).astype(x.dtype)
 
-    dbc = jnp.einsum("bd,de->be", x_c, p["x_proj"])
+    dbc = axon.einsum("bd,de->be", x_c, p["x_proj"])
     dt, b_ssm, c_ssm = jnp.split(dbc, [cfg.dt_rank, cfg.dt_rank + n], axis=-1)
     dt = jax.nn.softplus(
-        jnp.einsum("br,rd->bd", dt, p["dt_proj"]).astype(jnp.float32)
+        axon.einsum("br,rd->bd", dt, p["dt_proj"]).astype(jnp.float32)
         + p["dt_bias"].astype(jnp.float32))                # (B, di)
     A = -jnp.exp(p["A_log"])
     abar = jnp.exp(dt[..., None] * A)                      # (B, di, n)
     bx = (dt * x_c.astype(jnp.float32))[..., None] * \
         b_ssm.astype(jnp.float32)[:, None, :]
     h = abar * cache["ssm"] + bx
-    y = jnp.einsum("bdn,bn->bd", h, c_ssm.astype(jnp.float32))
+    y = axon.einsum("bdn,bn->bd", h, c_ssm.astype(jnp.float32))
     y = y + p["D"] * x_c.astype(jnp.float32)
     y = (y * jax.nn.silu(z.astype(jnp.float32))).astype(x.dtype)
-    out = jnp.einsum("bd,de->be", y, p["out_proj"])[:, None]
+    out = axon.einsum("bd,de->be", y, p["out_proj"])[:, None]
     return out, {"conv": conv_state, "ssm": h}
 
 
@@ -217,11 +218,11 @@ def ssd_chunked(x: jax.Array, dt: jax.Array, A: jax.Array, b: jax.Array,
 
     # intra-chunk (quadratic within chunk)
     L_mat = jnp.exp(_segsum(a_t))                          # (B, nc, H, l, l)
-    y_diag = jnp.einsum("bcin,bcjn,bchij,bcjhp->bcihp", cc, bc, L_mat, xdt)
+    y_diag = axon.einsum("bcin,bcjn,bchij,bcjhp->bcihp", cc, bc, L_mat, xdt)
 
     # per-chunk end states
     decay_states = jnp.exp(a_cum[..., -1:] - a_cum)        # (B, nc, H, l)
-    states = jnp.einsum("bcjn,bchj,bcjhp->bchpn", bc, decay_states, xdt)
+    states = axon.einsum("bcjn,bchj,bcjhp->bchpn", bc, decay_states, xdt)
 
     # inter-chunk recurrence
     chunk_decay = jnp.exp(a_cum[..., -1])                  # (B, nc, H)
@@ -239,7 +240,7 @@ def ssd_chunked(x: jax.Array, dt: jax.Array, A: jax.Array, b: jax.Array,
     prev_states = prevs.transpose(1, 0, 2, 3, 4)           # (B, nc, H, P, N)
 
     state_decay_out = jnp.exp(a_cum)                       # (B, nc, H, l)
-    y_off = jnp.einsum("bcin,bchpn,bchi->bcihp", cc, prev_states,
+    y_off = axon.einsum("bcin,bchpn,bchi->bcihp", cc, prev_states,
                        state_decay_out)
 
     y = (y_diag + y_off).reshape(B, nc * chunk, H, P)
@@ -252,13 +253,13 @@ def mamba2_fwd(p: Params, x: jax.Array, cfg) -> jax.Array:
     nh = di // cfg.mamba_headdim
     ph = cfg.mamba_headdim
 
-    z = constrain(jnp.einsum("bld,de->ble", x, p["in_z"]),
+    z = constrain(axon.einsum("bld,de->ble", x, p["in_z"]),
                   "batch", None, "model")
-    x_in = constrain(jnp.einsum("bld,de->ble", x, p["in_x"]),
+    x_in = constrain(axon.einsum("bld,de->ble", x, p["in_x"]),
                      "batch", None, "model")
-    b_ssm = jnp.einsum("bld,de->ble", x, p["in_b"])        # (B, L, n): small
-    c_ssm = jnp.einsum("bld,de->ble", x, p["in_c"])
-    dt = jnp.einsum("bld,de->ble", x, p["in_dt"])
+    b_ssm = axon.einsum("bld,de->ble", x, p["in_b"])        # (B, L, n): small
+    c_ssm = axon.einsum("bld,de->ble", x, p["in_c"])
+    dt = axon.einsum("bld,de->ble", x, p["in_dt"])
 
     x_in = jax.nn.silu(causal_conv1d(x_in, p["conv_x_w"], p["conv_x_b"])
                        .astype(jnp.float32)).astype(x.dtype)
@@ -283,7 +284,7 @@ def mamba2_fwd(p: Params, x: jax.Array, cfg) -> jax.Array:
     # scalar sums; the activation itself stays sharded
     y = rmsnorm(p["norm"], y.astype(x.dtype))
     y = constrain(y, "batch", None, "model")
-    return constrain(jnp.einsum("bld,de->ble", y, p["out_proj"]),
+    return constrain(axon.einsum("bld,de->ble", y, p["out_proj"]),
                      "batch", None, None)
 
 
@@ -306,11 +307,11 @@ def mamba2_step(p: Params, x: jax.Array, cache: Params, cfg
     ph = cfg.mamba_headdim
 
     xt = x[:, 0]
-    z = jnp.einsum("bd,de->be", xt, p["in_z"])
-    x_in = jnp.einsum("bd,de->be", xt, p["in_x"])
-    b_ssm = jnp.einsum("bd,de->be", xt, p["in_b"])
-    c_ssm = jnp.einsum("bd,de->be", xt, p["in_c"])
-    dt = jnp.einsum("bd,de->be", xt, p["in_dt"])
+    z = axon.einsum("bd,de->be", xt, p["in_z"])
+    x_in = axon.einsum("bd,de->be", xt, p["in_x"])
+    b_ssm = axon.einsum("bd,de->be", xt, p["in_b"])
+    c_ssm = axon.einsum("bd,de->be", xt, p["in_c"])
+    dt = axon.einsum("bd,de->be", xt, p["in_dt"])
 
     x_in, conv_x = conv1d_step(x_in, cache["conv_x"], p["conv_x_w"],
                                p["conv_x_b"])
@@ -328,11 +329,11 @@ def mamba2_step(p: Params, x: jax.Array, cache: Params, cfg
     xh = x_in.reshape(B, nh, ph).astype(jnp.float32)
     db = dt[..., None, None] * b_ssm.astype(jnp.float32)[:, None, None, :]
     h = cache["ssm"] * dec[..., None, None] + db * xh[..., None]
-    y = jnp.einsum("bhpn,bn->bhp", h, c_ssm.astype(jnp.float32))
+    y = axon.einsum("bhpn,bn->bhp", h, c_ssm.astype(jnp.float32))
     y = y + p["D"][None, :, None] * xh
     y = y.reshape(B, di)
     y = y * jax.nn.silu(z.astype(jnp.float32))
     y = rmsnorm(p["norm"], y.astype(x.dtype)[:, None])[:, 0]
-    out = jnp.einsum("bd,de->be", y, p["out_proj"])[:, None]
+    out = axon.einsum("bd,de->be", y, p["out_proj"])[:, None]
     return out, {"conv_x": conv_x, "conv_b": conv_b, "conv_c": conv_c,
                  "ssm": h}

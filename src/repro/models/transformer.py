@@ -22,6 +22,7 @@ from typing import Any
 import jax
 import jax.numpy as jnp
 
+from repro import axon
 from repro.configs.base import ModelConfig, StageCfg
 from repro.models import layers as L
 from repro.models import mla as MLA
@@ -297,7 +298,7 @@ def chunked_ce_loss(params: Params, hidden: jax.Array, labels: jax.Array,
     @functools.partial(jax.checkpoint, prevent_cse=False)
     def one(args):
         h, y, m = args
-        logits = jnp.einsum("bsd,dv->bsv", h, head).astype(jnp.float32)
+        logits = axon.einsum("bsd,dv->bsv", h, head).astype(jnp.float32)
         logits = constrain(logits, "batch", None, "model")
         logits = jnp.where(pad_mask[None, None, :], -1e30, logits)
         logz = jax.nn.logsumexp(logits, axis=-1)
@@ -328,7 +329,7 @@ def loss_fn(params: Params, batch: dict, cfg: ModelConfig
         emb_next = jnp.take(params["embed"], batch["tokens"][:, 1:], axis=0)
         h_in = jnp.concatenate(
             [hidden[:, :-1], emb_next.astype(hidden.dtype)], axis=-1)
-        h_mtp = jnp.einsum("bsd,de->bse", h_in, params["mtp"]["proj"])
+        h_mtp = axon.einsum("bsd,de->bse", h_in, params["mtp"]["proj"])
         positions = jnp.arange(h_mtp.shape[1])
         h_mtp, _, _ = block_fwd(params["mtp"]["block"], h_mtp, cfg,
                                 StageCfg(1, "dense", attn="mla"),
@@ -369,7 +370,7 @@ def decode_step(params: Params, caches: Params, batch: dict,
         x, nc = stage_decode(p_s, x, c_s, cfg, s, positions=positions)
         new_stage_caches.append(nc)
     x = L.rmsnorm(params["final_norm"], x)
-    logits = jnp.einsum("bsd,dv->bsv", x, _lm_head(params, cfg))
+    logits = axon.einsum("bsd,dv->bsv", x, _lm_head(params, cfg))
     logits = jnp.where(jnp.arange(cfg.vocab_pad) >= cfg.vocab, -1e30,
                        logits.astype(jnp.float32))[..., : cfg.vocab_pad]
     logits = logits[..., : cfg.vocab]

@@ -16,21 +16,31 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import axon
 from repro.configs.base import ModelConfig
 from repro.models import transformer as T
 
 
-def make_serve_step(cfg: ModelConfig, *, temperature: float = 0.0):
-    """(params, caches, tokens (B,1), rng) -> (next_tokens (B,1), caches)."""
+def make_serve_step(cfg: ModelConfig, *, temperature: float = 0.0,
+                    policy: axon.ExecutionPolicy | None = None):
+    """(params, caches, tokens (B,1), rng) -> (next_tokens (B,1), caches).
+
+    ``policy`` pins the axon execution policy for the whole step at trace
+    time (e.g. ``ExecutionPolicy(backend="pallas")`` to serve through the
+    Axon kernels); None captures the policy current at construction.
+    """
+    pol = policy if policy is not None else axon.current_policy()
 
     def serve_step(params, caches, batch, rng):
-        logits, caches = T.decode_step(params, caches, batch, cfg)
-        logits = logits[:, -1]
-        if temperature > 0:
-            nxt = jax.random.categorical(rng, logits / temperature, axis=-1)
-        else:
-            nxt = jnp.argmax(logits, axis=-1)
-        return nxt[:, None].astype(jnp.int32), caches
+        with axon.policy(pol):
+            logits, caches = T.decode_step(params, caches, batch, cfg)
+            logits = logits[:, -1]
+            if temperature > 0:
+                nxt = jax.random.categorical(rng, logits / temperature,
+                                             axis=-1)
+            else:
+                nxt = jnp.argmax(logits, axis=-1)
+            return nxt[:, None].astype(jnp.int32), caches
 
     return serve_step
 
@@ -46,13 +56,15 @@ class ServeEngine:
     """Wave-batched generation over fixed slots."""
 
     def __init__(self, params, cfg: ModelConfig, *, batch_slots: int = 8,
-                 max_len: int = 512, temperature: float = 0.0, seed: int = 0):
+                 max_len: int = 512, temperature: float = 0.0, seed: int = 0,
+                 policy: axon.ExecutionPolicy | None = None):
         self.params = params
         self.cfg = cfg
         self.batch_slots = batch_slots
         self.max_len = max_len
         self.rng = jax.random.PRNGKey(seed)
-        self._step = jax.jit(make_serve_step(cfg, temperature=temperature))
+        self._step = jax.jit(make_serve_step(cfg, temperature=temperature,
+                                             policy=policy))
 
     def generate(self, requests: list[Request]) -> list[list[int]]:
         outputs: list[list[int]] = []

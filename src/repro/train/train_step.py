@@ -13,6 +13,7 @@ from typing import Any
 import jax
 import jax.numpy as jnp
 
+from repro import axon
 from repro.configs.base import ModelConfig
 from repro.models import transformer as T
 from repro.optim import adamw
@@ -35,9 +36,16 @@ def init_train_state(key, cfg: ModelConfig, opt_cfg: adamw.OptConfig,
 
 def make_train_step(cfg: ModelConfig, opt_cfg: adamw.OptConfig, *,
                     microbatches: int = 1, grad_compression: bool = False,
-                    accum_dtype=jnp.float32):
+                    accum_dtype=jnp.float32,
+                    policy: axon.ExecutionPolicy | None = None):
+    """``policy`` pins the axon execution policy for the whole step at trace
+    time (forward and backward contractions both dispatch under it); None
+    captures the policy current at construction."""
+    pol = policy if policy is not None else axon.current_policy()
+
     def loss_of(params, mb):
-        return T.loss_fn(params, mb, cfg)
+        with axon.policy(pol):
+            return T.loss_fn(params, mb, cfg)
 
     def train_step(state: dict, batch: dict) -> tuple[dict, dict]:
         params = state["params"]

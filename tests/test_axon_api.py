@@ -1,0 +1,296 @@
+"""The unified ``repro.axon`` operator API: policy scoping, registry
+dispatch, mapper caching, and numerical parity with jnp.einsum across the
+contraction specs the model zoo actually uses."""
+import warnings
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import axon
+from repro.axon.policy import ExecutionPolicy
+from repro.core.dataflows import Dataflow
+from repro.core import mapper
+
+KEY = jax.random.PRNGKey(0)
+
+
+def _rand(shape, dtype=jnp.float32, seed=0):
+    return jax.random.normal(jax.random.PRNGKey(seed), shape,
+                             jnp.float32).astype(dtype)
+
+
+class TestPolicy:
+    def test_default_policy(self):
+        p = axon.current_policy()
+        assert p.backend == "auto"
+        assert p.block is None and p.order is None
+
+    def test_context_nesting_and_restoration(self):
+        base = axon.current_policy()
+        with axon.policy(backend="interpret") as p1:
+            assert axon.current_policy() is p1
+            assert p1.backend == "interpret"
+            with axon.policy(block=(64, 64, 64), order=Dataflow.WS) as p2:
+                cur = axon.current_policy()
+                assert cur is p2
+                # inner scope inherits the outer backend
+                assert cur.backend == "interpret"
+                assert cur.block == (64, 64, 64)
+                assert cur.order is Dataflow.WS
+            assert axon.current_policy() is p1
+            assert axon.current_policy().block is None
+        assert axon.current_policy() is base
+
+    def test_context_restores_on_exception(self):
+        base = axon.current_policy()
+        with pytest.raises(RuntimeError):
+            with axon.policy(backend="xla"):
+                raise RuntimeError("boom")
+        assert axon.current_policy() is base
+
+    def test_full_policy_object_and_overrides(self):
+        pol = ExecutionPolicy(backend="xla", zero_gate=True)
+        with axon.policy(pol) as p:
+            assert p is pol
+        with axon.policy(pol, backend="interpret") as p:
+            assert p.backend == "interpret" and p.zero_gate
+
+    def test_invalid_backend_rejected(self):
+        with pytest.raises(ValueError):
+            ExecutionPolicy(backend="cuda")
+
+    def test_set_default_policy(self):
+        old = axon.set_default_policy(ExecutionPolicy(backend="xla"))
+        try:
+            assert axon.current_policy().backend == "xla"
+        finally:
+            axon.set_default_policy(old)
+        assert axon.current_policy() is old
+
+    def test_set_default_policy_reaches_other_threads(self):
+        import threading
+        old = axon.set_default_policy(ExecutionPolicy(backend="interpret"))
+        try:
+            seen = []
+            t = threading.Thread(
+                target=lambda: seen.append(axon.current_policy().backend))
+            t.start()
+            t.join()
+            assert seen == ["interpret"]
+        finally:
+            axon.set_default_policy(old)
+
+    def test_force_interpret_override(self):
+        assert ExecutionPolicy(backend="pallas",
+                               force_interpret=False).interpret() is False
+        assert ExecutionPolicy(backend="xla",
+                               force_interpret=True).interpret() is True
+
+    def test_integer_einsum_stays_exact_on_xla(self):
+        # fp32-accumulating kernels are inexact for large ints: must fall back
+        a = jnp.full((4, 8), 2**23, jnp.int32) + jnp.arange(8, dtype=jnp.int32)
+        b = jnp.ones((8, 4), jnp.int32)
+        with axon.policy(backend="interpret"):
+            # shape-wise the spec is kernel-mappable; dtype forces fallback
+            assert axon.explain("mk,kn->mn", a, b)["kind"] in ("gemm", "gemv")
+            out = axon.einsum("mk,kn->mn", a, b)
+        assert (np.asarray(out) == np.asarray(
+            jnp.einsum("mk,kn->mn", a, b))).all()
+
+    def test_unsupported_accum_dtype_raises(self):
+        a, b = _rand((16, 8)), _rand((8, 4), seed=1)
+        with axon.policy(backend="interpret", accum_dtype=jnp.bfloat16):
+            with pytest.raises(NotImplementedError):
+                axon.einsum("mk,kn->mn", a, b)
+
+
+class TestDispatchRouting:
+    """``axon.explain`` reports which registry kernel a spec lands on."""
+
+    def test_projection_is_gemm(self):
+        with axon.policy(backend="interpret"):
+            info = axon.explain("bsd,de->bse", (2, 8, 8), (8, 4))
+        assert info["kind"] == "gemm"
+        assert (info["B"], info["M"], info["K"], info["N"]) == (1, 16, 8, 4)
+
+    def test_small_batch_decode_is_gemv(self):
+        # decode-step projections (M <= 8 rows) ride the streaming kernel
+        with axon.policy(backend="interpret"):
+            info = axon.explain("bd,de->be", (2, 8), (8, 6))
+        assert info["kind"] == "gemv"
+
+    def test_shared_batch_is_vmapped_gemm(self):
+        with axon.policy(backend="interpret"):
+            info = axon.explain("becd,edf->becf", (2, 3, 5, 6), (3, 6, 7))
+        assert info["kind"] == "gemm" and info["vmapped"]
+        assert info["B"] == 3
+
+    def test_vector_is_gemv(self):
+        with axon.policy(backend="interpret"):
+            info = axon.explain("k,kn->n", (16,), (16, 8))
+        assert info["kind"] == "gemv"
+
+    def test_zero_gate_policy_reroutes(self):
+        with axon.policy(backend="interpret", zero_gate=True):
+            info = axon.explain("mk,kn->mn", (32, 16), (16, 8))
+        assert info["kind"] == "zero_gate"
+
+    @pytest.mark.parametrize("spec,shapes", [
+        ("ij,jk->k", ((2, 3), (3, 4))),               # lhs-only label summed
+        ("ij,ij->ij", ((4, 4), (4, 4))),              # elementwise (no K)
+        ("ii->i", ((4, 4),)),                         # trace-like, 1 operand
+        ("ij,jk,kl->il", ((2, 3), (3, 4), (4, 5))),   # 3 operands
+    ])
+    def test_non_matmul_falls_back_to_xla(self, spec, shapes):
+        with axon.policy(backend="interpret"):
+            info = axon.explain(spec, *shapes)
+        assert info["kind"] == "xla"
+
+    def test_xla_backend_short_circuits(self):
+        with axon.policy(backend="xla"):
+            info = axon.explain("mk,kn->mn", (8, 8), (8, 8))
+        assert info["kind"] == "xla"
+
+    def test_registry_lists_kernels(self):
+        from repro.axon import registry
+        for kind in ("gemm", "gemv", "zero_gate", "conv2d", "dwconv",
+                     "xla_einsum"):
+            assert kind in registry.kinds()
+
+
+class TestMapperCache:
+    def test_sweep_runs_once_per_unique_shape(self):
+        mapper.mapper_cache_clear()
+        a, b = _rand((48, 32)), _rand((32, 24), seed=1)
+        with axon.policy(backend="interpret"):
+            for _ in range(5):
+                axon.matmul(a, b)
+        assert mapper.sweep_calls() == 1
+        info = mapper.mapper_cache_info()
+        assert info.misses == 1 and info.hits >= 4
+        # a new shape (or dtype => bytes_per_elem) is a new key
+        with axon.policy(backend="interpret"):
+            axon.matmul(_rand((16, 32)), b)
+            axon.matmul(a.astype(jnp.bfloat16), b.astype(jnp.bfloat16))
+        assert mapper.sweep_calls() == 3
+
+    def test_cached_decision_identical(self):
+        mapper.mapper_cache_clear()
+        from repro.core.dataflows import GemmShape
+        first = mapper.select_tpu_blocking(GemmShape(512, 256, 512))
+        second = mapper.select_tpu_blocking(GemmShape(512, 256, 512))
+        assert first == second
+        assert mapper.sweep_calls() == 1
+
+
+# every matmul-shaped spec the models issue, with representative tiny dims
+MODEL_SPECS = [
+    ("bsd,de->bse", (2, 3, 8), (8, 6)),          # qkv/out projections
+    ("bsd,df->bsf", (2, 3, 8), (8, 10)),         # mlp up/gate
+    ("bsf,fd->bsd", (2, 3, 10), (10, 8)),        # mlp down
+    ("bsd,dv->bsv", (2, 3, 8), (8, 12)),         # lm head
+    ("bsq,qe->bse", (2, 3, 4), (4, 8)),          # mla q_b
+    ("becd,edf->becf", (2, 3, 4, 6), (3, 6, 5)),  # moe expert gemm (EP batch)
+    ("becf,efd->becd", (2, 3, 4, 5), (3, 5, 6)),  # moe down
+    ("bqgrd,bkgd->bqgrk", (1, 3, 2, 2, 4), (1, 5, 2, 4)),  # flash scores
+    ("bqgrk,bkgd->bqgrd", (1, 3, 2, 2, 5), (1, 5, 2, 4)),  # flash values
+    ("bgrd,bkgd->bgrk", (2, 2, 3, 4), (2, 5, 2, 4)),  # decode scores
+    ("bthn,chn->bthc", (2, 1, 2, 3), (4, 2, 3)),  # mla absorbed q_eff
+    ("bthc,bsc->bths", (2, 1, 2, 4), (2, 5, 4)),  # mla latent scores
+    ("bldn,bln->bld", (2, 3, 4, 5), (2, 3, 5)),   # mamba1 C contraction
+    ("bkc,kc->bc", (2, 3, 4), (3, 4)),            # conv1d step
+    ("bd,de->be", (2, 8), (8, 6)),                # decode projections
+    ("blr,rd->bld", (2, 3, 4), (4, 6)),           # mamba1 dt projection
+    ("abc,abc->", (2, 3, 4), (2, 3, 4)),          # full-reduction dot
+]
+
+
+class TestNumericalParity:
+    @pytest.mark.parametrize("spec,sa,sb", MODEL_SPECS)
+    def test_xla_backend_bit_identical(self, spec, sa, sb):
+        a, b = _rand(sa), _rand(sb, seed=1)
+        ref = jnp.einsum(spec, a, b)
+        with axon.policy(backend="xla"):
+            out = axon.einsum(spec, a, b)
+        assert out.dtype == ref.dtype
+        assert (np.asarray(out) == np.asarray(ref)).all()
+
+    @pytest.mark.parametrize("spec,sa,sb", MODEL_SPECS)
+    def test_interpret_backend_allclose(self, spec, sa, sb):
+        a, b = _rand(sa), _rand(sb, seed=1)
+        ref = jnp.einsum(spec, a, b, preferred_element_type=jnp.float32)
+        with axon.policy(backend="interpret"):
+            out = axon.einsum(spec, a, b,
+                              preferred_element_type=jnp.float32)
+        assert out.dtype == ref.dtype
+        np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                                   rtol=2e-5, atol=1e-5)
+
+    def test_bf16_operands_fp32_accumulation(self):
+        a = _rand((2, 3, 32), jnp.bfloat16)
+        b = _rand((32, 8), jnp.bfloat16, seed=1)
+        ref = jnp.einsum("bsd,de->bse", a, b,
+                         preferred_element_type=jnp.float32)
+        with axon.policy(backend="interpret"):
+            out = axon.einsum("bsd,de->bse", a, b,
+                              preferred_element_type=jnp.float32)
+        assert out.dtype == jnp.float32
+        np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                                   rtol=2e-2, atol=2e-2)
+
+    def test_grad_parity_under_interpret(self):
+        a, b = _rand((4, 8)), _rand((8, 6), seed=1)
+
+        def loss_axon(a, b):
+            with axon.policy(backend="interpret"):
+                return (axon.einsum("mk,kn->mn", a, b) ** 2).sum()
+
+        def loss_ref(a, b):
+            return (jnp.einsum("mk,kn->mn", a, b) ** 2).sum()
+
+        ga = jax.grad(loss_axon, argnums=(0, 1))(a, b)
+        gr = jax.grad(loss_ref, argnums=(0, 1))(a, b)
+        for x, y in zip(ga, gr):
+            np.testing.assert_allclose(np.asarray(x), np.asarray(y),
+                                       rtol=2e-4, atol=1e-4)
+
+    def test_jit_with_policy_scope(self):
+        a, b = _rand((2, 3, 8)), _rand((8, 6), seed=1)
+
+        @jax.jit
+        def f(a, b):
+            with axon.policy(backend="interpret"):
+                return axon.einsum("bsd,de->bse", a, b)
+
+        np.testing.assert_allclose(np.asarray(f(a, b)),
+                                   np.asarray(jnp.einsum("bsd,de->bse", a, b)),
+                                   rtol=2e-5, atol=1e-5)
+
+    def test_conv2d_parity(self):
+        x = _rand((1, 10, 10, 4))
+        w = _rand((3, 3, 4, 8), seed=1)
+        with axon.policy(backend="xla"):
+            ref = axon.conv2d(x, w, stride=1, padding=1)
+        with axon.policy(backend="interpret"):
+            out = axon.conv2d(x, w, stride=1, padding=1)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                                   rtol=2e-4, atol=1e-4)
+
+    def test_matmul_front_door(self):
+        a, b = _rand((5, 3, 8)), _rand((8, 4), seed=1)
+        with axon.policy(backend="interpret"):
+            out = axon.matmul(a, b)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(a @ b),
+                                   rtol=2e-5, atol=1e-5)
+
+
+class TestOpsShims:
+    def test_deprecation_warning_and_parity(self):
+        from repro.kernels import ops
+        a, b = _rand((32, 16)), _rand((16, 24), seed=1)
+        with pytest.warns(DeprecationWarning):
+            out = ops.auto_gemm(a, b, interpret=True)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(a @ b),
+                                   rtol=2e-5, atol=1e-5)

@@ -7,8 +7,7 @@ touching SRAM only 1-in-n cycles.
 """
 import numpy as np
 import pytest
-from hypothesis import given, settings
-from hypothesis import strategies as st
+from _hypothesis_compat import given, settings, st
 
 from repro.core.axon_sim import (
     full_tile_cycles,

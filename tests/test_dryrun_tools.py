@@ -126,11 +126,18 @@ class TestParamSpecs:
         assert tp((K("ffn"), K("w_gate")), shape) == (None, None, "fsdp", "model")
 
 
+def _make_mesh(shape, names):
+    """jax.make_mesh across versions: axis_types only exists on newer jax."""
+    axis_type = getattr(jax.sharding, "AxisType", None)
+    if axis_type is not None:
+        return jax.make_mesh(shape, names,
+                             axis_types=(axis_type.Auto,) * len(names))
+    return jax.make_mesh(shape, names)
+
+
 class TestResolveGuards:
     def test_divisibility_guard(self):
-        mesh = jax.make_mesh(
-            (1, 1), ("data", "model"),
-            axis_types=(jax.sharding.AxisType.Auto,) * 2)
+        mesh = _make_mesh((1, 1), ("data", "model"))
         # dims divisible by 1 -> axes kept
         spec = resolve(mesh, ("data", "model"), (8, 8))
         assert spec == jax.sharding.PartitionSpec("data", "model")
@@ -141,9 +148,7 @@ class TestResolveGuards:
 
 class TestShardedBytes:
     def test_exact_accounting(self):
-        mesh = jax.make_mesh(
-            (1,), ("model",),
-            axis_types=(jax.sharding.AxisType.Auto,))
+        mesh = _make_mesh((1,), ("model",))
         from jax.sharding import NamedSharding, PartitionSpec as P
         sds = jax.ShapeDtypeStruct((64, 32), jnp.bfloat16,
                                    sharding=NamedSharding(mesh, P("model")))

@@ -95,11 +95,14 @@ class TestCompression:
 
     def test_compressed_psum_single_axis(self):
         # axis size 1 under shard_map: identity up to quantization error
+        shard_map = getattr(jax, "shard_map", None)
+        if shard_map is None:  # older jax ships it under experimental
+            from jax.experimental.shard_map import shard_map
         mesh = jax.make_mesh((1,), ("pod",))
         x = jax.random.normal(KEY, (128,))
-        f = jax.shard_map(lambda v: compressed_psum(v, "pod"), mesh=mesh,
-                          in_specs=jax.sharding.PartitionSpec(),
-                          out_specs=jax.sharding.PartitionSpec())
+        f = shard_map(lambda v: compressed_psum(v, "pod"), mesh=mesh,
+                      in_specs=jax.sharding.PartitionSpec(),
+                      out_specs=jax.sharding.PartitionSpec())
         out = f(x)
         np.testing.assert_allclose(out, x, atol=float(jnp.abs(x).max()) / 100)
 

@@ -2,8 +2,7 @@
 import math
 
 import pytest
-from hypothesis import given, settings
-from hypothesis import strategies as st
+from _hypothesis_compat import given, settings, st
 
 from repro.core.dataflows import ALL_DATAFLOWS, Dataflow, GemmShape, map_gemm
 from repro.core.runtime_model import (
