@@ -1,0 +1,145 @@
+"""Mixed-length serving benchmark: wave vs continuous batching.
+
+Runs the same interleaved short/long workload (the shape that triggers wave
+batching's head-of-line blocking) through ``WaveServeEngine`` and the
+continuous ``ServeEngine``, and emits ``BENCH_serve.json``:
+
+  {"workload": {...},
+   "wave":       {"tokens_per_s", "wall_s", "p50_latency_s", "p99_latency_s"},
+   "continuous": {... + "steps"},
+   "speedup_tokens_per_s": ...}
+
+Latency is per-request completion time from benchmark start (all requests
+arrive at t=0).  For the wave engine, every request in a wave completes when
+its wave does, so latency is measured per wave group.
+
+Usage:
+  PYTHONPATH=src python benchmarks/serve_bench.py [--smoke] [--out PATH]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+
+import jax
+import numpy as np
+
+from repro.configs import ARCH_IDS, get_config
+from repro.models import transformer as T
+from repro.serve.engine import Request, ServeEngine, WaveServeEngine
+
+
+def build_workload(cfg, *, n_requests: int, short_len: int, long_len: int,
+                   short_new: int, long_new: int, seed: int = 1
+                   ) -> list[Request]:
+    """Interleave short and long prompts (odd indices are long)."""
+    key = jax.random.PRNGKey(seed)
+    reqs = []
+    for i in range(n_requests):
+        key, sub = jax.random.split(key)
+        plen = long_len if i % 2 else short_len
+        mnew = long_new if i % 2 else short_new
+        prompt = jax.random.randint(sub, (plen,), 2, cfg.vocab)
+        reqs.append(Request(prompt=[int(t) for t in prompt],
+                            max_new_tokens=mnew))
+    return reqs
+
+
+def run_wave(engine: WaveServeEngine, reqs) -> dict:
+    slots = engine.batch_slots
+    lat = np.zeros(len(reqs))
+    outs = []
+    t0 = time.perf_counter()
+    for i in range(0, len(reqs), slots):
+        outs.extend(engine.generate(reqs[i: i + slots]))
+        lat[i: i + slots] = time.perf_counter() - t0   # wave-granular
+    wall = time.perf_counter() - t0
+    n_tok = sum(len(o) for o in outs)
+    return {
+        "tokens": n_tok,
+        "wall_s": round(wall, 4),
+        "tokens_per_s": round(n_tok / wall, 2),
+        "p50_latency_s": round(float(np.percentile(lat, 50)), 4),
+        "p99_latency_s": round(float(np.percentile(lat, 99)), 4),
+    }
+
+
+def run_continuous(engine: ServeEngine, reqs) -> dict:
+    engine.generate(reqs)
+    st = engine.last_stats
+    lat = np.array([r["latency_s"] for r in st["requests"]])
+    return {
+        "tokens": st["generated_tokens"],
+        "wall_s": round(st["wall_s"], 4),
+        "tokens_per_s": round(st["tokens_per_s"], 2),
+        "p50_latency_s": round(float(np.percentile(lat, 50)), 4),
+        "p99_latency_s": round(float(np.percentile(lat, 99)), 4),
+        "steps": st["steps"],
+        "prefill_chunk": engine.prefill_chunk,
+    }
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=list(ARCH_IDS), default="yi-9b")
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny workload for CI (CPU, seconds not minutes)")
+    ap.add_argument("--requests", type=int, default=16)
+    ap.add_argument("--slots", type=int, default=4)
+    ap.add_argument("--prefill-chunk", type=int, default=16)
+    ap.add_argument("--out", default="benchmarks/results/BENCH_serve.json")
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch, reduced=True)
+    params = T.init_params(jax.random.PRNGKey(0), cfg)
+    if args.smoke:
+        n_req, short_len, long_len = min(args.requests, 8), 4, 16
+        short_new, long_new = 4, 12
+    else:
+        n_req, short_len, long_len = args.requests, 8, 48
+        short_new, long_new = 8, 32
+    reqs = build_workload(cfg, n_requests=n_req, short_len=short_len,
+                          long_len=long_len, short_new=short_new,
+                          long_new=long_new)
+    max_len = long_len + long_new + 1
+
+    wave_engine = WaveServeEngine(params, cfg, batch_slots=args.slots,
+                                  max_len=max_len)
+    cont_engine = ServeEngine(params, cfg, batch_slots=args.slots,
+                              max_len=max_len,
+                              prefill_chunk=args.prefill_chunk)
+    # warm both engines' jit caches (all step shapes) so compile time is
+    # excluded from the comparison
+    warm = reqs[: min(args.slots + 1, len(reqs))]
+    run_wave(wave_engine, warm)
+    run_continuous(cont_engine, warm)
+
+    wave = run_wave(wave_engine, reqs)
+    cont = run_continuous(cont_engine, reqs)
+    result = {
+        "arch": cfg.name,
+        "workload": {
+            "requests": n_req, "slots": args.slots,
+            "short": {"prompt": short_len, "max_new": short_new},
+            "long": {"prompt": long_len, "max_new": long_new},
+            "interleaved": True, "smoke": args.smoke,
+        },
+        "wave": wave,
+        "continuous": cont,
+        "speedup_tokens_per_s": round(
+            cont["tokens_per_s"] / wave["tokens_per_s"], 3),
+    }
+    os.makedirs(os.path.dirname(args.out) or ".", exist_ok=True)
+    with open(args.out, "w") as f:
+        json.dump(result, f, indent=1)
+    print(json.dumps(result, indent=1))
+    print(f"\nwrote {args.out}; continuous is "
+          f"{result['speedup_tokens_per_s']:.2f}x wave tokens/s "
+          f"(p99 latency {wave['p99_latency_s']:.2f}s -> "
+          f"{cont['p99_latency_s']:.2f}s)")
+
+
+if __name__ == "__main__":
+    main()

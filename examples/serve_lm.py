@@ -1,4 +1,10 @@
-"""Serve a small model with batched requests through the cached decode path.
+"""Serve a small model with continuous batching through the cached decode path.
+
+A mixed-length workload (short prompts interleaved with 3x-longer ones) is
+exactly where wave batching stalls: every slot waits for the longest request
+of its wave.  The continuous engine admits requests into independent slots,
+teacher-forces prompts a chunk at a time, and backfills each slot the moment
+its request finishes -- compare the two engines' tokens/s below.
 
 Run: PYTHONPATH=src python examples/serve_lm.py
 """
@@ -8,25 +14,37 @@ import jax
 
 from repro.configs import get_config
 from repro.models import transformer as T
-from repro.serve.engine import Request, ServeEngine
+from repro.serve.engine import Request, ServeEngine, WaveServeEngine
 
 cfg = get_config("mixtral-8x7b", reduced=True)   # SWA + MoE decode path
 params = T.init_params(jax.random.PRNGKey(0), cfg)
-engine = ServeEngine(params, cfg, batch_slots=4, max_len=64, temperature=0.8)
 
 key = jax.random.PRNGKey(1)
 reqs = []
 for i in range(8):
     key, sub = jax.random.split(key)
-    plen = 4 + int(jax.random.randint(sub, (), 0, 5))
+    plen = 4 if i % 2 == 0 else 12               # mixed short/long prompts
     prompt = jax.random.randint(sub, (plen,), 2, cfg.vocab)
     reqs.append(Request(prompt=[int(t) for t in prompt], max_new_tokens=12))
 
-t0 = time.time()
+engine = ServeEngine(params, cfg, batch_slots=4, max_len=64,
+                     prefill_chunk=8, temperature=0.8)
+engine.generate(reqs[:4])                        # warm the jit caches
 outs = engine.generate(reqs)
-dt = time.time() - t0
-n_tok = sum(len(o) for o in outs)
+stats = engine.last_stats
+
 for i, o in enumerate(outs):
     print(f"req{i} ({len(reqs[i].prompt)}-token prompt) -> {o}")
-print(f"{n_tok} tokens in {dt:.2f}s ({n_tok / dt:.1f} tok/s on CPU, "
-      f"wave-batched across 4 slots)")
+print(f"continuous: {stats['generated_tokens']} tokens in "
+      f"{stats['wall_s']:.3f}s ({stats['tokens_per_s']:.1f} tok/s, "
+      f"{stats['steps']} steps across 4 slots)")
+
+wave = WaveServeEngine(params, cfg, batch_slots=4, max_len=64,
+                       temperature=0.8)
+wave.generate(reqs[:4])                          # warm (full-wave shape)
+t0 = time.time()
+wave_outs = wave.generate(reqs)
+dt = time.time() - t0
+n_tok = sum(len(o) for o in wave_outs)
+print(f"wave baseline: {n_tok} tokens in {dt:.3f}s ({n_tok / dt:.1f} tok/s, "
+      f"stalls on the 12-token prompts)")

@@ -273,16 +273,40 @@ def _xla_einsum(spec, *operands, precision=None, preferred_element_type=None):
 
 
 @functools.lru_cache(maxsize=None)
-def _conv_callable(fn, **static_kwargs):
-    return jax.jit(functools.partial(fn, **static_kwargs))
+def _conv_callable(fn, ref_fn, *, stride, padding, out_dtype, **block_kwargs):
+    """Kernel-path conv with a custom VJP.
+
+    Forward runs the Pallas kernel; backward runs the exact VJP of the XLA
+    reference (the same mathematical function), so ``jax.grad`` through the
+    ``pallas``/``interpret`` backends matches the ``xla`` backend without the
+    kernels needing their own transpose rules."""
+    kernel = functools.partial(fn, stride=stride, padding=padding,
+                               out_dtype=out_dtype, **block_kwargs)
+
+    @jax.custom_vjp
+    def conv(x, w):
+        return kernel(x, w)
+
+    def fwd(x, w):
+        return conv(x, w), (x, w)
+
+    def bwd(res, g):
+        x, w = res
+        _, vjp = jax.vjp(
+            lambda xx, ww: ref_fn(xx, ww, stride=stride, padding=padding,
+                                  out_dtype=out_dtype), x, w)
+        return vjp(g)
+
+    conv.defvjp(fwd, bwd)
+    return jax.jit(conv)
 
 
 @registry.register("conv2d")
 def _conv2d_impl(x, w, pol: ExecutionPolicy, stride, padding, out_dtype,
                  block_rows=8, block_cout=128, block_cin=512):
     conv = _conv_callable(
-        im2col_conv, stride=stride, padding=padding, block_rows=block_rows,
-        block_cout=block_cout, block_cin=block_cin,
+        im2col_conv, ref.conv2d_ref, stride=stride, padding=padding,
+        block_rows=block_rows, block_cout=block_cout, block_cin=block_cin,
         out_dtype=None if out_dtype is None else jnp.dtype(out_dtype),
         interpret=pol.interpret())
     return conv(x, w)
@@ -298,8 +322,8 @@ def _xla_conv2d(x, w, *, stride, padding, out_dtype):
 def _dwconv_impl(x, w, pol: ExecutionPolicy, stride, padding, out_dtype,
                  block_rows=8, block_c=128):
     conv = _conv_callable(
-        dwconv, stride=stride, padding=padding, block_rows=block_rows,
-        block_c=block_c,
+        dwconv, ref.dwconv_ref, stride=stride, padding=padding,
+        block_rows=block_rows, block_c=block_c,
         out_dtype=None if out_dtype is None else jnp.dtype(out_dtype),
         interpret=pol.interpret())
     return conv(x, w)

@@ -97,10 +97,15 @@ def batch_sharding(mesh, shape_dims):
                               dims=shape_dims)
 
 
-def input_specs(cfg: ModelConfig, shape: ShapeCfg, mesh) -> dict:
-    """ShapeDtypeStructs for the data batch of one step."""
+def input_specs(cfg: ModelConfig, shape: ShapeCfg, mesh, *,
+                seq: int | None = None) -> dict:
+    """ShapeDtypeStructs for the data batch of one step.
+
+    ``seq`` overrides the token width (e.g. the continuous engine's chunked
+    prefill step feeds C tokens/slot into a decode-shaped cell)."""
     B = shape.global_batch
-    S = shape.seq_len if shape.kind != "decode" else 1
+    S = seq if seq is not None else (
+        shape.seq_len if shape.kind != "decode" else 1)
 
     def sds(dims, dtype):
         return jax.ShapeDtypeStruct(dims, dtype,
@@ -169,7 +174,10 @@ def make_cache_spec_fn(mesh, cfg: ModelConfig):
             return pre + ("batch", "model", None)
         if name == "ssm" and len(core) == 4:               # mamba2 (B, H, P, N)
             return pre + ("batch", "model", None, None)
-        if name in ("len", "pos") or not core:
+        if name in ("len", "pos") and core:
+            # per-slot position counters live with their slot's cache shard
+            return pre + ("batch",) + (None,) * (len(core) - 1)
+        if not core:
             return (None,) * len(shape)
         return pre + ("batch",) + (None,) * (len(core) - 1)
 
@@ -203,7 +211,8 @@ def opt_spec_fn(param_spec_fn):
 # ---------------------------------------------------------------------------
 
 
-def lower_cell(arch: str, shape_name: str, *, multi_pod: bool) -> dict:
+def lower_cell(arch: str, shape_name: str, *, multi_pod: bool,
+               serve_chunk: int = 0) -> dict:
     cfg = dryrun_config(arch)
     shape = SHAPES[shape_name]
     mesh = make_production_mesh(multi_pod=multi_pod)
@@ -214,6 +223,14 @@ def lower_cell(arch: str, shape_name: str, *, multi_pod: bool) -> dict:
         "mesh": "2x16x16" if multi_pod else "16x16",
         "chips": n_chips, "kind": shape.kind,
     }
+    if serve_chunk and shape.kind == "decode":
+        # clamp to the smallest sliding window, as the engine does -- a
+        # chunk wider than a rolling SWA cache is a shape production never
+        # runs (its scatter would collide modulo the cache size)
+        windows = [min(s.window, shape.seq_len)
+                   for s in cfg.stages if s.window]
+        serve_chunk = max(1, min([serve_chunk, *windows]))
+        result["serve_chunk"] = serve_chunk
     t0 = time.time()
 
     with mesh:
@@ -266,10 +283,6 @@ def lower_cell(arch: str, shape_name: str, *, multi_pod: bool) -> dict:
             lowered = jax.jit(prefill_step).lower(params_sds, batch_sds)
 
         else:  # decode
-            def serve_step(params, caches, batch):
-                logits, caches = T.decode_step(params, caches, batch, cfg)
-                return jnp.argmax(logits[:, -1], axis=-1), caches
-
             caches_shape = jax.eval_shape(
                 lambda: T.init_caches(cfg, shape.global_batch, shape.seq_len,
                                       dtype=jnp.bfloat16))
@@ -278,13 +291,36 @@ def lower_cell(arch: str, shape_name: str, *, multi_pod: bool) -> dict:
             caches_sds = jax.tree.map(
                 lambda s, sh: jax.ShapeDtypeStruct(s.shape, s.dtype, sharding=sh),
                 caches_shape, cache_shardings)
-            batch_sds = input_specs(cfg, shape, mesh)
             result["expected_memory"] = expected_device_bytes(
                 cfg, shape, mesh, params_sds=params_sds, cache_sds=caches_sds)
-            lowered = jax.jit(
-                serve_step, donate_argnums=(1,),
-                out_shardings=(None, cache_shardings),
-            ).lower(params_sds, caches_sds, batch_sds)
+            if serve_chunk:
+                # the continuous engine's chunked-prefill step: C teacher-
+                # forced tokens per slot with a per-slot validity mask
+                B, C = shape.global_batch, serve_chunk
+
+                def chunk_step(params, caches, batch, valid):
+                    logits, caches = T.prefill_step(params, caches, batch,
+                                                    valid, cfg)
+                    return jnp.argmax(logits[:, -1], axis=-1), caches
+
+                batch_sds = input_specs(cfg, shape, mesh, seq=C)
+                valid_sds = jax.ShapeDtypeStruct(
+                    (B, C), jnp.bool_,
+                    sharding=batch_sharding(mesh, (B, C)))
+                lowered = jax.jit(
+                    chunk_step, donate_argnums=(1,),
+                    out_shardings=(None, cache_shardings),
+                ).lower(params_sds, caches_sds, batch_sds, valid_sds)
+            else:
+                def serve_step(params, caches, batch):
+                    logits, caches = T.decode_step(params, caches, batch, cfg)
+                    return jnp.argmax(logits[:, -1], axis=-1), caches
+
+                batch_sds = input_specs(cfg, shape, mesh)
+                lowered = jax.jit(
+                    serve_step, donate_argnums=(1,),
+                    out_shardings=(None, cache_shardings),
+                ).lower(params_sds, caches_sds, batch_sds)
 
         result["lower_s"] = round(time.time() - t0, 1)
         t1 = time.time()
@@ -316,6 +352,8 @@ def lower_cell(arch: str, shape_name: str, *, multi_pod: bool) -> dict:
         result["memory"]["fits_16GiB_tpu_adjusted"] = bool(adj < 16 * 1024**3)
 
         ca = compiled.cost_analysis() or {}
+        if isinstance(ca, (list, tuple)):       # jax < 0.5: one dict/device
+            ca = ca[0] if ca else {}
         result["cost"] = {
             # NOTE: XLA counts while bodies once -- see 'corrected' below.
             "flops_per_device": float(ca.get("flops", -1)),
@@ -417,6 +455,10 @@ def main() -> None:
     ap.add_argument("--shape", choices=list(SHAPES))
     ap.add_argument("--multi-pod", action="store_true")
     ap.add_argument("--all", action="store_true")
+    ap.add_argument("--serve-chunk", type=int, default=0,
+                    help="decode cells: lower the continuous engine's "
+                         "chunked prefill step (C tokens/slot) instead of "
+                         "the one-token decode step")
     ap.add_argument("--out", default="benchmarks/results/dryrun")
     ap.add_argument("--set", action="append", default=[],
                     help="config override, e.g. --set seq_shard=False "
@@ -435,9 +477,12 @@ def main() -> None:
     failures = 0
     for arch, shape in todo:
         tag = f"{arch}_{shape}_{'2x16x16' if args.multi_pod else '16x16'}"
+        if args.serve_chunk and SHAPES[shape].kind == "decode":
+            tag += f"_chunk{args.serve_chunk}"
         path = os.path.join(args.out, tag + ".json")
         try:
-            res = lower_cell(arch, shape, multi_pod=args.multi_pod)
+            res = lower_cell(arch, shape, multi_pod=args.multi_pod,
+                             serve_chunk=args.serve_chunk)
             print(f"[ok] {tag}: compile={res['compile_s']}s "
                   f"live={res['memory']['live_bytes_per_device']/2**30:.2f}GiB "
                   f"coll={res['collectives']['total_bytes']/2**20:.1f}MiB")

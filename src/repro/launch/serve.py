@@ -1,40 +1,72 @@
-"""Serving launcher: batched greedy/temperature generation demo."""
+"""Serving launcher: continuous-batching (or wave-batched) generation demo."""
 from __future__ import annotations
 
 import argparse
 
 import jax
+import numpy as np
 
 from repro.configs import ARCH_IDS, get_config
 from repro.models import transformer as T
-from repro.serve.engine import Request, ServeEngine
+from repro.serve.engine import (
+    QUEUE_POLICIES,
+    Request,
+    ServeEngine,
+    WaveServeEngine,
+)
 
 
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", choices=list(ARCH_IDS), default="yi-9b")
     ap.add_argument("--reduced", action="store_true", default=True)
+    ap.add_argument("--engine", choices=("continuous", "wave"),
+                    default="continuous")
     ap.add_argument("--requests", type=int, default=8)
     ap.add_argument("--prompt-len", type=int, default=8)
+    ap.add_argument("--mixed", action="store_true",
+                    help="alternate short/3x-long prompts (shows the "
+                         "head-of-line win of continuous batching)")
     ap.add_argument("--max-new", type=int, default=16)
+    ap.add_argument("--batch-slots", type=int, default=8)
+    ap.add_argument("--prefill-chunk", type=int, default=16)
+    ap.add_argument("--queue-policy", choices=QUEUE_POLICIES, default="fifo")
     ap.add_argument("--temperature", type=float, default=0.0)
     args = ap.parse_args()
 
     cfg = get_config(args.arch, reduced=args.reduced)
     params = T.init_params(jax.random.PRNGKey(0), cfg)
-    engine = ServeEngine(params, cfg, batch_slots=min(8, args.requests),
-                         max_len=args.prompt_len + args.max_new + 1,
-                         temperature=args.temperature)
+    slots = min(args.batch_slots, args.requests)
+    max_prompt = args.prompt_len * (3 if args.mixed else 1)
+    max_len = max_prompt + args.max_new + 1
     key = jax.random.PRNGKey(1)
     reqs = []
     for i in range(args.requests):
         key, sub = jax.random.split(key)
-        prompt = jax.random.randint(sub, (args.prompt_len,), 2, cfg.vocab)
+        plen = (args.prompt_len * (3 if args.mixed and i % 2 else 1))
+        prompt = jax.random.randint(sub, (plen,), 2, cfg.vocab)
         reqs.append(Request(prompt=[int(t) for t in prompt],
                             max_new_tokens=args.max_new))
+
+    if args.engine == "wave":
+        engine = WaveServeEngine(params, cfg, batch_slots=slots,
+                                 max_len=max_len,
+                                 temperature=args.temperature)
+    else:
+        engine = ServeEngine(params, cfg, batch_slots=slots, max_len=max_len,
+                             prefill_chunk=args.prefill_chunk,
+                             queue_policy=args.queue_policy,
+                             temperature=args.temperature)
     outs = engine.generate(reqs)
     for i, o in enumerate(outs):
-        print(f"req{i}: {o}")
+        print(f"req{i} ({len(reqs[i].prompt)}-token prompt): {o}")
+    stats = getattr(engine, "last_stats", None)
+    if stats:
+        lat = [r["latency_s"] for r in stats["requests"]]
+        print(f"{stats['generated_tokens']} tokens in "
+              f"{stats['wall_s']:.2f}s ({stats['tokens_per_s']:.1f} tok/s, "
+              f"{stats['steps']} steps, p50 latency {np.percentile(lat, 50):.2f}s, "
+              f"p99 {np.percentile(lat, 99):.2f}s)")
 
 
 if __name__ == "__main__":

@@ -168,44 +168,67 @@ def flash_attention(
     return out[:, :Sq].astype(q.dtype)
 
 
-def decode_attention(
-    q: jax.Array,          # (B, 1, H, dh)
-    k_cache: jax.Array,    # (B, S, KvH, dh)
-    v_cache: jax.Array,    # (B, S, KvH, dv)
-    cache_len: jax.Array,  # () current valid length (positions < cache_len)
+def cached_attention(
+    q: jax.Array,          # (B, T, H, dh) chunk queries
+    k_old: jax.Array,      # (B, S, KvH, dh) cache contents BEFORE this step
+    v_old: jax.Array,      # (B, S, KvH, dv)
+    k_new: jax.Array,      # (B, T, KvH, dh) this step's keys (cache dtype)
+    v_new: jax.Array,      # (B, T, KvH, dv)
     *,
-    window: int = 0,
-    rolling: bool = False,
+    q_pos: jax.Array,      # (B, T) absolute position of each chunk token
+    k_valid: jax.Array,    # (B, T) live-token mask for the chunk
+    start: jax.Array,      # (B,) tokens already in the cache per slot
+    window: int = 0,       # 0 = full attention; >0 = rolling cache of S slots
 ) -> jax.Array:
-    """Single-token attention over a cache.
+    """Chunk attention against a per-slot cache plus the in-chunk keys.
 
-    ``rolling=True``: the cache is a circular buffer of the last ``S`` tokens
-    (SWA) -- every written slot is in-window by construction, so masking is
-    just slot validity.  Otherwise slots are absolute positions.
+    Generalizes single-token decode to T >= 1 teacher-forced tokens per slot
+    with *per-slot* lengths.  Attention runs against the cache as it was
+    BEFORE this step's writes plus the chunk's own keys, so a rolling (SWA)
+    buffer's in-window history is still visible even when the chunk's writes
+    will overwrite those slots.  Masks are per-slot absolute-position masks:
+    query t of slot b sees cache entries at positions <= q_pos[b, t] (inside
+    the sliding window when ``window`` > 0) and earlier valid chunk tokens.
+    Padded queries (k_valid False) produce garbage rows the caller discards.
     """
-    B, _, H, dh = q.shape
-    S, KvH, dv = k_cache.shape[1], k_cache.shape[2], v_cache.shape[-1]
+    B, T, H, dh = q.shape
+    S, KvH, dv = k_old.shape[1], k_old.shape[2], v_old.shape[-1]
     rep = H // KvH
     scale = dh ** -0.5
-    qf = ((q.reshape(B, KvH, rep, dh).astype(jnp.float32) * scale)
-          .astype(k_cache.dtype))
+    qf = ((q.reshape(B, T, KvH, rep, dh).astype(jnp.float32) * scale)
+          .astype(k_old.dtype))
     # match the cache layout (kv-heads over 'model' when divisible; with a
     # seq-sharded cache q stays replicated over 'model' and the scores come
     # out S-sharded)
-    qf = constrain_priority(qf, 1, [1])
+    qf = constrain_priority(qf, 1, [2])
     # keep the cache in its storage dtype; accumulate in fp32 via
     # preferred_element_type (no fp32 copy of the cache is materialized)
-    s = axon.einsum("bgrd,bkgd->bgrk", qf, k_cache,
-                   preferred_element_type=jnp.float32)
-    kv_idx = jnp.arange(S)
-    mask = kv_idx < cache_len
-    if window and not rolling:
-        mask = mask & (kv_idx >= cache_len - window)
-    s = jnp.where(mask[None, None, None, :], s, _NEG_INF)
-    p = jax.nn.softmax(s, axis=-1)
-    out = axon.einsum("bgrk,bkgd->bgrd", p.astype(v_cache.dtype), v_cache,
-                     preferred_element_type=jnp.float32)
-    return out.reshape(B, 1, H, dv).astype(q.dtype)
+    s_old = axon.einsum("btgrd,bsgd->btgrs", qf, k_old,
+                        preferred_element_type=jnp.float32)
+    s_new = axon.einsum("btgrd,bugd->btgru", qf, k_new,
+                        preferred_element_type=jnp.float32)
+    j = jnp.arange(S)
+    if window:
+        # absolute position held by rolling slot j before this step's writes
+        last = start[:, None] - 1                              # (B, 1)
+        abs_old = last - ((last - j[None, :]) % S)             # (B, S)
+        ok_old = ((abs_old >= 0)[:, None, :]
+                  & (abs_old[:, None, :] <= q_pos[:, :, None])
+                  & (abs_old[:, None, :] > q_pos[:, :, None] - window))
+    else:
+        ok_old = ((j[None, :] < start[:, None])[:, None, :]
+                  & (j[None, None, :] <= q_pos[:, :, None]))
+    ok_new = k_valid[:, None, :] & (q_pos[:, None, :] <= q_pos[:, :, None])
+    if window:
+        ok_new = ok_new & (q_pos[:, None, :] > q_pos[:, :, None] - window)
+    s_old = jnp.where(ok_old[:, :, None, None, :], s_old, _NEG_INF)
+    s_new = jnp.where(ok_new[:, :, None, None, :], s_new, _NEG_INF)
+    p = jax.nn.softmax(jnp.concatenate([s_old, s_new], axis=-1), axis=-1)
+    out = (axon.einsum("btgrs,bsgd->btgrd", p[..., :S].astype(v_old.dtype),
+                       v_old, preferred_element_type=jnp.float32)
+           + axon.einsum("btgru,bugd->btgrd", p[..., S:].astype(v_new.dtype),
+                         v_new, preferred_element_type=jnp.float32))
+    return out.reshape(B, T, H, dv).astype(q.dtype)
 
 
 # ---------------------------------------------------------------------------
@@ -234,10 +257,11 @@ def attention_fwd(
     x: jax.Array,                  # (B, S, D)
     cfg,
     *,
-    positions: jax.Array,          # (S,) absolute positions
+    positions: jax.Array,          # (S,) absolute positions; (B, S) w/ cache
     window: int = 0,
-    cache: Params | None = None,   # decode: {"k","v","len"}
+    cache: Params | None = None,   # cached: {"k","v","len"} (len per slot)
     exact_causal: bool = False,
+    valid: jax.Array | None = None,  # (B, S) live-token mask (cached path)
 ) -> tuple[jax.Array, Params | None]:
     B, S, D = x.shape
     h, kv, dh = cfg.n_heads, cfg.n_kv, cfg.d_head
@@ -260,19 +284,26 @@ def attention_fwd(
         out = flash_attention(q, k, v, causal=True, window=window,
                               exact_causal=exact_causal)
     else:
-        # single-token decode: insert into the (rolling, if SWA) cache, attend
-        pos = cache["len"]
+        # slot-cached path: decode (S=1) or a teacher-forced prefill chunk.
+        # ``len`` is per-slot; writes for padded tokens are dropped so
+        # inactive serving lanes cannot pollute live ones.
+        pos0 = cache["len"]                                   # (B,)
         size = cache["k"].shape[1]
-        slot = pos % size if window else pos
-        # match the cache layout before the insert so the
-        # dynamic-update-slice never triggers a full cache reshard
+        v_mask = valid if valid is not None else jnp.ones((B, S), bool)
+        # match the cache layout before the insert so the scatter never
+        # triggers a full cache reshard
         k_in = constrain_priority(k.astype(cache["k"].dtype), 1, [2])
         v_in = constrain_priority(v.astype(cache["v"].dtype), 1, [2])
-        k_cache = jax.lax.dynamic_update_slice(cache["k"], k_in, (0, slot, 0, 0))
-        v_cache = jax.lax.dynamic_update_slice(cache["v"], v_in, (0, slot, 0, 0))
-        out = decode_attention(q, k_cache, v_cache, pos + 1,
-                               window=window, rolling=bool(window))
-        new_cache = {"k": k_cache, "v": v_cache, "len": pos + 1}
+        out = cached_attention(q, cache["k"], cache["v"], k_in, v_in,
+                               q_pos=positions, k_valid=v_mask, start=pos0,
+                               window=window)
+        slot = positions % size if window else positions      # (B, S)
+        slot = jnp.where(v_mask, slot, size)                  # OOB -> dropped
+        b_idx = jnp.arange(B)[:, None]
+        k_cache = cache["k"].at[b_idx, slot].set(k_in, mode="drop")
+        v_cache = cache["v"].at[b_idx, slot].set(v_in, mode="drop")
+        new_cache = {"k": k_cache, "v": v_cache,
+                     "len": pos0 + v_mask.sum(-1).astype(pos0.dtype)}
 
     out = out.reshape(B, S, h * dh)
     out = axon.einsum("bse,ed->bsd", out, p["wo"])
@@ -285,7 +316,7 @@ def init_attention_cache(cfg, batch: int, max_len: int, *, window: int = 0,
     return {
         "k": jnp.zeros((batch, size, cfg.n_kv, cfg.d_head), dtype),
         "v": jnp.zeros((batch, size, cfg.n_kv, cfg.d_head), dtype),
-        "len": jnp.zeros((), jnp.int32),
+        "len": jnp.zeros((batch,), jnp.int32),
     }
 
 

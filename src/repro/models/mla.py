@@ -62,7 +62,8 @@ def _project_qkv_latent(p: Params, x: jax.Array, cfg, positions):
 
 def mla_fwd(p: Params, x: jax.Array, cfg, *, positions,
             exact_causal: bool = False,
-            cache: Params | None = None) -> tuple[jax.Array, Params | None]:
+            cache: Params | None = None,
+            valid: jax.Array | None = None) -> tuple[jax.Array, Params | None]:
     B, S, D = x.shape
     h = cfg.n_heads
     dn, dr, dv = cfg.nope_head, cfg.rope_head, cfg.v_head
@@ -80,16 +81,22 @@ def mla_fwd(p: Params, x: jax.Array, cfg, *, positions,
         out = flash_attention(q, k, v, causal=True, exact_causal=exact_causal)
         new_cache = None
     else:
-        # absorbed decode against the compressed cache
-        pos = cache["len"]
-        c_cache = jax.lax.dynamic_update_slice(
-            cache["c"], c.astype(cache["c"].dtype), (0, pos, 0))
-        pe_cache = jax.lax.dynamic_update_slice(
-            cache["k_pe"], k_pe[:, :, 0].astype(cache["k_pe"].dtype),
-            (0, pos, 0))
+        # absorbed decode / chunked prefill against the compressed cache.
+        # ``len`` is per-slot; S >= 1 teacher-forced tokens per step with
+        # padded tokens' writes dropped (mode="drop"), so inactive serving
+        # lanes cannot pollute live ones.  ``positions`` is (B, S) absolute.
+        pos0 = cache["len"]                                   # (B,)
+        S_c = cache["c"].shape[1]
+        v_mask = valid if valid is not None else jnp.ones((B, S), bool)
+        wpos = jnp.where(v_mask, positions, S_c)              # OOB -> dropped
+        b_idx = jnp.arange(B)[:, None]
+        c_cache = cache["c"].at[b_idx, wpos].set(
+            c.astype(cache["c"].dtype), mode="drop")
+        pe_cache = cache["k_pe"].at[b_idx, wpos].set(
+            k_pe[:, :, 0].astype(cache["k_pe"].dtype), mode="drop")
         w_kv = p["kv_b"].reshape(kvl, h, dn + dv)
         w_k, w_v = w_kv[..., :dn], w_kv[..., dn:]
-        # fold k_nope projection into q:  (B,1,h,dn) x (kvl,h,dn) -> (B,1,h,kvl)
+        # fold k_nope projection into q:  (B,S,h,dn) x (kvl,h,dn) -> (B,S,h,kvl)
         # all cache-sized contractions stay in the cache dtype with fp32
         # accumulation -- no fp32 copies of the latent cache.
         q_eff = axon.einsum("bthn,chn->bthc", q_nope, w_k
@@ -99,15 +106,18 @@ def mla_fwd(p: Params, x: jax.Array, cfg, *, positions,
                         preferred_element_type=jnp.float32)
              + axon.einsum("bthr,bsr->bths", q_pe.astype(pe_cache.dtype),
                           pe_cache, preferred_element_type=jnp.float32)) * scale
-        mask = jnp.arange(c_cache.shape[1]) <= pos
-        s = jnp.where(mask[None, None, None, :], s, _NEG_INF)
+        # cache index == absolute position (full attention, no rolling):
+        # per-(slot, token) causal mask over the slot's own written prefix
+        mask = jnp.arange(S_c)[None, None, :] <= positions[:, :, None]
+        s = jnp.where(mask[:, :, None, :], s, _NEG_INF)
         attn = jax.nn.softmax(s, axis=-1)
         ctx = axon.einsum("bths,bsc->bthc", attn.astype(c_cache.dtype),
                          c_cache, preferred_element_type=jnp.float32)
         out = axon.einsum("bthc,chv->bthv", ctx.astype(w_v.dtype), w_v,
                          preferred_element_type=jnp.float32)
         out = out.astype(x.dtype)
-        new_cache = {"c": c_cache, "k_pe": pe_cache, "len": pos + 1}
+        new_cache = {"c": c_cache, "k_pe": pe_cache,
+                     "len": pos0 + v_mask.sum(-1).astype(pos0.dtype)}
 
     out = out.reshape(B, S, h * dv)
     out = axon.einsum("bse,ed->bsd", out, p["wo"])
@@ -118,5 +128,5 @@ def init_mla_cache(cfg, batch: int, max_len: int, dtype=jnp.bfloat16) -> Params:
     return {
         "c": jnp.zeros((batch, max_len, cfg.kv_lora), dtype),
         "k_pe": jnp.zeros((batch, max_len, cfg.rope_head), dtype),
-        "len": jnp.zeros((), jnp.int32),
+        "len": jnp.zeros((batch,), jnp.int32),
     }

@@ -70,24 +70,31 @@ def init_shared_attn(key, cfg: ModelConfig) -> Params:
     }
 
 
-def _attn_apply(p, h, cfg, stage, positions, cache, exact_causal):
+def _attn_apply(p, h, cfg, stage, positions, cache, exact_causal, valid=None):
     if stage.attn == "mla":
         return MLA.mla_fwd(p, h, cfg, positions=positions,
-                           exact_causal=exact_causal, cache=cache)
+                           exact_causal=exact_causal, cache=cache,
+                           valid=valid)
     return L.attention_fwd(p, h, cfg, positions=positions,
                            window=stage.window, cache=cache,
-                           exact_causal=exact_causal)
+                           exact_causal=exact_causal, valid=valid)
 
 
 def block_fwd(p: Params, x: jax.Array, cfg: ModelConfig, stage: StageCfg, *,
-              positions, cache=None, exact_causal=False):
-    """-> (x, new_cache, aux_loss)."""
+              positions, cache=None, exact_causal=False, valid=None):
+    """-> (x, new_cache, aux_loss).
+
+    With ``cache`` the block consumes S >= 1 teacher-forced tokens per slot
+    (S=1: plain decode; S>1: a prefill chunk).  ``valid`` (B, S) marks live
+    tokens -- padded tokens neither write the KV caches nor advance the SSM
+    state, so ragged prompts across slots stay isolated.
+    """
     aux = jnp.zeros((), jnp.float32)
     if stage.block in ("dense", "moe"):
         h = L.rmsnorm(p["ln1"], x)
         a, new_attn_cache = _attn_apply(p["attn"], h, cfg, stage, positions,
                                         None if cache is None else cache["attn"],
-                                        exact_causal)
+                                        exact_causal, valid)
         x = x + a
         h = L.rmsnorm(p["ln2"], x)
         if stage.block == "moe":
@@ -100,28 +107,43 @@ def block_fwd(p: Params, x: jax.Array, cfg: ModelConfig, stage: StageCfg, *,
 
     # ssm blocks
     h = L.rmsnorm(p["ln1"], x)
-    if stage.block == "mamba1":
-        if cache is None:
-            y = SSM.mamba1_fwd(p["mixer"], h, cfg)
-            new_cache = None
-        else:
-            y, new_ssm = SSM.mamba1_step(p["mixer"], h, cache["ssm"], cfg)
-            new_cache = {"ssm": new_ssm}
+    fwd_fn = SSM.mamba1_fwd if stage.block == "mamba1" else SSM.mamba2_fwd
+    step_fn = SSM.mamba1_step if stage.block == "mamba1" else SSM.mamba2_step
+    if cache is None:
+        y = fwd_fn(p["mixer"], h, cfg)
+        new_cache = None
+    elif h.shape[1] == 1 and valid is None:
+        y, new_ssm = step_fn(p["mixer"], h, cache["ssm"], cfg)
+        new_cache = {"ssm": new_ssm}
     else:
-        if cache is None:
-            y = SSM.mamba2_fwd(p["mixer"], h, cfg)
-            new_cache = None
-        else:
-            y, new_ssm = SSM.mamba2_step(p["mixer"], h, cache["ssm"], cfg)
-            new_cache = {"ssm": new_ssm}
+        # chunked teacher-forcing: the recurrent state advances token by
+        # token inside one compiled step, gated so padded tokens leave the
+        # state untouched
+        v_mask = valid if valid is not None else jnp.ones(h.shape[:2], bool)
+
+        def tok(state, inp):
+            ht, vt = inp                                   # (B, D), (B,)
+            yt, new_state = step_fn(p["mixer"], ht[:, None], state, cfg)
+            gated = jax.tree.map(
+                lambda n, o: jnp.where(
+                    vt.reshape((-1,) + (1,) * (n.ndim - 1)), n, o),
+                new_state, state)
+            return gated, yt[:, 0]
+
+        new_ssm, ys = jax.lax.scan(
+            tok, cache["ssm"], (h.transpose(1, 0, 2), v_mask.T))
+        y = ys.transpose(1, 0, 2)
+        new_cache = {"ssm": new_ssm}
     return x + y, new_cache, aux
 
 
-def shared_attn_fwd(p: Params, x, cfg, positions, cache, exact_causal):
+def shared_attn_fwd(p: Params, x, cfg, positions, cache, exact_causal,
+                    valid=None):
     h = L.rmsnorm(p["ln1"], x)
     stage = StageCfg(n_layers=1, block="dense", attn="gqa")
     a, new_cache = L.attention_fwd(p["attn"], h, cfg, positions=positions,
-                                   cache=cache, exact_causal=exact_causal)
+                                   cache=cache, exact_causal=exact_causal,
+                                   valid=valid)
     x = x + a
     x = x + L.mlp_fwd(p["mlp"], L.rmsnorm(p["ln2"], x))
     return x, new_cache
@@ -173,7 +195,7 @@ def stage_fwd(p: Params, x, cfg: ModelConfig, stage: StageCfg, *,
 
 
 def stage_decode(p: Params, x, caches, cfg: ModelConfig, stage: StageCfg, *,
-                 positions):
+                 positions, valid=None):
     every = stage.shared_attn_every
     shared_cache = caches.get("shared") if every else None
 
@@ -184,12 +206,13 @@ def stage_decode(p: Params, x, caches, cfg: ModelConfig, stage: StageCfg, *,
             def with_attn(args):
                 h, sc = args
                 out, new_sc = shared_attn_fwd(p["shared"], h, cfg, positions,
-                                              sc, False)
+                                              sc, False, valid=valid)
                 return out, new_sc
             h, sc = jax.lax.cond(idx % every == 0, with_attn,
                                  lambda a: a, (h, sc))
         h, new_cache, _ = block_fwd(layer_p, h, cfg, stage,
-                                    positions=positions, cache=cache)
+                                    positions=positions, cache=cache,
+                                    valid=valid)
         return (h, sc), new_cache
 
     (x, shared_cache), new_layer_caches = jax.lax.scan(
@@ -350,10 +373,17 @@ def loss_fn(params: Params, batch: dict, cfg: ModelConfig
 def init_caches(cfg: ModelConfig, batch: int, max_len: int,
                 dtype=jnp.bfloat16) -> Params:
     return {
-        "pos": jnp.zeros((), jnp.int32),
+        "pos": jnp.zeros((batch,), jnp.int32),   # per-slot position counters
         "stages": [init_stage_caches(cfg, s, batch, max_len, dtype)
                    for s in cfg.stages],
     }
+
+
+def _head_logits(params: Params, x: jax.Array, cfg: ModelConfig) -> jax.Array:
+    logits = axon.einsum("bsd,dv->bsv", x, _lm_head(params, cfg))
+    logits = jnp.where(jnp.arange(cfg.vocab_pad) >= cfg.vocab, -1e30,
+                       logits.astype(jnp.float32))[..., : cfg.vocab_pad]
+    return logits[..., : cfg.vocab]
 
 
 def decode_step(params: Params, caches: Params, batch: dict,
@@ -364,17 +394,84 @@ def decode_step(params: Params, caches: Params, batch: dict,
     else:
         x = jnp.take(params["embed"], batch["tokens"], axis=0).astype(cfg.cdtype)
     x = constrain(x, "batch", None, None)
-    positions = caches["pos"][None]
+    positions = caches["pos"][:, None]                  # (B, 1) per slot
     new_stage_caches = []
     for p_s, s, c_s in zip(params["stages"], cfg.stages, caches["stages"]):
         x, nc = stage_decode(p_s, x, c_s, cfg, s, positions=positions)
         new_stage_caches.append(nc)
     x = L.rmsnorm(params["final_norm"], x)
-    logits = axon.einsum("bsd,dv->bsv", x, _lm_head(params, cfg))
-    logits = jnp.where(jnp.arange(cfg.vocab_pad) >= cfg.vocab, -1e30,
-                       logits.astype(jnp.float32))[..., : cfg.vocab_pad]
-    logits = logits[..., : cfg.vocab]
-    return logits, {
+    return _head_logits(params, x, cfg), {
         "pos": caches["pos"] + 1,
         "stages": new_stage_caches,
     }
+
+
+def prefill_step(params: Params, caches: Params, batch: dict,
+                 valid: jax.Array, cfg: ModelConfig
+                 ) -> tuple[jax.Array, Params]:
+    """Teacher-forced chunk step: batch['tokens'] (B, C) (or 'embeds'
+    (B, C, D)); ``valid`` (B, C) marks each slot's live tokens and must be a
+    left-aligned prefix per row.
+
+    Processes up to C prompt (or feedback) tokens per slot in one fixed-shape
+    step -- the prefill GeMMs run batched over the whole chunk instead of
+    token-at-a-time.  Padded tokens write nothing (their cache scatters are
+    dropped, SSM state updates are gated) and each slot's position counter
+    advances by its own valid count, so slots at different phases coexist in
+    one batch.  Returns full per-position logits (B, C, vocab); the logits at
+    a slot's last valid token are its next-token distribution.
+
+    Chunk width is output-neutral for dense/SSM stages.  MoE capacity
+    buffers are sized per routed chunk, so with token dropping enabled
+    (finite ``capacity_factor``) WHICH tokens drop can depend on C -- the
+    standard capacity-vs-chunking trade of GShard-style MoE serving.
+    Batch-of-N vs batch-of-1 identity is unaffected (routing is per row).
+    """
+    if cfg.frontend == "audio":
+        x = batch["embeds"].astype(cfg.cdtype)
+    else:
+        x = jnp.take(params["embed"], batch["tokens"], axis=0).astype(cfg.cdtype)
+    x = constrain(x, "batch", None, None)
+    valid = valid.astype(bool)
+    C = x.shape[1]
+    positions = caches["pos"][:, None] + jnp.arange(C)[None, :]   # (B, C)
+    new_stage_caches = []
+    for p_s, s, c_s in zip(params["stages"], cfg.stages, caches["stages"]):
+        x, nc = stage_decode(p_s, x, c_s, cfg, s, positions=positions,
+                             valid=valid)
+        new_stage_caches.append(nc)
+    x = L.rmsnorm(params["final_norm"], x)
+    return _head_logits(params, x, cfg), {
+        "pos": caches["pos"] + valid.sum(-1).astype(jnp.int32),
+        "stages": new_stage_caches,
+    }
+
+
+# attention-content leaves reset_slots leaves in place: with the slot's
+# position counter back at 0 they are unreachable (cached_attention masks
+# j < start / negative rolling abs positions; MLA masks j <= positions) and
+# the next request overwrites them position by position.  Everything else
+# (counters, recurrent SSM/conv state, future cache kinds) is zeroed.
+_STALE_OK = ("k", "v", "c", "k_pe")
+
+
+def reset_slots(caches: Params, mask: jax.Array) -> Params:
+    """Clear per-slot cache state where ``mask`` (B,) is True.
+
+    Zeroes position counters and SSM/conv state along the slot (batch) axis
+    -- leading layer-stack axes are detected from the pytree path -- so a
+    freed slot can be re-admitted without leaking the previous request's
+    state.  KV/latent contents are NOT rewritten (O(layers * batch) instead
+    of a full cache sweep per admission): stale entries are masked out by
+    the zeroed counters until overwritten."""
+    def _clear(path, leaf):
+        names = [getattr(k, "key", None) for k in path]
+        name = next((n for n in reversed(names) if isinstance(n, str)), None)
+        if name in _STALE_OK:
+            return leaf
+        axis = 1 if "layers" in names else 0
+        m = mask.reshape((1,) * axis + (-1,)
+                         + (1,) * (leaf.ndim - axis - 1))
+        return jnp.where(m, jnp.zeros((), leaf.dtype), leaf)
+
+    return jax.tree_util.tree_map_with_path(_clear, caches)

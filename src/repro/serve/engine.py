@@ -1,15 +1,31 @@
-"""Batched serving engine.
+"""Serving engines: continuous batching (default) and wave batching.
+
+``ServeEngine`` is a continuous-batching engine with slot-level scheduling:
+an admission queue feeds ``batch_slots`` independent slots, each running a
+prefill -> decode -> done state machine.  A slot that finishes is backfilled
+from the pending queue on the next step, so short requests never wait for
+long ones (no head-of-line blocking).  All compute flows through ONE
+fixed-shape jitted step (``make_chunk_step``) traced at exactly two token
+widths -- ``prefill_chunk`` while any slot is prefilling, and 1 for pure
+decode -- so recompilation never happens mid-serve.  Prompts are teacher-
+forced a whole chunk per step (batched GeMMs through ``axon.einsum``), and
+per-slot validity masks guarantee inactive or padded lanes never write the
+KV caches of live ones.
+
+``WaveServeEngine`` is the previous wave-batched engine, kept as the
+benchmark baseline: it stalls every slot until the longest request of its
+wave finishes, and its left-padded prompt feed leaks pad tokens into
+shorter prompts' caches (see ``tests/test_serve_engine.py`` for the
+regression the continuous engine fixes).
 
 ``make_serve_step`` builds the jitted one-token step (decode + sampling)
-used both by the engine and by the dry-run's ``serve_step`` lowering.  The
-engine runs wave-style batching: up to ``batch_slots`` requests decode in
-lock-step; prompts are fed through the same cached step (teacher-forcing),
-completed slots stop sampling via an active mask.
+used by the wave engine and the dry-run's ``serve_step`` lowering.
 """
 from __future__ import annotations
 
+import collections
 import dataclasses
-import functools
+import time
 from typing import Any
 
 import jax
@@ -19,6 +35,8 @@ import numpy as np
 from repro import axon
 from repro.configs.base import ModelConfig
 from repro.models import transformer as T
+
+QUEUE_POLICIES = ("fifo", "sjf")
 
 
 def make_serve_step(cfg: ModelConfig, *, temperature: float = 0.0,
@@ -45,6 +63,36 @@ def make_serve_step(cfg: ModelConfig, *, temperature: float = 0.0,
     return serve_step
 
 
+def make_chunk_step(cfg: ModelConfig, *, temperature: float = 0.0,
+                    policy: axon.ExecutionPolicy | None = None):
+    """The continuous engine's unified step.
+
+    (params, caches, tokens (B, C), valid (B, C), rng) ->
+    (next_tokens (B,), caches).  Each slot teacher-forces its valid tokens
+    (a prompt chunk, or the single fed-back token while decoding) and the
+    returned token is sampled from the logits at the slot's LAST valid
+    position -- for a slot finishing its prompt that is its first generated
+    token; for a decoding slot it is the next one.  Slots with no valid
+    tokens are untouched (their sampled token is garbage the engine ignores).
+    """
+    pol = policy if policy is not None else axon.current_policy()
+
+    def chunk_step(params, caches, tokens, valid, rng):
+        with axon.policy(pol):
+            logits, caches = T.prefill_step(params, caches,
+                                            {"tokens": tokens}, valid, cfg)
+            last = jnp.maximum(valid.sum(-1) - 1, 0)
+            sel = jnp.take_along_axis(
+                logits, last[:, None, None], axis=1)[:, 0]      # (B, vocab)
+            if temperature > 0:
+                nxt = jax.random.categorical(rng, sel / temperature, axis=-1)
+            else:
+                nxt = jnp.argmax(sel, axis=-1)
+            return nxt.astype(jnp.int32), caches
+
+    return chunk_step
+
+
 @dataclasses.dataclass
 class Request:
     prompt: list[int]
@@ -52,8 +100,176 @@ class Request:
     eos_id: int = 1
 
 
+@dataclasses.dataclass
+class _Slot:
+    """Per-slot scheduler state (host side)."""
+
+    state: str = "free"                  # free | prefill | decode
+    req_idx: int = -1
+    req: Request | None = None
+    prompt: np.ndarray | None = None
+    fed: int = 0                         # prompt tokens already consumed
+    out: list[int] = dataclasses.field(default_factory=list)
+    last_tok: int = 0
+    t_admit: float = 0.0
+    t_first: float = -1.0
+
+
 class ServeEngine:
-    """Wave-batched generation over fixed slots."""
+    """Continuous-batching generation over ``batch_slots`` slots.
+
+    Scheduler knobs:
+      batch_slots   : number of concurrent request lanes
+      prefill_chunk : prompt tokens teacher-forced per step (clamped to the
+                      smallest sliding window so a chunk never overruns a
+                      rolling SWA cache)
+      queue_policy  : 'fifo' (arrival order) or 'sjf' (shortest prompt first)
+
+    ``generate`` returns outputs in request order; ``last_stats`` holds
+    per-request latency/token counts for the most recent call.
+    """
+
+    def __init__(self, params, cfg: ModelConfig, *, batch_slots: int = 8,
+                 max_len: int = 512, prefill_chunk: int = 16,
+                 temperature: float = 0.0, seed: int = 0,
+                 policy: axon.ExecutionPolicy | None = None,
+                 queue_policy: str = "fifo"):
+        if queue_policy not in QUEUE_POLICIES:
+            raise ValueError(
+                f"queue_policy must be one of {QUEUE_POLICIES}, "
+                f"got {queue_policy!r}")
+        self.params = params
+        self.cfg = cfg
+        self.batch_slots = batch_slots
+        self.max_len = max_len
+        windows = [min(s.window, max_len) for s in cfg.stages if s.window]
+        self.prefill_chunk = max(1, min([prefill_chunk, *windows]))
+        self.queue_policy = queue_policy
+        self.rng = jax.random.PRNGKey(seed)
+        # donate the caches operand: the scatter updates and slot resets run
+        # in place instead of copying the whole KV pytree every step
+        self._step = jax.jit(make_chunk_step(cfg, temperature=temperature,
+                                             policy=policy),
+                             donate_argnums=(1,))
+        self._reset = jax.jit(T.reset_slots, donate_argnums=(0,))
+        self.last_stats: dict[str, Any] | None = None
+
+    # ------------------------------------------------------------- schedule
+
+    def _validate(self, requests):
+        """Fail fast -- before any compute -- on unservable requests."""
+        for idx, req in enumerate(requests):
+            if not req.prompt:
+                raise ValueError(f"request {idx}: empty prompt")
+            if len(req.prompt) + req.max_new_tokens > self.max_len:
+                raise ValueError(
+                    f"request {idx}: prompt ({len(req.prompt)}) + "
+                    f"max_new_tokens ({req.max_new_tokens}) exceeds "
+                    f"max_len={self.max_len}")
+
+    def _admit(self, slots, pending, requests, caches, now):
+        """Backfill free slots from the pending queue (resets their cache)."""
+        reset = np.zeros((self.batch_slots,), bool)
+        for b in range(self.batch_slots):
+            if slots[b].state != "free" or not pending:
+                continue
+            idx = pending.popleft()
+            req = requests[idx]
+            slots[b] = _Slot(state="prefill", req_idx=idx, req=req,
+                             prompt=np.asarray(req.prompt, np.int32),
+                             t_admit=now)
+            reset[b] = True
+        if reset.any():
+            caches = self._reset(caches, jnp.asarray(reset))
+        return caches
+
+    def generate(self, requests: list[Request]) -> list[list[int]]:
+        self._validate(requests)
+        B = self.batch_slots
+        t0 = time.perf_counter()
+        order = list(range(len(requests)))
+        if self.queue_policy == "sjf":
+            order.sort(key=lambda i: len(requests[i].prompt))
+        pending = collections.deque(order)
+        slots = [_Slot() for _ in range(B)]
+        outputs: list[list[int] | None] = [None] * len(requests)
+        per_req: list[dict | None] = [None] * len(requests)
+        caches = T.init_caches(self.cfg, batch=B, max_len=self.max_len,
+                               dtype=jnp.float32)
+        steps = 0
+
+        while pending or any(s.state != "free" for s in slots):
+            caches = self._admit(slots, pending, requests, caches,
+                                 time.perf_counter() - t0)
+            C = (self.prefill_chunk
+                 if any(s.state == "prefill" for s in slots) else 1)
+            tokens = np.zeros((B, C), np.int32)
+            valid = np.zeros((B, C), bool)
+            fed = [0] * B
+            for b, s in enumerate(slots):
+                if s.state == "prefill":
+                    n = min(C, len(s.prompt) - s.fed)
+                    tokens[b, :n] = s.prompt[s.fed: s.fed + n]
+                    valid[b, :n] = True
+                    fed[b] = n
+                elif s.state == "decode":
+                    tokens[b, 0] = s.last_tok
+                    valid[b, 0] = True
+            self.rng, sub = jax.random.split(self.rng)
+            nxt, caches = self._step(self.params, caches,
+                                     jnp.asarray(tokens), jnp.asarray(valid),
+                                     sub)
+            nxt = np.asarray(nxt)
+            steps += 1
+            now = time.perf_counter() - t0
+            for b, s in enumerate(slots):
+                if s.state == "prefill":
+                    s.fed += fed[b]
+                    if s.fed < len(s.prompt):
+                        continue            # prompt not finished: no sample
+                elif s.state != "decode":
+                    continue
+                tok = int(nxt[b])
+                if s.t_first < 0:
+                    s.t_first = now
+                mnew = s.req.max_new_tokens
+                if mnew > 0:
+                    s.out.append(tok)
+                    s.last_tok = tok
+                s.state = "decode"
+                if mnew == 0 or tok == s.req.eos_id or len(s.out) >= mnew:
+                    outputs[s.req_idx] = s.out
+                    per_req[s.req_idx] = {
+                        "prompt_len": len(s.prompt),
+                        "new_tokens": len(s.out),
+                        "admit_s": s.t_admit,
+                        "first_token_s": s.t_first,
+                        "done_s": now,
+                        "latency_s": now,       # all requests arrive at t=0
+                    }
+                    slots[b] = _Slot()          # freed: backfilled next step
+
+        wall = time.perf_counter() - t0
+        n_tok = sum(len(o) for o in outputs if o is not None)
+        self.last_stats = {
+            "requests": per_req,
+            "steps": steps,
+            "wall_s": wall,
+            "generated_tokens": n_tok,
+            "tokens_per_s": n_tok / wall if wall > 0 else 0.0,
+        }
+        return outputs
+
+
+class WaveServeEngine:
+    """Wave-batched generation over fixed slots (the pre-continuous baseline).
+
+    Known limitations, kept for benchmarking: every slot stalls until the
+    longest request in its wave finishes, prompts are left-padded with
+    ``reqs[0].eos_id`` (pad tokens enter shorter prompts' KV caches, and
+    per-request eos ids are ignored for padding).  ``ServeEngine`` fixes
+    both via slot-level masking.
+    """
 
     def __init__(self, params, cfg: ModelConfig, *, batch_slots: int = 8,
                  max_len: int = 512, temperature: float = 0.0, seed: int = 0,
@@ -92,16 +308,22 @@ class ServeEngine:
         max_new = max(r.max_new_tokens for r in reqs)
         done = np.zeros((B,), bool)
         outs: list[list[int]] = [[] for _ in range(B)]
-        for _ in range(max_new):
-            self.rng, sub = jax.random.split(self.rng)
-            tok, caches = self._step(self.params, caches,
-                                     {"tokens": tok}, sub)
-            t_np = np.asarray(tok)[:, 0]
+
+        def record(t_np):
             for b, r in enumerate(reqs):
                 if not done[b] and len(outs[b]) < r.max_new_tokens:
                     outs[b].append(int(t_np[b]))
                     if t_np[b] == r.eos_id:
                         done[b] = True
+
+        # the step after the last prompt token already sampled the first
+        # generated token (the original wave engine discarded it)
+        record(np.asarray(tok)[:, 0])
+        for _ in range(max_new - 1):
             if done.all():
                 break
+            self.rng, sub = jax.random.split(self.rng)
+            tok, caches = self._step(self.params, caches,
+                                     {"tokens": tok}, sub)
+            record(np.asarray(tok)[:, 0])
         return outs

@@ -68,8 +68,61 @@ def test_decode_step(arch):
     assert logits.shape == (B, 1, cfg.vocab)
     assert bool(jnp.isfinite(logits).all()), arch
     logits2, caches = T.decode_step(params, caches, batch, cfg)
-    assert int(caches["pos"]) == 2
+    np.testing.assert_array_equal(np.asarray(caches["pos"]), [2] * B)
     assert bool(jnp.isfinite(logits2).all()), arch
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_prefill_step_matches_decode_loop(arch):
+    """Chunked teacher-forced prefill (ragged valid masks, per-slot
+    positions) must match per-request one-token decode for every arch."""
+    import dataclasses
+    cfg = get_config(arch, reduced=True)
+    cfg = dataclasses.replace(cfg, capacity_factor=64.0)  # no MoE drops
+    params = T.init_params(KEY, cfg)
+    Sq, lens, chunk = 6, [6, 3], 4
+    toks = jax.random.randint(jax.random.PRNGKey(1), (B, Sq), 0, cfg.vocab)
+    embeds = jax.random.normal(jax.random.PRNGKey(2), (B, Sq, cfg.d_model),
+                               jnp.float32) * 0.02
+
+    def batch_of(sl_b, sl_t):
+        out = {"tokens": toks[sl_b, sl_t]}
+        if cfg.frontend == "audio":
+            out["embeds"] = embeds[sl_b, sl_t]
+        return out
+
+    caches = T.init_caches(cfg, batch=B, max_len=Sq + 1, dtype=jnp.float32)
+    got = [[], []]
+    fed = [0, 0]
+    while any(lens[b] - fed[b] for b in range(B)):
+        sl = slice(0, chunk)
+        valid = np.zeros((B, chunk), bool)
+        tk = np.zeros((B, chunk), np.int32)
+        em = np.zeros((B, chunk, cfg.d_model), np.float32)
+        for b in range(B):
+            n = min(chunk, lens[b] - fed[b])
+            tk[b, :n] = np.asarray(toks[b, fed[b]: fed[b] + n])
+            em[b, :n] = np.asarray(embeds[b, fed[b]: fed[b] + n])
+            valid[b, :n] = True
+        batch = {"tokens": jnp.asarray(tk)}
+        if cfg.frontend == "audio":
+            batch["embeds"] = jnp.asarray(em)
+        logits, caches = T.prefill_step(params, caches, batch,
+                                        jnp.asarray(valid), cfg)
+        for b in range(B):
+            n = int(valid[b].sum())
+            got[b] += [np.asarray(logits[b, i]) for i in range(n)]
+            fed[b] += n
+    np.testing.assert_array_equal(np.asarray(caches["pos"]), lens)
+
+    for b in range(B):
+        c1 = T.init_caches(cfg, batch=1, max_len=Sq + 1, dtype=jnp.float32)
+        for t in range(lens[b]):
+            want, c1 = T.decode_step(
+                params, c1, batch_of(slice(b, b + 1), slice(t, t + 1)), cfg)
+            np.testing.assert_allclose(got[b][t], np.asarray(want[0, 0]),
+                                       rtol=2e-3, atol=2e-3,
+                                       err_msg=f"{arch} slot {b} tok {t}")
 
 
 def test_full_configs_param_counts():

@@ -1,0 +1,173 @@
+"""Property-based differential tests: ``axon.einsum``/``matmul`` vs jnp.
+
+Every kernel-dispatched backend must agree with ``jnp.einsum`` on any
+matmul-shaped spec the planner accepts -- and fall back to XLA (still
+agreeing bit-for-bit there) on everything it rejects.  The shared checker is
+driven two ways: a curated example sweep (specs the model zoo uses plus the
+degenerate M=1 / N=1 / K=1 / empty-dim shapes) that always runs, and
+hypothesis fuzzing over random dimension assignments when hypothesis is
+installed (CI); without it the ``@given`` tests skip via
+``_hypothesis_compat``.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from _hypothesis_compat import given, settings, st
+
+from repro import axon
+
+
+def _tol(dtype):
+    return (dict(rtol=2e-2, atol=2e-2) if dtype == jnp.bfloat16
+            else dict(rtol=2e-4, atol=2e-5))
+
+
+def _operand(shape, dtype, seed):
+    return jax.random.normal(jax.random.PRNGKey(seed), shape,
+                             jnp.float32).astype(dtype)
+
+
+def check_spec(spec, lhs_shape, rhs_shape, dtype=jnp.float32,
+               backend="interpret"):
+    """axon.einsum(spec) under ``backend`` must match jnp.einsum in shape,
+    dtype, and values."""
+    a = _operand(lhs_shape, dtype, 0)
+    b = _operand(rhs_shape, dtype, 1)
+    want = jnp.einsum(spec, a, b)
+    with axon.policy(backend=backend):
+        got = axon.einsum(spec, a, b)
+    assert got.shape == want.shape, (spec, got.shape, want.shape)
+    assert got.dtype == want.dtype, (spec, got.dtype, want.dtype)
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32),
+                               err_msg=spec, **_tol(dtype))
+
+
+# specs the model zoo exercises + shapes that stress the planner's edges
+EXAMPLES = [
+    # plain GeMMs, ragged sizes
+    ("mk,kn->mn", (32, 24), (24, 40)),
+    ("mk,kn->mn", (100, 17), (17, 3)),
+    ("mk,kn->nm", (12, 9), (9, 7)),              # transposed output
+    # lhs-only batch folds into M (model projections)
+    ("bsd,df->bsf", (2, 10, 16), (16, 24)),
+    ("bld,de->ble", (3, 5, 8), (8, 12)),
+    # shared batch -> vmapped kernel (MoE expert GeMMs, attention scores)
+    ("bmk,bkn->bmn", (3, 8, 12), (3, 12, 10)),
+    ("becd,edf->becf", (2, 3, 4, 8), (3, 8, 6)),
+    ("bthc,bsc->bths", (2, 3, 4, 8), (2, 5, 8)),
+    # gemv-shaped (decode-step projections)
+    ("k,kn->n", (32,), (32, 16)),
+    ("mk,kn->mn", (1, 64), (64, 32)),            # M=1
+    ("bd,de->be", (4, 16), (16, 24)),            # small-M batch
+    # degenerate dims: planner must reject or handle, result must match
+    ("mk,kn->mn", (5, 1), (1, 7)),               # K=1
+    ("mk,kn->mn", (5, 8), (8, 1)),               # N=1
+    ("mk,kn->mn", (0, 8), (8, 4)),               # empty M
+    ("mk,kn->mn", (5, 0), (0, 4)),               # empty K (zeros result)
+    ("bsd,df->bsf", (2, 0, 8), (8, 4)),          # empty fold dim
+    # non-matmul shapes: XLA fallback must stay bit-identical
+    ("ij,ij->ij", (4, 6), (4, 6)),               # elementwise
+    ("mk,kn->", (3, 4), (4, 5)),                 # full reduction
+    ("ik,jk->ij", (5, 8), (6, 8)),               # shared contraction label
+]
+
+
+class TestEinsumExamples:
+    @pytest.mark.parametrize("spec,lhs,rhs", EXAMPLES,
+                             ids=[e[0] for e in EXAMPLES])
+    @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+    def test_matches_jnp(self, spec, lhs, rhs, dtype):
+        check_spec(spec, lhs, rhs, dtype)
+
+    def test_xla_backend_bit_identical(self):
+        a = _operand((33, 17), jnp.float32, 0)
+        b = _operand((17, 21), jnp.float32, 1)
+        with axon.policy(backend="xla"):
+            got = axon.einsum("mk,kn->mn", a, b)
+        assert (np.asarray(got) == np.asarray(
+            jnp.einsum("mk,kn->mn", a, b))).all()
+
+    def test_preferred_element_type(self):
+        a = _operand((16, 8), jnp.bfloat16, 0)
+        b = _operand((8, 12), jnp.bfloat16, 1)
+        with axon.policy(backend="interpret"):
+            got = axon.einsum("mk,kn->mn", a, b,
+                              preferred_element_type=jnp.float32)
+        want = jnp.einsum("mk,kn->mn", a, b,
+                          preferred_element_type=jnp.float32)
+        assert got.dtype == want.dtype == jnp.float32
+        np.testing.assert_allclose(got, want, rtol=2e-2, atol=2e-2)
+
+
+class TestMatmulExamples:
+    @pytest.mark.parametrize("lhs,rhs", [
+        ((16, 12), (12, 20)),
+        ((1, 12), (12, 20)),                     # gemv row
+        ((2, 5, 12), (12, 20)),                  # leading dims fold
+        ((2, 3, 4, 12), (12, 8)),
+        ((3, 8, 12), (3, 12, 6)),                # shared batch
+        ((12,), (12, 8)),                        # vector lhs
+    ])
+    @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+    def test_matches_jnp_matmul(self, lhs, rhs, dtype):
+        a = _operand(lhs, dtype, 0)
+        b = _operand(rhs, dtype, 1)
+        with axon.policy(backend="interpret"):
+            got = axon.matmul(a, b)
+        want = jnp.matmul(a, b)
+        assert got.shape == want.shape
+        np.testing.assert_allclose(np.asarray(got, np.float32),
+                                   np.asarray(want, np.float32),
+                                   **_tol(dtype))
+
+
+# ----------------------------------------------------------------- hypothesis
+
+_TEMPLATES = [
+    "mk,kn->mn", "mk,kn->nm", "bsd,df->bsf", "bmk,bkn->bmn",
+    "bd,de->be", "abk,kn->abn", "bthc,bsc->bths",
+]
+
+
+class TestEinsumProperties:
+    @given(template=st.sampled_from(_TEMPLATES),
+           dims=st.lists(st.integers(1, 12), min_size=8, max_size=8),
+           dtype=st.sampled_from(["float32", "bfloat16"]))
+    @settings(max_examples=30, deadline=None)
+    def test_random_dims(self, template, dims, dtype):
+        """Any dimension assignment to a planner-shaped spec matches jnp."""
+        inputs, _ = template.split("->")
+        la, lb = inputs.split(",")
+        labels = sorted(set(la + lb))
+        size = {c: dims[i % len(dims)] for i, c in enumerate(labels)}
+        lhs = tuple(size[c] for c in la)
+        rhs = tuple(size[c] for c in lb)
+        check_spec(template, lhs, rhs, jnp.dtype(dtype))
+
+    @given(m=st.integers(0, 9), k=st.integers(0, 9), n=st.integers(0, 9),
+           dtype=st.sampled_from(["float32", "bfloat16"]))
+    @settings(max_examples=25, deadline=None)
+    def test_degenerate_gemm_shapes(self, m, k, n, dtype):
+        """M/K/N of 0 and 1 (GEMV, rank-1, empty) all match jnp."""
+        check_spec("mk,kn->mn", (m, k), (k, n), jnp.dtype(dtype))
+
+    @given(b=st.integers(1, 4), s=st.integers(1, 6), d=st.integers(1, 10),
+           f=st.integers(1, 10))
+    @settings(max_examples=20, deadline=None)
+    def test_projection_property(self, b, s, d, f):
+        """The model-zoo projection spec at arbitrary sizes."""
+        check_spec("bsd,df->bsf", (b, s, d), (d, f))
+
+    @given(lead=st.lists(st.integers(1, 3), min_size=0, max_size=3),
+           k=st.integers(1, 8), n=st.integers(1, 8))
+    @settings(max_examples=20, deadline=None)
+    def test_matmul_lead_dims(self, lead, k, n):
+        """matmul folds arbitrary leading lhs dims like jnp.matmul."""
+        a = _operand(tuple(lead) + (4, k), jnp.float32, 0)
+        b = _operand((k, n), jnp.float32, 1)
+        with axon.policy(backend="interpret"):
+            got = axon.matmul(a, b)
+        np.testing.assert_allclose(got, jnp.matmul(a, b),
+                                   rtol=2e-4, atol=2e-5)
