@@ -1,0 +1,55 @@
+"""A real conv backbone through the Axon im2col path, end to end.
+
+1. trace the runnable ResNet50 and reproduce the paper's Axon-vs-SA
+   throughput/energy comparison from its executed layer shapes
+2. run a reduced ResNet50 forward pass on the Pallas implicit-im2col
+   kernels and bit-compare against the XLA backend
+3. serve a mixed-arrival image workload through the batched VisionEngine
+
+Run: PYTHONPATH=src python examples/vision_infer.py
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro import axon
+from repro.configs import get_vision_config
+from repro.vision import models, trace
+from repro.vision.engine import ImageRequest, VisionEngine
+
+# -- 1. the paper's comparison, traced from the executable model ------------
+full = get_vision_config("resnet50")
+rep = trace.paper_report(full)
+print(f"[trace] {full.name}: {rep['conv_layers']} conv layers, "
+      f"{rep['macs'] / 1e9:.1f} GMACs traced from the runnable model")
+print(f"[model] Axon vs conventional SA on 16x16: "
+      f"{rep['cycle_speedup']:.3f}x cycles, "
+      f"{rep['energy_ratio']:.2f}x DRAM energy "
+      f"({rep['traffic_bytes']['reduction'] * 100:.1f}% operand-traffic cut)")
+
+# -- 2. forward pass: Pallas im2col kernels vs XLA --------------------------
+cfg = get_vision_config("resnet50", reduced=True)
+params = models.init(jax.random.PRNGKey(0), cfg)
+x = jax.random.normal(jax.random.PRNGKey(1),
+                      (2, *cfg.input_hw, cfg.in_channels), cfg.pdtype)
+with axon.policy(backend="pallas"):        # interpret-mode off-TPU
+    logits_pallas = models.apply(params, x, cfg)
+with axon.policy(backend="xla"):
+    logits_xla = models.apply(params, x, cfg)
+np.testing.assert_allclose(logits_pallas, logits_xla, rtol=2e-4, atol=2e-4)
+print(f"[pallas] {cfg.name} forward matches XLA "
+      f"(max err {float(jnp.abs(logits_pallas - logits_xla).max()):.2e})")
+
+# -- 3. mixed-arrival serving through the engine ----------------------------
+rng = np.random.default_rng(0)
+reqs = [ImageRequest(image=rng.normal(size=(*cfg.input_hw, 3))
+                     .astype(np.float32),
+                     arrival_s=0.005 * (i // 3)) for i in range(10)]
+engine = VisionEngine(params, cfg, batch_slots=4)
+engine.warmup()
+outs = engine.infer(reqs)
+st = engine.last_stats
+print(f"[engine] {st['images']} images in {st['steps']} fixed-shape steps: "
+      f"{st['img_per_s']:.0f} img/s, p99 latency {st['p99_latency_s']:.3f}s, "
+      f"occupancy {st['mean_occupancy'] * 100:.0f}%")
+print(f"[engine] top-1 for image 0: class {int(np.argmax(outs[0]))}")

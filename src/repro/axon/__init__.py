@@ -18,6 +18,7 @@ from repro.axon.dispatch import (
     explain,
     matmul,
     plan_contraction,
+    resolve_conv_geometry,
 )
 from repro.axon.policy import (
     BACKENDS,
@@ -41,5 +42,6 @@ __all__ = [
     "matmul",
     "plan_contraction",
     "policy",
+    "resolve_conv_geometry",
     "set_default_policy",
 ]

@@ -302,19 +302,31 @@ def _conv_callable(fn, ref_fn, *, stride, padding, out_dtype, **block_kwargs):
 
 
 @registry.register("conv2d")
-def _conv2d_impl(x, w, pol: ExecutionPolicy, stride, padding, out_dtype,
-                 block_rows=8, block_cout=128, block_cin=512):
+def _conv2d_impl(x, w, pol: ExecutionPolicy, stride, padding, groups,
+                 out_dtype, block_rows=8, block_cout=128, block_cin=512):
     conv = _conv_callable(
         im2col_conv, ref.conv2d_ref, stride=stride, padding=padding,
         block_rows=block_rows, block_cout=block_cout, block_cin=block_cin,
         out_dtype=None if out_dtype is None else jnp.dtype(out_dtype),
         interpret=pol.interpret())
-    return conv(x, w)
+    if groups == 1:
+        return conv(x, w)
+    # Grouped conv: vmap the single-group kernel over the group axis (per-
+    # group GeMMs).  lax semantics: input channels split into `groups`
+    # consecutive blocks; output-channel block g consumes input block g.
+    N, H, W, _ = x.shape
+    kh, kw, cig, cout = w.shape
+    cog = cout // groups
+    xg = jnp.moveaxis(x.reshape(N, H, W, groups, cig), 3, 0)      # (G,N,H,W,cig)
+    wg = jnp.moveaxis(w.reshape(kh, kw, cig, groups, cog), 3, 0)  # (G,kh,kw,cig,cog)
+    outg = jax.vmap(conv)(xg, wg)                                 # (G,N,Ho,Wo,cog)
+    return jnp.moveaxis(outg, 0, 3).reshape(
+        N, outg.shape[2], outg.shape[3], cout)
 
 
 @registry.register("xla_conv2d")
-def _xla_conv2d(x, w, *, stride, padding, out_dtype):
-    return ref.conv2d_ref(x, w, stride=stride, padding=padding,
+def _xla_conv2d(x, w, *, stride, padding, groups, out_dtype):
+    return ref.conv2d_ref(x, w, stride=stride, padding=padding, groups=groups,
                           out_dtype=out_dtype)
 
 
@@ -412,28 +424,94 @@ def matmul(a, b, *, policy: ExecutionPolicy | None = None,
     return jnp.matmul(a, b, preferred_element_type=preferred_element_type)
 
 
-def conv2d(x, w, *, stride: int = 1, padding: int = 0, out_dtype=None,
+def resolve_conv_geometry(stride, padding, kh: int, kw: int, H: int, W: int):
+    """Normalize stride/padding and compute the output spatial dims.
+
+    ``stride``: int or ``(sh, sw)``.  ``padding``: int, ``(ph, pw)``,
+    explicit ``((pt, pb), (pl, pr))`` pairs, or ``"SAME"`` / ``"VALID"``
+    (resolved against the input dims, matching lax's asymmetric SAME split).
+    Returns ``((sh, sw), ((pt, pb), (pl, pr)), H_out, W_out)``; output dims
+    can be <= 0 (zero-area output / kernel larger than the padded input) --
+    callers route those to the XLA reference path.
+    """
+    sh, sw = ref.normalize_stride(stride)
+    if sh < 1 or sw < 1:
+        raise ValueError(f"conv stride must be >= 1, got ({sh}, {sw})")
+    if isinstance(padding, str):
+        kind = padding.upper()
+        if kind == "VALID":
+            pads = ((0, 0), (0, 0))
+        elif kind == "SAME":
+            def _same(size, k, s):
+                total = max((-(-size // s) - 1) * s + k - size, 0)
+                return (total // 2, total - total // 2)
+            pads = (_same(H, kh, sh), _same(W, kw, sw))
+        else:
+            raise ValueError(
+                f"padding must be 'SAME', 'VALID', or explicit amounts, "
+                f"got {padding!r}")
+    else:
+        pads = ref.normalize_padding(padding)
+    (pt, pb), (pleft, pr) = pads
+    if min(pt, pb, pleft, pr) < 0:
+        raise ValueError(f"conv padding must be >= 0, got {pads}")
+    H_out, W_out = ref.conv_out_hw(H, W, kh, kw, (sh, sw), pads)
+    return (sh, sw), pads, H_out, W_out
+
+
+def conv2d(x, w, *, stride=1, padding=0, groups: int = 1, out_dtype=None,
            block_rows: int = 8, block_cout: int = 128, block_cin: int = 512,
            policy: ExecutionPolicy | None = None) -> jax.Array:
     """NHWC x HWIO conv through the on-chip-im2col kernel (or XLA).
 
-    The ``block_*`` tiling kwargs only affect the kernel backends (XLA picks
-    its own tiling)."""
+    ``stride`` is an int or ``(sh, sw)``; ``padding`` an int, ``(ph, pw)``,
+    explicit ``((pt, pb), (pl, pr))`` pairs, or ``"SAME"`` / ``"VALID"``.
+    ``groups > 1`` is a grouped conv (``w: (kh, kw, C_in // groups, C_out)``,
+    lax ``feature_group_count`` semantics), lowered as vmapped per-group
+    GeMMs on the kernel backends.  Shapes the Pallas kernel cannot lower
+    (zero-area outputs, kernel larger than the padded input, empty operands)
+    fall back to the XLA reference path.  The ``block_*`` tiling kwargs only
+    affect the kernel backends (XLA picks its own tiling)."""
     pol = policy if policy is not None else current_policy()
+    kh, kw, cig, cout = w.shape
+    if groups < 1:
+        raise ValueError(f"groups must be >= 1, got {groups}")
+    if x.shape[3] != cig * groups or cout % groups:
+        raise ValueError(
+            f"conv2d: input channels {x.shape[3]} and filter {w.shape} are "
+            f"inconsistent with groups={groups} (need C_in == "
+            f"w.shape[2] * groups and C_out % groups == 0)")
+    stride, padding, H_out, W_out = resolve_conv_geometry(
+        stride, padding, kh, kw, x.shape[1], x.shape[2])
     if pol.resolved_backend() == "xla":
         return registry.get("xla_conv2d")(x, w, stride=stride,
-                                          padding=padding, out_dtype=out_dtype)
-    return registry.get("conv2d")(x, w, pol, stride, padding, out_dtype,
-                                  block_rows=block_rows,
+                                          padding=padding, groups=groups,
+                                          out_dtype=out_dtype)
+    if H_out < 1 or W_out < 1 or 0 in x.shape or 0 in w.shape:
+        # Pallas-ineligible: zero-area output (kernel larger than the padded
+        # input, stride overshoot) or empty operands.  XLA produces the
+        # correctly-shaped (possibly empty) result.
+        return registry.get("xla_conv2d")(x, w, stride=stride,
+                                          padding=padding, groups=groups,
+                                          out_dtype=out_dtype)
+    return registry.get("conv2d")(x, w, pol, stride, padding, groups,
+                                  out_dtype, block_rows=block_rows,
                                   block_cout=block_cout, block_cin=block_cin)
 
 
-def depthwise_conv2d(x, w, *, stride: int = 1, padding: int = 0,
+def depthwise_conv2d(x, w, *, stride=1, padding=0,
                      out_dtype=None, block_rows: int = 8, block_c: int = 128,
                      policy: ExecutionPolicy | None = None) -> jax.Array:
-    """NHWC x (kh, kw, C) depthwise conv (VPU kernel path, no im2col)."""
+    """NHWC x (kh, kw, C) depthwise conv (VPU kernel path, no im2col).
+
+    Accepts the same generalized ``stride`` / ``padding`` as :func:`conv2d`;
+    Pallas-ineligible shapes fall back to the XLA reference path."""
     pol = policy if policy is not None else current_policy()
-    if pol.resolved_backend() == "xla":
+    kh, kw = w.shape[0], w.shape[1]
+    stride, padding, H_out, W_out = resolve_conv_geometry(
+        stride, padding, kh, kw, x.shape[1], x.shape[2])
+    if pol.resolved_backend() == "xla" or H_out < 1 or W_out < 1 \
+            or 0 in x.shape or 0 in w.shape:
         return registry.get("xla_dwconv")(x, w, stride=stride,
                                           padding=padding, out_dtype=out_dtype)
     return registry.get("dwconv")(x, w, pol, stride, padding, out_dtype,

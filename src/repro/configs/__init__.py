@@ -1,8 +1,9 @@
 """Architecture configs: one module per assigned architecture (+ paper's own).
 
-``get_config(name)`` resolves any of the ten assigned ids, e.g.
+``get_config(name)`` resolves any of the ten assigned LM ids, e.g.
 ``get_config("mixtral-8x7b")`` or ``get_config("mixtral-8x7b", reduced=True)``
-for the CPU smoke variant.
+for the CPU smoke variant.  ``get_vision_config(name)`` resolves the conv-net
+model zoo the same way (``repro.vision.models.VisionConfig``).
 """
 from __future__ import annotations
 
@@ -21,9 +22,28 @@ ARCH_IDS = (
     "internvl2-1b",
 )
 
+VISION_IDS = (
+    "resnet50",
+    "yolov3-tiny",
+    "yolov3",
+    "mobilenet-v1",
+)
 
-def get_config(name: str, *, reduced: bool = False):
+
+def _load(name: str, *, reduced: bool):
     mod_name = name.replace("-", "_").replace(".", "_")
     mod = importlib.import_module(f"repro.configs.{mod_name}")
     cfg = mod.CONFIG
     return cfg.reduced() if reduced else cfg
+
+
+def get_config(name: str, *, reduced: bool = False):
+    if name in VISION_IDS:
+        raise ValueError(f"{name!r} is a vision config: use get_vision_config")
+    return _load(name, reduced=reduced)
+
+
+def get_vision_config(name: str, *, reduced: bool = False):
+    if name not in VISION_IDS:
+        raise ValueError(f"unknown vision config {name!r}; one of {VISION_IDS}")
+    return _load(name, reduced=reduced)

@@ -1,0 +1,11 @@
+"""MobileNetV1 @ 224x224 (Howard et al. 2017) -- the paper's Fig. 14
+depthwise (memory-bound) workload; its DW layers are the MOBILENET_DW
+suite in ``repro.core.workloads``."""
+from repro.vision.models import VisionConfig
+
+CONFIG = VisionConfig(
+    name="mobilenet-v1",
+    arch="mobilenet_v1",
+    input_hw=(224, 224),
+    num_classes=1000,
+)

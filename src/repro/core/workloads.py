@@ -5,6 +5,11 @@ depth-wise-conv suites follow Fig. 14's description (MobileNet DW layers and
 selected matrix-vector shapes).  The ResNet50 / YOLOv3 conv layer lists are the
 standard public architectures (He et al. 2016 @224x224; Redmon & Farhadi 2018
 @416x416) used for the Fig. 11 / §5.2.1 traffic & energy numbers.
+
+Every conv table here is cross-validated against shapes traced from the
+*runnable* models in ``repro.vision`` (``vision/trace.py``, exercised by
+``tests/test_vision.py``), so a transcription error in the paper-figure
+inputs fails CI instead of silently skewing the analytic results.
 """
 from __future__ import annotations
 
@@ -131,4 +136,28 @@ def yolov3_convs() -> list[ConvShape]:
         add(52, 256, 128, 1, 1, f"head3.{r}.a")
         add(52, 128, 256, 3, 1, f"head3.{r}.b")
     add(52, 256, 255, 1, 1, "det3")
+    return convs
+
+
+# --- YOLOv3-tiny conv stack @416 (2-scale head; Redmon 2018) ------------------
+def yolov3_tiny_convs() -> list[ConvShape]:
+    """The 13 convs of YOLOv3-tiny (maxpools between backbone convs carry no
+    weights and are excluded, like ResNet50's pool above)."""
+    convs: list[ConvShape] = []
+
+    def add(h, c_in, c_out, n, name):
+        convs.append(ConvShape(h, h, c_in, c_out, n, stride=1,
+                               padding=n // 2, name=name))
+
+    backbone = [(416, 3, 16), (208, 16, 32), (104, 32, 64), (52, 64, 128),
+                (26, 128, 256), (13, 256, 512)]
+    for i, (h, c_in, c_out) in enumerate(backbone):
+        add(h, c_in, c_out, 3, f"conv{i + 1}")
+    add(13, 512, 1024, 3, "conv7")
+    add(13, 1024, 256, 1, "neck")
+    add(13, 256, 512, 3, "head1")
+    add(13, 512, 255, 1, "det1")
+    add(13, 256, 128, 1, "up1")
+    add(26, 384, 256, 3, "head2")      # concat(128 upsampled + 256 route)
+    add(26, 256, 255, 1, "det2")
     return convs

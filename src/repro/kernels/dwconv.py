@@ -14,19 +14,21 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from repro.kernels.ref import conv_out_hw, normalize_padding, normalize_stride
+
 
 def _dw_kernel(x_ref, halo_ref, w_ref, o_ref, *,
-               kh: int, kw: int, stride: int, th: int, w_out: int):
-    tile = jnp.concatenate([x_ref[0], halo_ref[0]], axis=0)  # (2*th*s, Wp, bc)
+               kh: int, kw: int, sh: int, sw: int, th: int, w_out: int):
+    tile = jnp.concatenate([x_ref[0], halo_ref[0]], axis=0)  # (2*th*sh, Wp, bc)
     acc = jnp.zeros((th, w_out, tile.shape[2]), jnp.float32)
     for dh in range(kh):
         for dw in range(kw):
             view = jax.lax.slice(
                 tile,
                 (dh, dw, 0),
-                (dh + stride * (th - 1) + 1, dw + stride * (w_out - 1) + 1,
+                (dh + sh * (th - 1) + 1, dw + sw * (w_out - 1) + 1,
                  tile.shape[2]),
-                (stride, stride, 1),
+                (sh, sw, 1),
             )
             acc += view.astype(jnp.float32) * w_ref[dh, dw][None, None, :]
     o_ref[...] = acc[None].astype(o_ref.dtype)
@@ -36,8 +38,8 @@ def dwconv(
     x: jax.Array,            # (N, H, W, C)
     w: jax.Array,            # (kh, kw, C)
     *,
-    stride: int = 1,
-    padding: int = 0,
+    stride=1,                # int or (sh, sw)
+    padding=0,               # int, (ph, pw), or ((pt, pb), (pl, pr))
     block_rows: int = 8,
     block_c: int = 128,
     out_dtype: jnp.dtype | None = None,
@@ -46,24 +48,28 @@ def dwconv(
     N, H, W, C = x.shape
     kh, kw, C2 = w.shape
     assert C == C2
-    s = stride
-    H_out = (H + 2 * padding - kh) // s + 1
-    W_out = (W + 2 * padding - kw) // s + 1
+    sh, sw = normalize_stride(stride)
+    (pt, pb), (pleft, pr) = normalize_padding(padding)
+    H_out, W_out = conv_out_hw(H, W, kh, kw, (sh, sw), padding)
+    if H_out < 1 or W_out < 1:
+        raise ValueError(
+            f"dwconv: zero-area output ({H_out}x{W_out}); use the XLA "
+            "reference path (axon.depthwise_conv2d routes this automatically)")
     out_dtype = out_dtype or x.dtype
 
     th = min(block_rows, H_out)
-    while (th - 1) * s + kh > 2 * th * s:
+    while (th - 1) * sh + kh > 2 * th * sh:
         th += 1
     bc = min(block_c, C)
 
     n_h = -(-H_out // th)
-    h_span = (n_h + 1) * th * s + kh
-    w_span = (W_out - 1) * s + kw
+    h_span = (n_h + 1) * th * sh + kh
+    w_span = (W_out - 1) * sw + kw
     x_p = jnp.pad(
         x,
         ((0, 0),
-         (padding, max(0, h_span - (H + padding))),
-         (padding, max(0, w_span - (W + padding))),
+         (pt, max(0, h_span - (H + pt))),
+         (pleft, max(0, w_span - (W + pleft))),
          (0, (-C) % bc)),
     )
     Wp = x_p.shape[2]
@@ -72,11 +78,12 @@ def dwconv(
 
     grid = (N, n_h, n_c)
     out = pl.pallas_call(
-        functools.partial(_dw_kernel, kh=kh, kw=kw, stride=s, th=th, w_out=W_out),
+        functools.partial(_dw_kernel, kh=kh, kw=kw, sh=sh, sw=sw, th=th,
+                          w_out=W_out),
         grid=grid,
         in_specs=[
-            pl.BlockSpec((1, th * s, Wp, bc), lambda b, h, c: (b, h, 0, c)),
-            pl.BlockSpec((1, th * s, Wp, bc), lambda b, h, c: (b, h + 1, 0, c)),
+            pl.BlockSpec((1, th * sh, Wp, bc), lambda b, h, c: (b, h, 0, c)),
+            pl.BlockSpec((1, th * sh, Wp, bc), lambda b, h, c: (b, h + 1, 0, c)),
             pl.BlockSpec((kh, kw, bc), lambda b, h, c: (0, 0, c)),
         ],
         out_specs=pl.BlockSpec((1, th, W_out, bc), lambda b, h, c: (b, h, 0, c)),

@@ -27,9 +27,12 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels.ref import conv_out_hw, normalize_padding, normalize_stride
+
 
 def _conv_kernel(x_ref, halo_ref, w_ref, o_ref, acc_ref, *,
-                 kh: int, kw: int, stride: int, th: int, w_out: int, nci: int):
+                 kh: int, kw: int, sh: int, sw: int, th: int, w_out: int,
+                 nci: int):
     ci = pl.program_id(3)
 
     @pl.when(ci == 0)
@@ -37,18 +40,18 @@ def _conv_kernel(x_ref, halo_ref, w_ref, o_ref, acc_ref, *,
         acc_ref[...] = jnp.zeros_like(acc_ref)
 
     # One VMEM-resident tile covering this row-tile plus its halo.
-    tile = jnp.concatenate([x_ref[0], halo_ref[0]], axis=0)  # (2*th*s, Wp, bci)
+    tile = jnp.concatenate([x_ref[0], halo_ref[0]], axis=0)  # (2*th*sh, Wp, bci)
 
     acc = acc_ref[...]
     for dh in range(kh):
         for dw in range(kw):
-            # Shifted strided view: rows dh + s*[0..th), cols dw + s*[0..w_out)
+            # Shifted strided view: rows dh + sh*[0..th), cols dw + sw*[0..w_out)
             view = jax.lax.slice(
                 tile,
                 (dh, dw, 0),
-                (dh + stride * (th - 1) + 1, dw + stride * (w_out - 1) + 1,
+                (dh + sh * (th - 1) + 1, dw + sw * (w_out - 1) + 1,
                  tile.shape[2]),
-                (stride, stride, 1),
+                (sh, sw, 1),
             )  # (th, w_out, bci)
             lhs = view.reshape(th * w_out, tile.shape[2])
             acc += jnp.dot(lhs, w_ref[dh, dw],
@@ -64,8 +67,8 @@ def im2col_conv(
     x: jax.Array,              # (N, H, W, C_in)
     w: jax.Array,              # (kh, kw, C_in, C_out)
     *,
-    stride: int = 1,
-    padding: int = 0,
+    stride=1,                  # int or (sh, sw)
+    padding=0,                 # int, (ph, pw), or ((pt, pb), (pl, pr))
     block_rows: int = 8,       # output rows per tile (th)
     block_cout: int = 128,
     block_cin: int = 512,
@@ -75,14 +78,20 @@ def im2col_conv(
     N, H, W, C_in = x.shape
     kh, kw, C_in2, C_out = w.shape
     assert C_in == C_in2
-    s = stride
-    H_out = (H + 2 * padding - kh) // s + 1
-    W_out = (W + 2 * padding - kw) // s + 1
+    sh, sw = normalize_stride(stride)
+    (pt, pb), (pleft, pr) = normalize_padding(padding)
+    H_out, W_out = conv_out_hw(H, W, kh, kw, (sh, sw), padding)
+    if H_out < 1 or W_out < 1:
+        raise ValueError(
+            f"im2col_conv: zero-area output ({H_out}x{W_out}) for input "
+            f"{H}x{W}, kernel {kh}x{kw}, stride ({sh},{sw}), padding "
+            f"(({pt},{pb}),({pleft},{pr})); use the XLA reference path "
+            "(axon.conv2d routes this automatically)")
     out_dtype = out_dtype or x.dtype
 
     th = min(block_rows, H_out)
-    # tile must cover its own halo: rows needed = (th-1)*s + kh <= 2*th*s
-    while (th - 1) * s + kh > 2 * th * s:
+    # tile must cover its own halo: rows needed = (th-1)*sh + kh <= 2*th*sh
+    while (th - 1) * sh + kh > 2 * th * sh:
         th += 1
     bco = min(block_cout, C_out)
     bci = min(block_cin, C_in)
@@ -90,13 +99,13 @@ def im2col_conv(
     n_h = -(-H_out // th)
     # Pad: spatial conv padding + enough bottom rows that row-block n_h is
     # always a valid (zero) halo block, and W covers the last window.
-    h_span = (n_h + 1) * th * s + kh          # generous zero tail
-    w_span = (W_out - 1) * s + kw
+    h_span = (n_h + 1) * th * sh + kh         # generous zero tail
+    w_span = (W_out - 1) * sw + kw
     x_p = jnp.pad(
         x,
         ((0, 0),
-         (padding, max(0, h_span - (H + padding))),
-         (padding, max(0, w_span - (W + padding))),
+         (pt, max(0, h_span - (H + pt))),
+         (pleft, max(0, w_span - (W + pleft))),
          (0, (-C_in) % bci)),
     )
     Wp = x_p.shape[2]
@@ -106,12 +115,12 @@ def im2col_conv(
 
     grid = (N, n_h, n_co, n_ci)  # cin innermost -> IFMAP tile stays resident
     out = pl.pallas_call(
-        functools.partial(_conv_kernel, kh=kh, kw=kw, stride=s, th=th,
+        functools.partial(_conv_kernel, kh=kh, kw=kw, sh=sh, sw=sw, th=th,
                           w_out=W_out, nci=n_ci),
         grid=grid,
         in_specs=[
-            pl.BlockSpec((1, th * s, Wp, bci), lambda b, h, co, ci: (b, h, 0, ci)),
-            pl.BlockSpec((1, th * s, Wp, bci),
+            pl.BlockSpec((1, th * sh, Wp, bci), lambda b, h, co, ci: (b, h, 0, ci)),
+            pl.BlockSpec((1, th * sh, Wp, bci),
                          lambda b, h, co, ci: (b, h + 1, 0, ci)),
             pl.BlockSpec((kh, kw, bci, bco), lambda b, h, co, ci: (0, 0, ci, co)),
         ],
@@ -132,9 +141,9 @@ def hbm_traffic_model(x_shape, w_shape, *, stride=1, padding=0,
     """
     N, H, W, C_in = x_shape
     kh, kw, _, C_out = w_shape
-    H_out = (H + 2 * padding - kh) // stride + 1
-    W_out = (W + 2 * padding - kw) // stride + 1
-    implicit = N * H * W * C_in * (1 + (kh - stride) / max(H, 1))  # + row halo
+    sh, sw = normalize_stride(stride)
+    H_out, W_out = conv_out_hw(H, W, kh, kw, stride, padding)
+    implicit = N * H * W * C_in * (1 + (kh - sh) / max(H, 1))  # + row halo
     im2col = N * H_out * W_out * kh * kw * C_in
     return {
         "implicit_bytes": implicit * bytes_per_elem,

@@ -5,6 +5,41 @@ import jax
 import jax.numpy as jnp
 
 
+def normalize_stride(stride) -> tuple[int, int]:
+    """int -> (s, s); (sh, sw) -> (sh, sw)."""
+    if isinstance(stride, int):
+        return (stride, stride)
+    sh, sw = stride
+    return (int(sh), int(sw))
+
+
+def normalize_padding(padding) -> tuple[tuple[int, int], tuple[int, int]]:
+    """int | (ph, pw) | ((pt, pb), (pl, pr)) -> ((pt, pb), (pl, pr)).
+
+    String padding ("SAME"/"VALID") is resolved against the input shape by
+    the ``axon`` front door before it reaches the kernels/oracles."""
+    if isinstance(padding, str):
+        raise TypeError(
+            f"string padding {padding!r} must be resolved to explicit pad "
+            "amounts before reaching the kernel layer (use axon.conv2d)")
+    if isinstance(padding, int):
+        return ((padding, padding), (padding, padding))
+    a, b = padding
+    if isinstance(a, int) and isinstance(b, int):
+        return ((a, a), (b, b))
+    (pt, pb), (pl, pr) = a, b
+    return ((int(pt), int(pb)), (int(pl), int(pr)))
+
+
+def conv_out_hw(h: int, w: int, kh: int, kw: int, stride, padding
+                ) -> tuple[int, int]:
+    """Output spatial dims; <= 0 means a zero-area output (kernel larger
+    than the padded input, or stride overshoot)."""
+    (sh, sw) = normalize_stride(stride)
+    (pt, pb), (pl, pr) = normalize_padding(padding)
+    return ((h + pt + pb - kh) // sh + 1, (w + pl + pr - kw) // sw + 1)
+
+
 def gemm_ref(a: jax.Array, b: jax.Array, out_dtype=None) -> jax.Array:
     out_dtype = out_dtype or a.dtype
     return jnp.dot(a.astype(jnp.float32), b.astype(jnp.float32)).astype(out_dtype)
@@ -15,30 +50,35 @@ def gemv_ref(x: jax.Array, w: jax.Array, out_dtype=None) -> jax.Array:
     return jnp.dot(x.astype(jnp.float32), w.astype(jnp.float32)).astype(out_dtype)
 
 
-def conv2d_ref(x: jax.Array, w: jax.Array, *, stride: int = 1,
-               padding: int = 0, out_dtype=None) -> jax.Array:
-    """NHWC x HWIO -> NHWC, fp32 accumulation."""
+def conv2d_ref(x: jax.Array, w: jax.Array, *, stride=1, padding=0,
+               groups: int = 1, out_dtype=None) -> jax.Array:
+    """NHWC x HWIO -> NHWC, fp32 accumulation.
+
+    ``stride`` is an int or ``(sh, sw)``; ``padding`` an int, ``(ph, pw)``,
+    or explicit ``((pt, pb), (pl, pr))`` pairs; ``groups`` is lax's
+    ``feature_group_count`` (w: ``(kh, kw, C_in // groups, C_out)``)."""
     out_dtype = out_dtype or x.dtype
     out = jax.lax.conv_general_dilated(
         x.astype(jnp.float32),
         w.astype(jnp.float32),
-        window_strides=(stride, stride),
-        padding=[(padding, padding), (padding, padding)],
+        window_strides=normalize_stride(stride),
+        padding=list(normalize_padding(padding)),
         dimension_numbers=("NHWC", "HWIO", "NHWC"),
+        feature_group_count=groups,
     )
     return out.astype(out_dtype)
 
 
-def dwconv_ref(x: jax.Array, w: jax.Array, *, stride: int = 1,
-               padding: int = 0, out_dtype=None) -> jax.Array:
+def dwconv_ref(x: jax.Array, w: jax.Array, *, stride=1,
+               padding=0, out_dtype=None) -> jax.Array:
     """NHWC x (kh, kw, C) depthwise -> NHWC."""
     out_dtype = out_dtype or x.dtype
     C = x.shape[-1]
     out = jax.lax.conv_general_dilated(
         x.astype(jnp.float32),
         w[:, :, None, :].astype(jnp.float32),   # (kh, kw, 1, C) HWIO w/ groups
-        window_strides=(stride, stride),
-        padding=[(padding, padding), (padding, padding)],
+        window_strides=normalize_stride(stride),
+        padding=list(normalize_padding(padding)),
         dimension_numbers=("NHWC", "HWIO", "NHWC"),
         feature_group_count=C,
     )

@@ -1,0 +1,33 @@
+"""``repro.vision`` -- the runnable conv-net model zoo + inference engine.
+
+Closes the loop with the paper's ResNet50/YOLOv3 claims: the same networks
+the analytic models score are executable here through the Axon operator API
+(``blocks`` / ``models``), servable under continuous batching (``engine``),
+and traceable back into the analytic runtime/energy models (``trace``).
+"""
+from repro.vision.engine import ImageRequest, VisionEngine, make_infer_step
+from repro.vision.models import ARCHS, VisionConfig, apply, init
+from repro.vision.trace import (
+    TracedConv,
+    conv_shapes,
+    lowered_gemms,
+    paper_report,
+    to_conv_shape,
+    trace_model,
+)
+
+__all__ = [
+    "ARCHS",
+    "ImageRequest",
+    "TracedConv",
+    "VisionConfig",
+    "VisionEngine",
+    "apply",
+    "conv_shapes",
+    "init",
+    "lowered_gemms",
+    "make_infer_step",
+    "paper_report",
+    "to_conv_shape",
+    "trace_model",
+]

@@ -1,0 +1,233 @@
+"""Conv-net building blocks on the Axon operator API.
+
+Pure-functional, matching ``repro.models``: ``init_*`` builds parameter
+pytrees (plain dicts), the forward functions consume them.  Every
+convolution flows through ``axon.conv2d`` / ``axon.depthwise_conv2d`` and
+every dense layer through ``axon.einsum``, so the whole model zoo rides the
+policy-dispatched Pallas im2col path (or XLA, bit-for-bit, under
+``backend="xla"``).
+
+BatchNorm is *folded*: these are inference-mode blocks, so each conv carries
+the BN scale pre-multiplied into its weights and the BN shift as a plain
+bias -- one conv + bias + activation, exactly what the paper benchmarks.
+
+Every conv call site also reports itself to the layer tracer (see
+``repro.vision.trace``): under ``jax.eval_shape`` inside a ``trace_taps``
+scope the records materialize without running any compute, which is how the
+analytic runtime/energy models get their shapes *from the executable
+models* instead of hand-written tables.
+"""
+from __future__ import annotations
+
+import contextlib
+import contextvars
+import dataclasses
+import math
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro import axon
+from repro.kernels.ref import conv_out_hw
+
+Params = dict[str, Any]
+
+
+# ---------------------------------------------------------------------------
+# layer tracing tap
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class TracedConv:
+    """One conv call site as executed (input geometry + resolved attrs)."""
+
+    name: str
+    H: int
+    W: int
+    C_in: int
+    C_out: int
+    kh: int
+    kw: int
+    stride: tuple[int, int]
+    padding: tuple[tuple[int, int], tuple[int, int]]
+    groups: int = 1
+    depthwise: bool = False
+
+    @property
+    def H_out(self) -> int:
+        return conv_out_hw(self.H, self.W, self.kh, self.kw, self.stride,
+                           self.padding)[0]
+
+    @property
+    def W_out(self) -> int:
+        return conv_out_hw(self.H, self.W, self.kh, self.kw, self.stride,
+                           self.padding)[1]
+
+    @property
+    def macs(self) -> int:
+        return (self.H_out * self.W_out * self.kh * self.kw
+                * (self.C_in // self.groups) * self.C_out)
+
+
+_TRACE: contextvars.ContextVar[list[TracedConv] | None] = \
+    contextvars.ContextVar("vision_trace", default=None)
+
+
+@contextlib.contextmanager
+def trace_taps(records: list[TracedConv]):
+    """Collect a ``TracedConv`` for every conv executed (or eval_shape'd)
+    in scope."""
+    token = _TRACE.set(records)
+    try:
+        yield records
+    finally:
+        _TRACE.reset(token)
+
+
+def _tap(name, x, *, c_out, kh, kw, stride, padding, groups=1,
+         depthwise=False) -> None:
+    sink = _TRACE.get()
+    if sink is None:
+        return
+    stride, padding, _, _ = axon.resolve_conv_geometry(
+        stride, padding, kh, kw, x.shape[1], x.shape[2])
+    sink.append(TracedConv(
+        name=name, H=int(x.shape[1]), W=int(x.shape[2]),
+        C_in=int(x.shape[3]), C_out=c_out, kh=kh, kw=kw, stride=stride,
+        padding=padding, groups=groups, depthwise=depthwise))
+
+
+# ---------------------------------------------------------------------------
+# conv + folded-BN + activation
+# ---------------------------------------------------------------------------
+
+
+def _act(x: jax.Array, act: str) -> jax.Array:
+    if act == "relu":
+        return jax.nn.relu(x)
+    if act == "leaky":
+        return jax.nn.leaky_relu(x, 0.1)
+    if act == "none":
+        return x
+    raise ValueError(f"unknown activation {act!r}")
+
+
+def init_conv_bn(key, k: int, c_in: int, c_out: int, *, groups: int = 1,
+                 dtype=jnp.float32) -> Params:
+    """He-normal conv weight (kh, kw, C_in/groups, C_out) + folded-BN bias."""
+    fan_in = k * k * (c_in // groups)
+    w = jax.random.normal(key, (k, k, c_in // groups, c_out), jnp.float32)
+    w = w * math.sqrt(2.0 / fan_in)
+    return {"w": w.astype(dtype), "b": jnp.zeros((c_out,), dtype)}
+
+
+def conv_bn_act(p: Params, x: jax.Array, *, stride=1, padding=0,
+                groups: int = 1, act: str = "relu",
+                name: str = "") -> jax.Array:
+    kh, kw, _, c_out = p["w"].shape
+    _tap(name, x, c_out=c_out, kh=kh, kw=kw, stride=stride, padding=padding,
+         groups=groups)
+    y = axon.conv2d(x, p["w"], stride=stride, padding=padding, groups=groups)
+    return _act(y + p["b"], act)
+
+
+def init_dwconv_bn(key, k: int, c: int, *, dtype=jnp.float32) -> Params:
+    w = jax.random.normal(key, (k, k, c), jnp.float32) * math.sqrt(2.0 / (k * k))
+    return {"w": w.astype(dtype), "b": jnp.zeros((c,), dtype)}
+
+
+def dwconv_bn_act(p: Params, x: jax.Array, *, stride=1, padding=0,
+                  act: str = "relu", name: str = "") -> jax.Array:
+    kh, kw, c = p["w"].shape
+    _tap(name, x, c_out=c, kh=kh, kw=kw, stride=stride, padding=padding,
+         groups=c, depthwise=True)
+    y = axon.depthwise_conv2d(x, p["w"], stride=stride, padding=padding)
+    return _act(y + p["b"], act)
+
+
+# ---------------------------------------------------------------------------
+# composite blocks
+# ---------------------------------------------------------------------------
+
+
+def init_bottleneck(key, c_in: int, c_mid: int, c_out: int, *, stride: int,
+                    dtype=jnp.float32) -> Params:
+    """ResNet-v1 bottleneck: 1x1 reduce -> 3x3 (strided) -> 1x1 expand,
+    plus a 1x1 projection shortcut when the shape changes."""
+    keys = jax.random.split(key, 4)
+    p = {
+        "conv1": init_conv_bn(keys[0], 1, c_in, c_mid, dtype=dtype),
+        "conv2": init_conv_bn(keys[1], 3, c_mid, c_mid, dtype=dtype),
+        "conv3": init_conv_bn(keys[2], 1, c_mid, c_out, dtype=dtype),
+    }
+    if stride != 1 or c_in != c_out:
+        p["down"] = init_conv_bn(keys[3], 1, c_in, c_out, dtype=dtype)
+    return p
+
+
+def bottleneck(p: Params, x: jax.Array, *, stride: int,
+               name: str = "") -> jax.Array:
+    h = conv_bn_act(p["conv1"], x, padding=0, name=f"{name}.conv1")
+    h = conv_bn_act(p["conv2"], h, stride=stride, padding=1,
+                    name=f"{name}.conv2")
+    h = conv_bn_act(p["conv3"], h, padding=0, act="none", name=f"{name}.conv3")
+    if "down" in p:
+        x = conv_bn_act(p["down"], x, stride=stride, padding=0, act="none",
+                        name=f"{name}.down")
+    return jax.nn.relu(h + x)
+
+
+def init_dw_separable(key, c_in: int, c_out: int, *,
+                      dtype=jnp.float32) -> Params:
+    """MobileNetV1 depthwise-separable: 3x3 DW conv + 1x1 pointwise."""
+    k_dw, k_pw = jax.random.split(key)
+    return {
+        "dw": init_dwconv_bn(k_dw, 3, c_in, dtype=dtype),
+        "pw": init_conv_bn(k_pw, 1, c_in, c_out, dtype=dtype),
+    }
+
+
+def dw_separable(p: Params, x: jax.Array, *, stride: int,
+                 name: str = "") -> jax.Array:
+    h = dwconv_bn_act(p["dw"], x, stride=stride, padding=1, name=f"{name}.dw")
+    return conv_bn_act(p["pw"], h, padding=0, name=f"{name}.pw")
+
+
+# ---------------------------------------------------------------------------
+# parameter-free spatial ops
+# ---------------------------------------------------------------------------
+
+
+def max_pool(x: jax.Array, k: int, *, stride: int | None = None,
+             padding=0) -> jax.Array:
+    """NHWC max pool; ``padding`` follows conv2d (int / pairs / SAME)."""
+    s = k if stride is None else stride
+    (sh, sw), pads, _, _ = axon.resolve_conv_geometry(
+        s, padding, k, k, x.shape[1], x.shape[2])
+    lowest = (-jnp.inf if jnp.issubdtype(x.dtype, jnp.floating)
+              else jnp.iinfo(x.dtype).min)
+    return jax.lax.reduce_window(
+        x, lowest, jax.lax.max, (1, k, k, 1), (1, sh, sw, 1),
+        [(0, 0), pads[0], pads[1], (0, 0)])
+
+
+def global_avg_pool(x: jax.Array) -> jax.Array:
+    """(N, H, W, C) -> (N, C), fp32 mean."""
+    return jnp.mean(x.astype(jnp.float32), axis=(1, 2)).astype(x.dtype)
+
+
+def upsample2x(x: jax.Array) -> jax.Array:
+    """Nearest-neighbor 2x spatial upsample (YOLO feature-pyramid step)."""
+    return jnp.repeat(jnp.repeat(x, 2, axis=1), 2, axis=2)
+
+
+def init_dense(key, d_in: int, d_out: int, *, dtype=jnp.float32) -> Params:
+    w = jax.random.normal(key, (d_in, d_out), jnp.float32)
+    return {"w": (w / math.sqrt(d_in)).astype(dtype),
+            "b": jnp.zeros((d_out,), dtype)}
+
+
+def dense(p: Params, x: jax.Array) -> jax.Array:
+    return axon.einsum("nd,df->nf", x, p["w"]) + p["b"]

@@ -1,0 +1,137 @@
+"""Batched vision inference engine (the PR-2 serving pattern, for images).
+
+``VisionEngine`` drives a model-zoo network with slot-level scheduling: an
+admission queue feeds ``batch_slots`` image lanes, and ALL compute flows
+through ONE fixed-shape jitted step per model -- always ``(batch_slots, H,
+W, C)``, with partial batches zero-padded and their lanes discarded -- so
+recompilation never happens mid-serve regardless of arrival pattern.
+
+Unlike the LM engine there is no decode loop: vision inference is a single
+forward pass, so a slot's lifetime is exactly one step and every slot is
+backfilled from the queue on the next step.  Requests carry an
+``arrival_s`` offset (relative to ``infer()`` start) so mixed-arrival
+traffic can be replayed: the engine admits only requests whose arrival time
+has passed, sleeping until the next arrival when all lanes would otherwise
+be empty.
+
+``last_stats`` reports throughput (img/s), per-request latency percentiles,
+and mean batch occupancy for the most recent ``infer`` call.
+"""
+from __future__ import annotations
+
+import collections
+import dataclasses
+import time
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro import axon
+from repro.vision import models
+from repro.vision.models import VisionConfig
+
+QUEUE_POLICIES = ("fifo",)
+
+
+def make_infer_step(cfg: VisionConfig,
+                    policy: axon.ExecutionPolicy | None = None):
+    """(params, images (B, H, W, C)) -> model outputs, policy pinned at
+    trace time (the engine jits exactly one instance of this)."""
+    pol = policy if policy is not None else axon.current_policy()
+
+    def infer_step(params, images):
+        with axon.policy(pol):
+            return models.apply(params, images, cfg)
+
+    return infer_step
+
+
+@dataclasses.dataclass
+class ImageRequest:
+    image: np.ndarray            # (H, W, C), cfg.input_hw
+    arrival_s: float = 0.0       # offset from infer() start (0 = already here)
+
+
+class VisionEngine:
+    """Continuous-batching single-pass inference over ``batch_slots`` lanes."""
+
+    def __init__(self, params, cfg: VisionConfig, *, batch_slots: int = 8,
+                 policy: axon.ExecutionPolicy | None = None):
+        self.params = params
+        self.cfg = cfg
+        self.batch_slots = batch_slots
+        self._step = jax.jit(make_infer_step(cfg, policy=policy))
+        self.last_stats: dict[str, Any] | None = None
+
+    def _validate(self, requests: list[ImageRequest]) -> None:
+        want = (*self.cfg.input_hw, self.cfg.in_channels)
+        for idx, req in enumerate(requests):
+            if tuple(req.image.shape) != want:
+                raise ValueError(
+                    f"request {idx}: image shape {tuple(req.image.shape)} != "
+                    f"model input {want}")
+            if req.arrival_s < 0:
+                raise ValueError(f"request {idx}: negative arrival_s")
+
+    def warmup(self) -> None:
+        """Compile the (single) step shape outside any timed region."""
+        zero = jnp.zeros((self.batch_slots, *self.cfg.input_hw,
+                          self.cfg.in_channels), self.cfg.pdtype)
+        jax.block_until_ready(self._step(self.params, zero))
+
+    def infer(self, requests: list[ImageRequest]) -> list:
+        """Run all requests; returns per-request model outputs in request
+        order (logits row, or dict of detection-map slices for YOLO)."""
+        self._validate(requests)
+        B = self.batch_slots
+        order = sorted(range(len(requests)),
+                       key=lambda i: requests[i].arrival_s)
+        pending = collections.deque(order)
+        outputs: list[Any | None] = [None] * len(requests)
+        lat = np.zeros(len(requests))
+        queue_delay = np.zeros(len(requests))
+        steps = 0
+        occupancy = 0
+        t0 = time.perf_counter()
+
+        while pending:
+            now = time.perf_counter() - t0
+            next_arrival = requests[pending[0]].arrival_s
+            if next_arrival > now:        # nothing admissible: idle until then
+                time.sleep(next_arrival - now)
+                now = time.perf_counter() - t0
+            lanes: list[int] = []
+            while pending and len(lanes) < B \
+                    and requests[pending[0]].arrival_s <= now:
+                lanes.append(pending.popleft())
+            batch = np.zeros((B, *self.cfg.input_hw, self.cfg.in_channels),
+                             np.float32)
+            for b, ridx in enumerate(lanes):
+                batch[b] = requests[ridx].image
+                queue_delay[ridx] = now - requests[ridx].arrival_s
+            out = self._step(self.params, jnp.asarray(batch,
+                                                      self.cfg.pdtype))
+            out = jax.block_until_ready(out)
+            done = time.perf_counter() - t0
+            steps += 1
+            occupancy += len(lanes)
+            for b, ridx in enumerate(lanes):
+                outputs[ridx] = jax.tree.map(lambda a, b=b: np.asarray(a[b]),
+                                             out)
+                lat[ridx] = done - requests[ridx].arrival_s
+
+        wall = time.perf_counter() - t0
+        n = len(requests)
+        self.last_stats = {
+            "images": n,
+            "steps": steps,
+            "wall_s": wall,
+            "img_per_s": n / wall if wall > 0 else 0.0,
+            "p50_latency_s": float(np.percentile(lat, 50)) if n else 0.0,
+            "p99_latency_s": float(np.percentile(lat, 99)) if n else 0.0,
+            "mean_queue_s": float(queue_delay.mean()) if n else 0.0,
+            "mean_occupancy": occupancy / (steps * B) if steps else 0.0,
+        }
+        return outputs

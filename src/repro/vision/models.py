@@ -1,0 +1,323 @@
+"""The conv-net model zoo: ResNet50, MobileNetV1, YOLOv3(-tiny).
+
+These are the paper's benchmark workloads (Fig. 11 / §5.2.1) as *runnable*
+models in the repo's functional style: ``init(rng, cfg)`` builds a parameter
+pytree, ``apply(params, x, cfg)`` runs inference.  Every conv executes
+through ``axon.conv2d`` / ``axon.depthwise_conv2d``, so the same forward
+pass runs on the Pallas implicit-im2col kernels (``backend="pallas"`` /
+``"interpret"``) or plain XLA (``backend="xla"``) and the two are compared
+layer-for-layer in the tests.
+
+Classification archs return ``(N, num_classes)`` logits; the YOLO archs
+return a dict of detection maps (one ``(N, h, w, anchors * (5 + classes))``
+tensor per scale).
+
+``cfg.reduced()`` gives a same-family small variant (tiny input, thin
+channels, single-block stages) for CPU smoke tests; shape tracing
+(``repro.vision.trace``) always works on the full config because it never
+runs compute.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.vision import blocks as B
+
+_DTYPES = {"float32": jnp.float32, "bfloat16": jnp.bfloat16}
+
+ARCHS = ("resnet", "mobilenet_v1", "yolov3_tiny", "yolov3")
+
+
+@dataclasses.dataclass(frozen=True)
+class VisionConfig:
+    name: str
+    arch: str                                 # one of ARCHS
+    input_hw: tuple[int, int] = (224, 224)
+    in_channels: int = 3
+    num_classes: int = 1000
+    width_mult: float = 1.0
+    # resnet: bottleneck blocks per stage; yolov3: residual reps per stage
+    stage_blocks: tuple[int, ...] = (3, 4, 6, 3)
+    anchors_per_scale: int = 3                # yolo heads
+    param_dtype: str = "float32"
+
+    def __post_init__(self) -> None:
+        if self.arch not in ARCHS:
+            raise ValueError(f"arch must be one of {ARCHS}, got {self.arch!r}")
+        if self.arch == "yolov3" and len(self.stage_blocks) != 5:
+            raise ValueError(
+                "yolov3 needs one stage_blocks entry per Darknet-53 stage "
+                f"(5), got {self.stage_blocks}")
+
+    @property
+    def pdtype(self):
+        return _DTYPES[self.param_dtype]
+
+    @property
+    def head_channels(self) -> int:
+        """YOLO detection-map channels: anchors * (x, y, w, h, obj + classes)."""
+        return self.anchors_per_scale * (5 + self.num_classes)
+
+    def reduced(self) -> "VisionConfig":
+        """Small same-family variant for CPU smoke tests."""
+        hw = (64, 64) if self.arch.startswith("yolo") else (32, 32)
+        return dataclasses.replace(
+            self,
+            name=self.name + "-reduced",
+            input_hw=hw,
+            num_classes=8,
+            width_mult=self.width_mult * 0.125,
+            stage_blocks=tuple(1 for _ in self.stage_blocks),
+        )
+
+
+def _c(cfg: VisionConfig, c: int) -> int:
+    """Width-scaled channel count (full configs: identity)."""
+    return max(4, int(round(c * cfg.width_mult)))
+
+
+# ---------------------------------------------------------------------------
+# ResNet50 (He et al. 2016): bottleneck stages, the paper's Fig. 11 workload
+# ---------------------------------------------------------------------------
+
+
+def _resnet_init(key, cfg: VisionConfig):
+    dt = cfg.pdtype
+    keys = jax.random.split(key, 2 + len(cfg.stage_blocks))
+    stem_c = _c(cfg, 64)
+    p = {"stem": B.init_conv_bn(keys[0], 7, cfg.in_channels, stem_c, dtype=dt),
+         "stages": []}
+    c_in = stem_c
+    for si, n_blocks in enumerate(cfg.stage_blocks):
+        c_mid = _c(cfg, 64 * 2 ** si)
+        c_out = 4 * c_mid
+        stage = []
+        bkeys = jax.random.split(keys[1 + si], n_blocks)
+        for bi in range(n_blocks):
+            stride = 2 if (bi == 0 and si > 0) else 1
+            stage.append(B.init_bottleneck(bkeys[bi], c_in, c_mid, c_out,
+                                           stride=stride, dtype=dt))
+            c_in = c_out
+        p["stages"].append(stage)
+    p["head"] = B.init_dense(keys[-1], c_in, cfg.num_classes, dtype=dt)
+    return p
+
+
+def _resnet_apply(p, x, cfg: VisionConfig):
+    h = B.conv_bn_act(p["stem"], x, stride=2, padding=3, name="conv1")
+    h = B.max_pool(h, 3, stride=2, padding=1)
+    for si, n_blocks in enumerate(cfg.stage_blocks):
+        for bi in range(n_blocks):
+            stride = 2 if (bi == 0 and si > 0) else 1
+            h = B.bottleneck(p["stages"][si][bi], h, stride=stride,
+                             name=f"l{si + 1}b{bi + 1}")
+    return B.dense(p["head"], B.global_avg_pool(h))
+
+
+# ---------------------------------------------------------------------------
+# MobileNetV1 (Howard et al. 2017): the Fig. 14 depthwise workload
+# ---------------------------------------------------------------------------
+
+# (pointwise C_out, DW stride) per separable block; DW runs on the previous
+# block's output channels.  The DW layers are exactly core.workloads
+# MOBILENET_DW (the 14x14x512 s1 block repeats 5x; the table lists uniques).
+_MOBILENET_SPEC = ((64, 1), (128, 2), (128, 1), (256, 2), (256, 1),
+                   (512, 2), (512, 1), (512, 1), (512, 1), (512, 1), (512, 1),
+                   (1024, 2), (1024, 1))
+
+
+def _mobilenet_init(key, cfg: VisionConfig):
+    dt = cfg.pdtype
+    keys = jax.random.split(key, len(_MOBILENET_SPEC) + 2)
+    c_in = _c(cfg, 32)
+    p = {"stem": B.init_conv_bn(keys[0], 3, cfg.in_channels, c_in, dtype=dt),
+         "blocks": []}
+    for i, (c_out, _) in enumerate(_MOBILENET_SPEC):
+        c_out = _c(cfg, c_out)
+        p["blocks"].append(B.init_dw_separable(keys[1 + i], c_in, c_out,
+                                               dtype=dt))
+        c_in = c_out
+    p["head"] = B.init_dense(keys[-1], c_in, cfg.num_classes, dtype=dt)
+    return p
+
+
+def _mobilenet_apply(p, x, cfg: VisionConfig):
+    h = B.conv_bn_act(p["stem"], x, stride=2, padding=1, name="conv1")
+    for i, (_, stride) in enumerate(_MOBILENET_SPEC):
+        h = B.dw_separable(p["blocks"][i], h, stride=stride, name=f"sep{i + 1}")
+    return B.dense(p["head"], B.global_avg_pool(h))
+
+
+# ---------------------------------------------------------------------------
+# YOLOv3-tiny (Redmon & Farhadi 2018): 2-scale detection head
+# ---------------------------------------------------------------------------
+
+_TINY_BACKBONE = (16, 32, 64, 128, 256, 512)   # each followed by a maxpool
+
+
+def _yolov3_tiny_init(key, cfg: VisionConfig):
+    dt = cfg.pdtype
+    keys = jax.random.split(key, 12)
+    p = {"backbone": []}
+    c_in = cfg.in_channels
+    for i, c in enumerate(_TINY_BACKBONE):
+        c = _c(cfg, c)
+        p["backbone"].append(B.init_conv_bn(keys[i], 3, c_in, c, dtype=dt))
+        c_in = c
+    c1024, c256, c512, c128 = (_c(cfg, c) for c in (1024, 256, 512, 128))
+    p["conv7"] = B.init_conv_bn(keys[6], 3, c_in, c1024, dtype=dt)
+    p["neck"] = B.init_conv_bn(keys[7], 1, c1024, c256, dtype=dt)
+    p["head1"] = B.init_conv_bn(keys[8], 3, c256, c512, dtype=dt)
+    p["det1"] = B.init_conv_bn(keys[9], 1, c512, cfg.head_channels, dtype=dt)
+    p["up"] = B.init_conv_bn(keys[10], 1, c256, c128, dtype=dt)
+    # concat: upsampled c128 + the 256-wide backbone feature (pre-pool)
+    p["head2"] = B.init_conv_bn(keys[11], 3, c128 + _c(cfg, 256), c256,
+                                dtype=dt)
+    p["det2"] = B.init_conv_bn(jax.random.fold_in(key, 99), 1, c256,
+                               cfg.head_channels, dtype=dt)
+    return p
+
+
+def _yolov3_tiny_apply(p, x, cfg: VisionConfig):
+    h = x
+    route = None
+    for i, pb in enumerate(p["backbone"]):
+        h = B.conv_bn_act(pb, h, padding=1, act="leaky", name=f"conv{i + 1}")
+        if i == 4:
+            route = h                       # 256-wide feature, pre-pool
+        # the last pool keeps 13x13: stride 1, SAME
+        if i < len(p["backbone"]) - 1:
+            h = B.max_pool(h, 2, stride=2)
+        else:
+            h = B.max_pool(h, 2, stride=1, padding="SAME")
+    h = B.conv_bn_act(p["conv7"], h, padding=1, act="leaky", name="conv7")
+    neck = B.conv_bn_act(p["neck"], h, act="leaky", name="neck")
+    h1 = B.conv_bn_act(p["head1"], neck, padding=1, act="leaky", name="head1")
+    det1 = B.conv_bn_act(p["det1"], h1, act="none", name="det1")
+    u = B.conv_bn_act(p["up"], neck, act="leaky", name="up1")
+    u = jnp.concatenate([B.upsample2x(u), route], axis=-1)
+    h2 = B.conv_bn_act(p["head2"], u, padding=1, act="leaky", name="head2")
+    det2 = B.conv_bn_act(p["det2"], h2, act="none", name="det2")
+    return {"det1": det1, "det2": det2}
+
+
+# ---------------------------------------------------------------------------
+# YOLOv3 (Darknet-53 backbone + 3-scale head) -- the Fig. 11 workload
+# ---------------------------------------------------------------------------
+
+_DARKNET_STAGES = (64, 128, 256, 512, 1024)    # downsample target per stage
+
+
+def _yolov3_init(key, cfg: VisionConfig):
+    dt = cfg.pdtype
+    keys = jax.random.split(key, 8)
+    c_in = _c(cfg, 32)
+    p = {"stem": B.init_conv_bn(keys[0], 3, cfg.in_channels, c_in, dtype=dt),
+         "stages": []}
+    for si, c_out in enumerate(_DARKNET_STAGES):
+        c_out = _c(cfg, c_out)
+        half = max(4, c_out // 2)
+        reps = cfg.stage_blocks[si]
+        skeys = jax.random.split(keys[1 + si % 5], reps * 2 + 1)
+        stage = {"down": B.init_conv_bn(skeys[0], 3, c_in, c_out, dtype=dt),
+                 "res": []}
+        for r in range(reps):
+            stage["res"].append({
+                "a": B.init_conv_bn(skeys[1 + 2 * r], 1, c_out, half, dtype=dt),
+                "b": B.init_conv_bn(skeys[2 + 2 * r], 3, half, c_out, dtype=dt),
+            })
+        p["stages"].append(stage)
+        c_in = c_out
+    # three heads; each is 3x (1x1 narrow, 3x3 wide) pairs + linear det conv
+    def head(hkey, c_in, narrow, wide):
+        hkeys = jax.random.split(hkey, 8)
+        pairs = []
+        for r in range(3):
+            pairs.append({
+                "a": B.init_conv_bn(hkeys[2 * r], 1,
+                                    c_in if r == 0 else wide, narrow, dtype=dt),
+                "b": B.init_conv_bn(hkeys[2 * r + 1], 3, narrow, wide,
+                                    dtype=dt),
+            })
+        return {"pairs": pairs,
+                "det": B.init_conv_bn(hkeys[6], 1, wide, cfg.head_channels,
+                                      dtype=dt)}
+
+    c512, c256, c128 = _c(cfg, 512), _c(cfg, 256), _c(cfg, 128)
+    p["head1"] = head(keys[6], _c(cfg, 1024), c512, _c(cfg, 1024))
+    p["up1"] = B.init_conv_bn(jax.random.fold_in(key, 1), 1, c512, c256,
+                              dtype=dt)
+    p["head2"] = head(keys[7], c256 + c512, c256, c512)
+    p["up2"] = B.init_conv_bn(jax.random.fold_in(key, 2), 1, c256, c128,
+                              dtype=dt)
+    p["head3"] = head(jax.random.fold_in(key, 3), c128 + c256, c128, c256)
+    return p
+
+
+def _yolo_head(hp, x, *, name):
+    """3x (1x1, 3x3) pairs; returns (route, det) -- route taps pair 3's 1x1."""
+    h = x
+    route = None
+    for r, pair in enumerate(hp["pairs"]):
+        h = B.conv_bn_act(pair["a"], h, act="leaky", name=f"{name}.{r}.a")
+        route = h
+        h = B.conv_bn_act(pair["b"], h, padding=1, act="leaky",
+                          name=f"{name}.{r}.b")
+    det = B.conv_bn_act(hp["det"], h, act="none",
+                        name=f"det{name[-1]}")
+    return route, det
+
+
+def _yolov3_apply(p, x, cfg: VisionConfig):
+    h = B.conv_bn_act(p["stem"], x, padding=1, act="leaky", name="conv0")
+    feats = []                      # per-stage outputs (indexed, not keyed by
+    for si, stage in enumerate(p["stages"]):  # channel count: widths collide
+        h = B.conv_bn_act(stage["down"], h, stride=2, padding=1, act="leaky",
+                          name=f"down{_DARKNET_STAGES[si]}")
+        for r, res in enumerate(stage["res"]):
+            y = B.conv_bn_act(res["a"], h, act="leaky",
+                              name=f"res{_DARKNET_STAGES[si]}.{r}.a")
+            y = B.conv_bn_act(res["b"], y, padding=1, act="leaky",
+                              name=f"res{_DARKNET_STAGES[si]}.{r}.b")
+            h = h + y
+        feats.append(h)
+    route1, det1 = _yolo_head(p["head1"], h, name="head1")
+    u = B.conv_bn_act(p["up1"], route1, act="leaky", name="up1")
+    u = jnp.concatenate([B.upsample2x(u), feats[3]], axis=-1)   # 512-w stage
+    route2, det2 = _yolo_head(p["head2"], u, name="head2")
+    u = B.conv_bn_act(p["up2"], route2, act="leaky", name="up2")
+    u = jnp.concatenate([B.upsample2x(u), feats[2]], axis=-1)   # 256-w stage
+    _, det3 = _yolo_head(p["head3"], u, name="head3")
+    return {"det1": det1, "det2": det2, "det3": det3}
+
+
+# ---------------------------------------------------------------------------
+# public init / apply
+# ---------------------------------------------------------------------------
+
+_ARCH_FNS = {
+    "resnet": (_resnet_init, _resnet_apply),
+    "mobilenet_v1": (_mobilenet_init, _mobilenet_apply),
+    "yolov3_tiny": (_yolov3_tiny_init, _yolov3_tiny_apply),
+    "yolov3": (_yolov3_init, _yolov3_apply),
+}
+
+
+def init(key, cfg: VisionConfig):
+    """Build the parameter pytree (BN pre-folded into conv weight + bias)."""
+    return _ARCH_FNS[cfg.arch][0](key, cfg)
+
+
+def apply(params, x, cfg: VisionConfig):
+    """Inference forward pass.  ``x: (N, H, W, C)`` in ``cfg.input_hw``.
+
+    Classification archs return ``(N, num_classes)`` logits; YOLO archs a
+    dict of per-scale detection maps."""
+    if x.shape[1:] != (*cfg.input_hw, cfg.in_channels):
+        raise ValueError(
+            f"{cfg.name}: expected input (N, {cfg.input_hw[0]}, "
+            f"{cfg.input_hw[1]}, {cfg.in_channels}), got {x.shape}")
+    return _ARCH_FNS[cfg.arch][1](params, x, cfg)

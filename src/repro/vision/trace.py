@@ -1,0 +1,122 @@
+"""Layer tracer: conv shapes *from the executable models*, not hand tables.
+
+``trace_model`` walks a model-zoo network under ``jax.eval_shape`` with the
+``repro.vision.blocks`` trace tap active: every ``axon.conv2d`` /
+``depthwise_conv2d`` call site records its resolved geometry without running
+any compute, so tracing full-size ResNet50/YOLOv3 at 224/416 input costs
+milliseconds.  The records convert to the ``ConvShape`` / ``GemmShape``
+types the analytic models consume, which is how ``paper_report`` reproduces
+the paper's Axon-vs-conventional throughput/energy comparison end-to-end
+from the runnable models -- and how the tests cross-validate the
+hand-transcribed tables in ``repro.core.workloads``.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+
+from repro.core.dataflows import GemmShape
+from repro.core.energy_model import (DRAM_BANDWIDTH_BYTES, PAPER_ASIC,
+                                     bounded_runtime_s, dram_energy_joules)
+from repro.core.im2col_model import ConvShape, lower_to_gemm, model_traffic
+from repro.core.runtime_model import ArrayShape, best_dataflow
+from repro.vision import models
+from repro.vision.blocks import TracedConv, trace_taps
+from repro.vision.models import VisionConfig
+
+__all__ = ["TracedConv", "trace_model", "to_conv_shape", "conv_shapes",
+           "lowered_gemms", "paper_report"]
+
+
+def trace_model(cfg: VisionConfig, *, batch: int = 1) -> list[TracedConv]:
+    """Every conv executed by ``models.apply``, in execution order, with
+    geometry as resolved by the ``axon`` front door.  Runs no compute."""
+    key = jax.random.PRNGKey(0)
+    params = jax.eval_shape(functools.partial(models.init, cfg=cfg), key)
+    x = jax.ShapeDtypeStruct((batch, *cfg.input_hw, cfg.in_channels),
+                             cfg.pdtype)
+    records: list[TracedConv] = []
+    with trace_taps(records):
+        jax.eval_shape(functools.partial(models.apply, cfg=cfg), params, x)
+    return records
+
+
+def to_conv_shape(tc: TracedConv) -> ConvShape:
+    """Convert a traced record to the analytic-model ``ConvShape``.
+
+    The analytic im2col model speaks square filters / symmetric padding /
+    uniform stride / dense channels (every zoo layer qualifies); anything
+    else is a hard error rather than a silent approximation.  Depthwise
+    records follow the ``MOBILENET_DW`` convention -- ``C_in == C_out`` with
+    per-channel semantics understood by the Fig. 14 accounting -- but
+    general grouped convs have no ConvShape encoding (a dense conversion
+    would overstate K and MACs by ``groups``x)."""
+    (sh, sw) = tc.stride
+    (pt, pb), (pl, pr) = tc.padding
+    if tc.kh != tc.kw or sh != sw or len({pt, pb, pl, pr}) != 1:
+        raise ValueError(
+            f"{tc.name}: non-square/asymmetric conv {tc} has no ConvShape "
+            "equivalent (extend repro.core.im2col_model first)")
+    if tc.groups != 1 and not tc.depthwise:
+        raise ValueError(
+            f"{tc.name}: grouped conv (groups={tc.groups}) has no ConvShape "
+            "equivalent (extend repro.core.im2col_model first)")
+    return ConvShape(H=tc.H, W=tc.W, C_in=tc.C_in, C_out=tc.C_out, n=tc.kh,
+                     stride=sh, padding=pt, name=tc.name)
+
+
+def conv_shapes(cfg: VisionConfig, *, include_depthwise: bool = False
+                ) -> list[ConvShape]:
+    """Traced dense-conv layers as ``ConvShape`` records (execution order).
+
+    Depthwise layers are excluded by default: they skip im2col entirely
+    (VPU path / Fig. 14) so they don't belong in the Fig. 11 traffic
+    accounting."""
+    return [to_conv_shape(r) for r in trace_model(cfg)
+            if include_depthwise or not r.depthwise]
+
+
+def lowered_gemms(cfg: VisionConfig) -> list[tuple[str, GemmShape]]:
+    """(name, GeMM) per dense conv, via the paper's Table 3 im2col lowering
+    ``M = C_out, K = n*n*C_in, N = H_out*W_out``."""
+    return [(c.name, lower_to_gemm(c)) for c in conv_shapes(cfg)]
+
+
+def paper_report(cfg: VisionConfig, *, array: tuple[int, int] = (16, 16),
+                 bytes_per_elem: int = 2, feeder_group: int = 16) -> dict:
+    """The paper's Axon-vs-conventional comparison from the runnable model.
+
+    For every traced conv layer, lower to GeMM and take the best-dataflow
+    scale-up runtime on the given array (Eq. 2 / Table 2) for both
+    orchestrations, and the Fig. 11 operand-traffic model for both im2col
+    schemes; combine into roofline-bounded runtimes (compute cycles vs DRAM
+    bandwidth) and DRAM energy.  Returns the throughput and energy ratios
+    the paper headlines, plus per-layer detail."""
+    arr = ArrayShape(*array)
+    convs = conv_shapes(cfg)
+    gemms = [lower_to_gemm(c) for c in convs]
+    cycles_sa = sum(best_dataflow(g, arr, axon=False)[1] for g in gemms)
+    cycles_ax = sum(best_dataflow(g, arr, axon=True)[1] for g in gemms)
+    sw_bytes, ax_bytes = model_traffic(convs, bytes_per_elem=bytes_per_elem,
+                                       feeder_group=feeder_group)
+    t_sa = bounded_runtime_s(cycles_sa, sw_bytes)
+    t_ax = bounded_runtime_s(cycles_ax, ax_bytes)
+    e_sa = dram_energy_joules(sw_bytes)
+    e_ax = dram_energy_joules(ax_bytes)
+    return {
+        "model": cfg.name,
+        "array": list(array),
+        "conv_layers": len(convs),
+        "macs": sum(c.macs for c in convs),
+        "cycles": {"conventional": cycles_sa, "axon": cycles_ax},
+        "traffic_bytes": {"sw_im2col": sw_bytes, "axon": ax_bytes,
+                          "reduction": 1.0 - ax_bytes / sw_bytes},
+        "runtime_s": {"conventional": t_sa, "axon": t_ax,
+                      "freq_hz": PAPER_ASIC.freq_hz,
+                      "dram_bw": DRAM_BANDWIDTH_BYTES},
+        "throughput_speedup": t_sa / t_ax,
+        "cycle_speedup": cycles_sa / cycles_ax,   # fill-latency-only view
+        "dram_energy_j": {"conventional": e_sa, "axon": e_ax},
+        "energy_ratio": e_sa / e_ax,
+    }

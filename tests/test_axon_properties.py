@@ -1,4 +1,5 @@
-"""Property-based differential tests: ``axon.einsum``/``matmul`` vs jnp.
+"""Property-based differential tests: ``axon.einsum``/``matmul``/``conv2d``
+vs jnp / lax.
 
 Every kernel-dispatched backend must agree with ``jnp.einsum`` on any
 matmul-shaped spec the planner accepts -- and fall back to XLA (still
@@ -8,6 +9,12 @@ degenerate M=1 / N=1 / K=1 / empty-dim shapes) that always runs, and
 hypothesis fuzzing over random dimension assignments when hypothesis is
 installed (CI); without it the ``@given`` tests skip via
 ``_hypothesis_compat``.
+
+The conv section fuzzes the generalized ``axon.conv2d`` /
+``depthwise_conv2d`` front door (tuple strides, asymmetric/SAME padding,
+groups, 1x1, kernel == input) against ``jax.lax.conv_general_dilated``, and
+pins the dispatch edge cases (kernel larger than the padded input,
+zero-area outputs) to the XLA fallback instead of a Pallas shape failure.
 """
 import jax
 import jax.numpy as jnp
@@ -171,3 +178,206 @@ class TestEinsumProperties:
             got = axon.matmul(a, b)
         np.testing.assert_allclose(got, jnp.matmul(a, b),
                                    rtol=2e-4, atol=2e-5)
+
+
+# --------------------------------------------------------------- convolution
+
+from repro.kernels import ref  # noqa: E402
+
+
+def check_conv(x_shape, w_shape, *, stride=1, padding=0, groups=1,
+               dtype=jnp.float32, depthwise=False):
+    """axon conv under ``interpret`` must match lax.conv_general_dilated in
+    shape and values (the ``xla`` backend IS that call, checked too)."""
+    x = _operand(x_shape, dtype, 0)
+    w = _operand(w_shape, dtype, 1) * 0.3
+    op = axon.depthwise_conv2d if depthwise else axon.conv2d
+    kw = {} if depthwise else {"groups": groups}
+    # resolve SAME/asymmetric once, against lax directly (not via our oracle)
+    strides = ref.normalize_stride(stride)
+    pads = padding if isinstance(padding, str) \
+        else list(ref.normalize_padding(padding))
+    w_lax = w[:, :, None, :] if depthwise else w
+    fgc = x_shape[-1] if depthwise else groups
+    want = jax.lax.conv_general_dilated(
+        x.astype(jnp.float32), w_lax.astype(jnp.float32),
+        window_strides=strides, padding=pads,
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+        feature_group_count=fgc).astype(dtype)
+    for backend in ("interpret", "xla"):
+        with axon.policy(backend=backend):
+            got = op(x, w, stride=stride, padding=padding, **kw)
+        assert got.shape == want.shape, (backend, got.shape, want.shape)
+        np.testing.assert_allclose(np.asarray(got, np.float32),
+                                   np.asarray(want, np.float32),
+                                   err_msg=str((backend, x_shape, w_shape,
+                                                stride, padding, groups)),
+                                   **_tol(dtype))
+
+
+class TestConvExamples:
+    @pytest.mark.parametrize("x,w,kw", [
+        ((1, 10, 8, 4), (3, 3, 4, 6), dict(stride=(2, 3), padding=1)),
+        ((2, 9, 9, 3), (3, 3, 3, 4), dict(padding=((0, 2), (1, 0)))),
+        ((1, 11, 7, 4), (3, 3, 4, 4), dict(stride=2, padding="SAME")),
+        ((1, 8, 8, 4), (1, 1, 4, 8), dict(padding="VALID")),       # 1x1
+        ((1, 6, 6, 4), (6, 6, 4, 4), dict()),                      # k == h
+        ((2, 8, 8, 6), (3, 3, 3, 8), dict(padding=1, groups=2)),
+        ((1, 7, 7, 8), (1, 1, 2, 12), dict(groups=4)),             # grouped 1x1
+        ((1, 5, 9, 4), (3, 5, 4, 6), dict(padding=(1, 2))),        # kh != kw
+    ], ids=["tuple-stride", "asym-pad", "same-s2", "1x1", "k==h",
+            "groups2", "groups4-1x1", "rect-kernel"])
+    def test_matches_lax(self, x, w, kw):
+        check_conv(x, w, **kw)
+
+    @pytest.mark.parametrize("kw", [
+        dict(stride=(2, 1), padding="SAME"),
+        dict(stride=2, padding=1),
+        dict(padding=((1, 0), (0, 1))),
+    ], ids=["same", "stride2", "asym"])
+    def test_depthwise_matches_lax(self, kw):
+        check_conv((2, 9, 8, 6), (3, 3, 6), depthwise=True, **kw)
+
+    def test_invalid_groups_raise(self):
+        x = _operand((1, 8, 8, 6), jnp.float32, 0)
+        w = _operand((3, 3, 2, 8), jnp.float32, 1)
+        with pytest.raises(ValueError, match="groups"):
+            axon.conv2d(x, w, groups=4)           # 6 != 2 * 4
+        with pytest.raises(ValueError, match="groups"):
+            axon.conv2d(x, w, padding=1, groups=0)
+
+    def test_bad_padding_string_raises(self):
+        x = _operand((1, 8, 8, 4), jnp.float32, 0)
+        w = _operand((3, 3, 4, 4), jnp.float32, 1)
+        with pytest.raises(ValueError, match="padding"):
+            axon.conv2d(x, w, padding="FULL")
+
+
+class TestConvDispatchEdgeCases:
+    """Satellite regression: shapes the Pallas kernel cannot lower must take
+    the XLA reference path, not die in a pallas_call shape failure."""
+
+    @pytest.mark.parametrize("backend", ["pallas", "interpret"])
+    def test_kernel_larger_than_padded_input(self, backend):
+        x = _operand((2, 3, 3, 4), jnp.float32, 0)
+        w = _operand((7, 7, 4, 5), jnp.float32, 1)
+        with axon.policy(backend=backend):
+            out = axon.conv2d(x, w)               # zero-area, XLA fallback
+        assert out.shape == (2, 0, 0, 5)
+
+    @pytest.mark.parametrize("backend", ["pallas", "interpret"])
+    def test_zero_area_output_exact(self, backend):
+        # H + pads == kh - 1: H_out == 0 exactly
+        x = _operand((1, 4, 6, 3), jnp.float32, 0)
+        w = _operand((5, 3, 3, 2), jnp.float32, 1)
+        with axon.policy(backend=backend):
+            out = axon.conv2d(x, w, padding=0)
+        assert out.shape == (1, 0, 4, 2)
+
+    def test_depthwise_zero_area(self):
+        x = _operand((1, 2, 8, 4), jnp.float32, 0)
+        w = _operand((5, 3, 4), jnp.float32, 1)
+        with axon.policy(backend="interpret"):
+            out = axon.depthwise_conv2d(x, w, padding=((0, 0), (1, 1)))
+        assert out.shape == (1, 0, 8, 4)
+
+    def test_empty_batch_and_channels(self):
+        with axon.policy(backend="interpret"):
+            out = axon.conv2d(_operand((0, 8, 8, 4), jnp.float32, 0),
+                              _operand((3, 3, 4, 8), jnp.float32, 1))
+            assert out.shape == (0, 6, 6, 8)
+            out = axon.conv2d(_operand((1, 8, 8, 0), jnp.float32, 0),
+                              _operand((3, 3, 0, 8), jnp.float32, 1))
+            assert out.shape == (1, 6, 6, 8)
+
+    def test_kernel_raises_clear_error_when_called_directly(self):
+        """The raw kernel refuses zero-area outputs with a pointer to the
+        front door (instead of a cryptic Pallas grid failure)."""
+        from repro.kernels.im2col_conv import im2col_conv
+        x = _operand((1, 3, 3, 4), jnp.float32, 0)
+        w = _operand((5, 5, 4, 2), jnp.float32, 1)
+        with pytest.raises(ValueError, match="zero-area"):
+            im2col_conv(x, w, interpret=True)
+
+    def test_stride_and_padding_validation(self):
+        x = _operand((1, 8, 8, 4), jnp.float32, 0)
+        w = _operand((3, 3, 4, 4), jnp.float32, 1)
+        with pytest.raises(ValueError, match="stride"):
+            axon.conv2d(x, w, stride=0)
+        with pytest.raises(ValueError, match="padding"):
+            axon.conv2d(x, w, padding=-1)
+
+
+class TestConvProperties:
+    @given(h=st.integers(4, 10), w=st.integers(4, 10),
+           cin=st.integers(1, 6), cout=st.integers(1, 6),
+           kh=st.sampled_from([1, 2, 3, 5]), kw=st.sampled_from([1, 3]),
+           sh=st.integers(1, 3), sw=st.integers(1, 3),
+           pad=st.sampled_from([0, 1, 2, "SAME", "VALID", ((0, 1), (2, 0))]),
+           dtype=st.sampled_from(["float32", "bfloat16"]))
+    @settings(max_examples=25, deadline=None)
+    def test_conv2d_random(self, h, w, cin, cout, kh, kw, sh, sw, pad, dtype):
+        """Any (stride, padding, kernel) geometry -- including zero-area
+        outputs -- matches lax under both kernel and XLA backends."""
+        check_conv((1, h, w, cin), (kh, kw, cin, cout), stride=(sh, sw),
+                   padding=pad, dtype=jnp.dtype(dtype))
+
+    @given(h=st.integers(4, 9), cig=st.integers(1, 4),
+           groups=st.sampled_from([1, 2, 4]), cog=st.integers(1, 4),
+           k=st.sampled_from([1, 3]), s=st.integers(1, 2))
+    @settings(max_examples=15, deadline=None)
+    def test_grouped_conv_random(self, h, cig, groups, cog, k, s):
+        """Grouped conv (vmapped per-group GeMMs) matches lax's
+        feature_group_count for any group/channel split."""
+        check_conv((2, h, h, cig * groups), (k, k, cig, cog * groups),
+                   stride=s, padding=k // 2, groups=groups)
+
+    @given(h=st.integers(4, 9), c=st.integers(1, 8),
+           k=st.sampled_from([1, 3, 5]), s=st.integers(1, 2),
+           pad=st.sampled_from([0, 1, "SAME"]))
+    @settings(max_examples=15, deadline=None)
+    def test_depthwise_random(self, h, c, k, s, pad):
+        check_conv((1, h, h, c), (k, k, c), stride=s, padding=pad,
+                   depthwise=True)
+
+    @given(h=st.integers(3, 6), k=st.integers(1, 3))
+    @settings(max_examples=10, deadline=None)
+    def test_kernel_equals_input(self, h, k):
+        """k == h (one output pixel) and k > h-ish geometries."""
+        check_conv((1, h, h, 3), (h, h, 3, 4))
+        check_conv((1, h, h, 3), (h, k, 3, 4))
+
+
+class TestConvGradsGeneralized:
+    """jax.grad through the generalized conv paths (tuple stride, SAME,
+    groups, depthwise) must match the XLA backend's grads."""
+
+    def _grads(self, backend, op, x, w, **kw):
+        def loss(xx, ww):
+            with axon.policy(backend=backend):
+                return (op(xx, ww, **kw) ** 2).sum()
+        return jax.grad(loss, argnums=(0, 1))(x, w)
+
+    @pytest.mark.parametrize("kw", [
+        dict(stride=(2, 3), padding="SAME", groups=2),
+        dict(stride=2, padding=((0, 2), (1, 0))),
+        dict(stride=(1, 2), padding=1),
+    ], ids=["same-groups", "asym", "tuple-stride"])
+    def test_conv2d_grad(self, kw):
+        x = _operand((2, 9, 8, 6), jnp.float32, 0)
+        w = _operand((3, 3, 6 // kw.get("groups", 1), 8), jnp.float32, 1) * 0.3
+        got = self._grads("interpret", axon.conv2d, x, w, **kw)
+        want = self._grads("xla", axon.conv2d, x, w, **kw)
+        for g, r in zip(got, want):
+            np.testing.assert_allclose(np.asarray(g), np.asarray(r),
+                                       rtol=2e-4, atol=2e-4)
+
+    def test_depthwise_grad(self):
+        x = _operand((2, 8, 9, 5), jnp.float32, 0)
+        w = _operand((3, 3, 5), jnp.float32, 1) * 0.3
+        kw = dict(stride=(2, 1), padding="SAME")
+        got = self._grads("interpret", axon.depthwise_conv2d, x, w, **kw)
+        want = self._grads("xla", axon.depthwise_conv2d, x, w, **kw)
+        for g, r in zip(got, want):
+            np.testing.assert_allclose(np.asarray(g), np.asarray(r),
+                                       rtol=2e-4, atol=2e-4)

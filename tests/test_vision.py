@@ -1,0 +1,243 @@
+"""The vision subsystem: model zoo, engine, tracer, and table cross-checks.
+
+Three layers of assurance:
+
+  1. the reduced model zoo runs under ``backend="pallas"`` (interpret on
+     CPU) and matches ``backend="xla"`` numerically, layer stack included;
+  2. the engine's continuous batching returns exactly what a direct batched
+     ``apply`` returns, in request order, for mixed-arrival traffic;
+  3. shapes traced from the FULL executable models reproduce the
+     hand-transcribed workload tables in ``repro.core.workloads`` exactly
+     (the tables feed the paper figures -- transcription errors fail here),
+     and drive the runtime/energy models to the paper's Axon-vs-SA ratios.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import axon
+from repro.configs import VISION_IDS, get_vision_config
+from repro.core import workloads
+from repro.core.im2col_model import lower_to_gemm
+from repro.vision import models, trace
+from repro.vision.engine import ImageRequest, VisionEngine
+
+KEY = jax.random.PRNGKey(0)
+
+
+def _shape_tuple(c):
+    return (c.H, c.W, c.C_in, c.C_out, c.n, c.stride, c.padding)
+
+
+@pytest.fixture(scope="module")
+def zoo():
+    """Reduced params + a test batch per vision arch (init once per module)."""
+    out = {}
+    for name in VISION_IDS:
+        cfg = get_vision_config(name, reduced=True)
+        params = models.init(KEY, cfg)
+        x = jax.random.normal(jax.random.PRNGKey(1),
+                              (2, *cfg.input_hw, cfg.in_channels), cfg.pdtype)
+        out[name] = (cfg, params, x)
+    return out
+
+
+class TestModelZoo:
+    @pytest.mark.parametrize("name", VISION_IDS)
+    def test_pallas_matches_xla(self, zoo, name):
+        """The acceptance gate: forward under the kernel backend == XLA."""
+        cfg, params, x = zoo[name]
+        with axon.policy(backend="xla"):
+            want = models.apply(params, x, cfg)
+        with axon.policy(backend="pallas"):    # interpret-mode on CPU CI
+            got = models.apply(params, x, cfg)
+        assert jax.tree.structure(got) == jax.tree.structure(want)
+        for g, w in zip(jax.tree.leaves(got), jax.tree.leaves(want)):
+            assert g.shape == w.shape
+            np.testing.assert_allclose(np.asarray(g), np.asarray(w),
+                                       rtol=2e-4, atol=2e-4)
+
+    def test_output_shapes(self, zoo):
+        cfg, params, x = zoo["resnet50"]
+        with axon.policy(backend="xla"):
+            logits = models.apply(params, x, cfg)
+        assert logits.shape == (2, cfg.num_classes)
+        cfg, params, x = zoo["yolov3-tiny"]
+        with axon.policy(backend="xla"):
+            dets = models.apply(params, x, cfg)
+        assert set(dets) == {"det1", "det2"}
+        h = cfg.input_hw[0] // 32
+        assert dets["det1"].shape == (2, h, h, cfg.head_channels)
+        assert dets["det2"].shape == (2, 2 * h, 2 * h, cfg.head_channels)
+
+    def test_input_shape_validated(self, zoo):
+        cfg, params, _ = zoo["resnet50"]
+        bad = jnp.zeros((1, 8, 8, 3), cfg.pdtype)
+        with pytest.raises(ValueError, match="expected input"):
+            models.apply(params, bad, cfg)
+
+
+class TestEngine:
+    def test_matches_direct_apply_in_request_order(self, zoo):
+        cfg, params, _ = zoo["mobilenet-v1"]
+        rng = np.random.default_rng(0)
+        imgs = rng.normal(size=(10, *cfg.input_hw, 3)).astype(np.float32)
+        # staggered arrivals; batch_slots=4 forces multiple partial batches
+        reqs = [ImageRequest(image=imgs[i], arrival_s=0.005 * (i // 3))
+                for i in range(len(imgs))]
+        eng = VisionEngine(params, cfg, batch_slots=4)
+        eng.warmup()
+        outs = eng.infer(reqs)
+        with axon.policy(backend="xla"):
+            want = models.apply(params, jnp.asarray(imgs), cfg)
+        np.testing.assert_allclose(np.stack(outs), np.asarray(want),
+                                   rtol=1e-5, atol=1e-5)
+
+    def test_stats_and_occupancy(self, zoo):
+        cfg, params, _ = zoo["mobilenet-v1"]
+        rng = np.random.default_rng(1)
+        reqs = [ImageRequest(image=rng.normal(
+            size=(*cfg.input_hw, 3)).astype(np.float32)) for _ in range(8)]
+        eng = VisionEngine(params, cfg, batch_slots=4)
+        eng.warmup()
+        eng.infer(reqs)
+        st = eng.last_stats
+        assert st["images"] == 8 and st["steps"] == 2
+        assert st["mean_occupancy"] == pytest.approx(1.0)
+        assert st["img_per_s"] > 0
+        assert st["p99_latency_s"] >= st["p50_latency_s"] > 0
+
+    def test_pytree_outputs_for_detector(self, zoo):
+        cfg, params, _ = zoo["yolov3-tiny"]
+        rng = np.random.default_rng(2)
+        reqs = [ImageRequest(image=rng.normal(
+            size=(*cfg.input_hw, 3)).astype(np.float32)) for _ in range(3)]
+        eng = VisionEngine(params, cfg, batch_slots=2)
+        outs = eng.infer(reqs)
+        assert all(set(o) == {"det1", "det2"} for o in outs)
+        with axon.policy(backend="xla"):
+            want = models.apply(
+                params, jnp.asarray(np.stack([r.image for r in reqs])), cfg)
+        for i, o in enumerate(outs):
+            np.testing.assert_allclose(o["det2"], np.asarray(want["det2"][i]),
+                                       rtol=1e-5, atol=1e-5)
+
+    def test_bad_image_shape_rejected(self, zoo):
+        cfg, params, _ = zoo["mobilenet-v1"]
+        eng = VisionEngine(params, cfg, batch_slots=2)
+        with pytest.raises(ValueError, match="image shape"):
+            eng.infer([ImageRequest(image=np.zeros((4, 4, 3), np.float32))])
+
+
+class TestTraceCrossValidation:
+    """The satellite gate: hand tables == shapes traced from runnable models."""
+
+    def test_resnet50_table_matches_trace(self):
+        traced = trace.conv_shapes(get_vision_config("resnet50"))
+        table = workloads.resnet50_convs()
+        assert [_shape_tuple(c) for c in traced] \
+            == [_shape_tuple(c) for c in table]
+
+    def test_yolov3_table_matches_trace(self):
+        traced = trace.conv_shapes(get_vision_config("yolov3"))
+        table = workloads.yolov3_convs()
+        assert [_shape_tuple(c) for c in traced] \
+            == [_shape_tuple(c) for c in table]
+
+    def test_yolov3_tiny_table_matches_trace(self):
+        traced = trace.conv_shapes(get_vision_config("yolov3-tiny"))
+        table = workloads.yolov3_tiny_convs()
+        assert [_shape_tuple(c) for c in traced] \
+            == [_shape_tuple(c) for c in table]
+
+    def test_mobilenet_dw_table_matches_trace(self):
+        """MOBILENET_DW lists the *unique* DW shapes (14x14x512 s1 runs 5x)."""
+        recs = [r for r in trace.trace_model(get_vision_config("mobilenet-v1"))
+                if r.depthwise]
+        assert len(recs) == 13
+        uniq = list(dict.fromkeys(
+            _shape_tuple(trace.to_conv_shape(r)) for r in recs))
+        assert uniq == [_shape_tuple(c) for c in workloads.MOBILENET_DW]
+
+    @pytest.mark.parametrize("entry,model", [
+        ("Resnet50_0_conv2d", "resnet50"),
+        ("Resnet50_1_conv2d", "resnet50"),
+        ("YOLO_v3_0_conv2d", "yolov3"),
+        ("YOLO_v3_1_conv2d", "yolov3"),
+    ])
+    def test_table3_conv_gemms_vs_trace(self, entry, model):
+        """Table 3's printed conv GeMMs carry real filter geometry but NOT
+        real window counts: (M, K) = (C_out, n*n*C_in) must match a layer
+        the runnable model executes, while the printed N disagrees with the
+        standard @224/@416 architectures (e.g. Resnet50_1 prints N=676=26^2
+        where the actual 3x3x512 layer has 49=7^2).  The traced shapes --
+        validated layer-for-layer above -- therefore supersede Table 3 as
+        the paper-figure inputs; this test documents the discrepancy."""
+        printed = workloads.TABLE3[entry]
+        traced = {g for _, g in trace.lowered_gemms(get_vision_config(model))}
+        assert any(g.M == printed.M and g.K == printed.K for g in traced), \
+            f"{entry}: no traced layer with filter geometry " \
+            f"M={printed.M}, K={printed.K}"
+        assert printed not in traced, \
+            f"{entry} now matches a traced layer exactly -- " \
+            "promote Table 3 back to ground truth"
+
+
+class TestTracer:
+    def test_trace_runs_no_compute(self):
+        """Tracing full ResNet50@224 must be metadata-only (fast), and the
+        records carry resolved geometry."""
+        recs = trace.trace_model(get_vision_config("resnet50"))
+        assert len(recs) == 53
+        first = recs[0]
+        assert (first.H, first.W, first.C_in, first.C_out) == (224, 224, 3, 64)
+        assert first.stride == (2, 2) and first.padding == ((3, 3), (3, 3))
+        assert first.H_out == first.W_out == 112
+        assert all(r.macs > 0 for r in recs)
+
+    def test_reduced_config_traces_scaled_shapes(self):
+        recs = trace.trace_model(get_vision_config("resnet50", reduced=True))
+        assert recs[0].H == 32 and recs[0].C_out == 8
+
+    def test_to_conv_shape_rejects_asymmetric(self):
+        tc = trace.TracedConv(name="bad", H=8, W=8, C_in=4, C_out=4, kh=3,
+                              kw=3, stride=(2, 1),
+                              padding=((1, 1), (1, 1)))
+        with pytest.raises(ValueError, match="no ConvShape equivalent"):
+            trace.to_conv_shape(tc)
+
+    def test_to_conv_shape_rejects_grouped_non_depthwise(self):
+        """A dense ConvShape would overstate K/MACs by groups-x."""
+        tc = trace.TracedConv(name="bad", H=8, W=8, C_in=8, C_out=8, kh=3,
+                              kw=3, stride=(1, 1), padding=((1, 1), (1, 1)),
+                              groups=2)
+        with pytest.raises(ValueError, match="grouped conv"):
+            trace.to_conv_shape(tc)
+
+    def test_depthwise_excluded_from_fig11_accounting(self):
+        cfg = get_vision_config("mobilenet-v1")
+        dense_only = trace.conv_shapes(cfg)
+        with_dw = trace.conv_shapes(cfg, include_depthwise=True)
+        assert len(with_dw) == len(dense_only) + 13
+
+
+class TestPaperReport:
+    @pytest.mark.parametrize("name", ["resnet50", "yolov3"])
+    def test_axon_wins_on_runtime_and_energy(self, name):
+        rep = trace.paper_report(get_vision_config(name))
+        assert rep["throughput_speedup"] >= 1.0
+        assert rep["cycle_speedup"] > 1.0
+        # the paper's §5.2.1 energy claim direction: less DRAM traffic, and
+        # an energy win in the 1.x-2.x band for these conv stacks
+        assert 0 < rep["traffic_bytes"]["reduction"] < 1
+        assert 1.2 < rep["energy_ratio"] < 3.0
+        assert rep["conv_layers"] == len(
+            trace.conv_shapes(get_vision_config(name)))
+
+    def test_report_consistent_with_gemm_lowering(self):
+        cfg = get_vision_config("yolov3-tiny")
+        rep = trace.paper_report(cfg)
+        macs = sum(lower_to_gemm(c).M * lower_to_gemm(c).K * lower_to_gemm(c).N
+                   for c in trace.conv_shapes(cfg))
+        assert rep["macs"] == macs
