@@ -1,0 +1,163 @@
+"""Int8 vs float serving benchmark: the precision axis of the paper's claims.
+
+Three sections in one artifact (BENCH_quant.json):
+
+  vision  : reduced/full ResNet50 through ``VisionEngine`` -- float params
+            vs PTQ-calibrated int8 params on the SAME Pallas backend
+            (interpret on CPU CI, real kernels on TPU) -- img/s, p99, and
+            the top-1 agreement of the two paths on a fixed eval batch
+            (the accuracy side of the accuracy-vs-speed trade).
+  serve   : a reduced LM through ``ServeEngine`` -- float vs weight-only
+            int8 (per-channel quantized projections, int8 GEMV decode) --
+            tokens/s on a small mixed-length workload.
+  modeled : the analytic counterpart from ``trace.paper_report`` on the
+            FULL configs: int8-vs-bf16 operand traffic, DRAM energy, and
+            roofline runtime ratios for the Axon orchestration (tracing
+            runs no compute, so full-size models are free).
+
+Usage:
+  PYTHONPATH=src python benchmarks/quant_bench.py [--smoke] [--out PATH]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro import axon, quant
+from repro.configs import get_config, get_vision_config
+from repro.models import transformer as T
+from repro.serve.engine import Request, ServeEngine
+from repro.vision import models, trace
+from repro.vision.engine import ImageRequest, VisionEngine
+
+VISION_MODEL = "resnet50"
+SERVE_ARCH = "yi-9b"
+MODELED = ("resnet50", "yolov3-tiny")
+
+
+def bench_vision(*, smoke: bool, images: int, slots: int) -> dict:
+    cfg = get_vision_config(VISION_MODEL, reduced=smoke)
+    params = models.init(jax.random.PRNGKey(0), cfg)
+    rng = np.random.default_rng(0)
+    calib = jnp.asarray(rng.normal(
+        size=(4, *cfg.input_hw, cfg.in_channels)).astype(np.float32))
+    qparams = quant.quantize_model(
+        params, lambda p, b: models.apply(p, b, cfg), [calib])
+
+    n = min(images, 6) if smoke else images
+    reqs = [ImageRequest(image=rng.normal(
+        size=(*cfg.input_hw, cfg.in_channels)).astype(np.float32))
+        for _ in range(n)]
+
+    entry: dict = {"config": cfg.name, "images": n}
+    outs = {}
+    for label, p, prec in (("float", params, "float"),
+                           ("int8", qparams, "int8")):
+        pol = axon.ExecutionPolicy(backend="pallas", precision=prec)
+        eng = VisionEngine(p, cfg, batch_slots=slots, policy=pol)
+        eng.warmup()
+        outs[label] = eng.infer(reqs)
+        st = eng.last_stats
+        entry[label] = {
+            "img_per_s": round(st["img_per_s"], 2),
+            "wall_s": round(st["wall_s"], 4),
+            "p99_latency_s": round(st["p99_latency_s"], 4),
+        }
+    agree = sum(int(np.argmax(q) == np.argmax(f))
+                for q, f in zip(outs["int8"], outs["float"]))
+    entry["speedup_int8"] = round(
+        entry["int8"]["img_per_s"] / max(entry["float"]["img_per_s"], 1e-9),
+        3)
+    entry["top1_agreement"] = round(agree / n, 3)
+    return entry
+
+
+def bench_serve(*, smoke: bool, n_requests: int, slots: int) -> dict:
+    cfg = get_config(SERVE_ARCH, reduced=True)     # full LMs don't fit CPU CI
+    params = T.init_params(jax.random.PRNGKey(0), cfg)
+    rng = np.random.default_rng(1)
+    n = min(n_requests, 4) if smoke else n_requests
+    reqs = [Request(prompt=[int(t) for t in rng.integers(
+                2, cfg.vocab, rng.integers(2, 8))],
+                    max_new_tokens=int(rng.integers(3, 7)), eos_id=1)
+            for _ in range(n)]
+    pol = axon.ExecutionPolicy(backend="pallas")
+
+    entry: dict = {"config": SERVE_ARCH + "-reduced", "requests": n}
+    for label, kwargs in (("float", {}), ("int8_weight_only",
+                                          {"quantized": True})):
+        eng = ServeEngine(params, cfg, batch_slots=slots, max_len=64,
+                          policy=pol, **kwargs)
+        eng.generate(reqs)                         # warm the two step shapes
+        eng.generate(reqs)
+        st = eng.last_stats
+        entry[label] = {
+            "tokens_per_s": round(st["tokens_per_s"], 2),
+            "generated_tokens": st["generated_tokens"],
+            "steps": st["steps"],
+        }
+    entry["speedup_int8"] = round(
+        entry["int8_weight_only"]["tokens_per_s"]
+        / max(entry["float"]["tokens_per_s"], 1e-9), 3)
+    return entry
+
+
+def modeled_section() -> dict:
+    out = {}
+    for name in MODELED:
+        per = trace.paper_report(get_vision_config(name))["precision"]
+        ratios = per["int8_vs_bf16"]
+        out[name] = {
+            "bf16_operand_mb": round(per["bf16"]["operand_bytes"] / 1e6, 2),
+            "int8_operand_mb": round(per["int8"]["operand_bytes"] / 1e6, 2),
+            "traffic_ratio": round(ratios["traffic_ratio"], 4),
+            "energy_ratio": round(ratios["energy_ratio"], 4),
+            "throughput_speedup": round(ratios["throughput_speedup"], 4),
+        }
+    return out
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="reduced configs + tiny workload for CPU CI")
+    ap.add_argument("--images", type=int, default=16)
+    ap.add_argument("--requests", type=int, default=8)
+    ap.add_argument("--slots", type=int, default=2)
+    ap.add_argument("--out", default="benchmarks/results/BENCH_quant.json")
+    args = ap.parse_args()
+
+    result = {"smoke": args.smoke, "slots": args.slots}
+    result["vision"] = {VISION_MODEL: bench_vision(
+        smoke=args.smoke, images=args.images, slots=args.slots)}
+    v = result["vision"][VISION_MODEL]
+    print(f"{VISION_MODEL}: float {v['float']['img_per_s']} img/s | int8 "
+          f"{v['int8']['img_per_s']} img/s ({v['speedup_int8']}x, top-1 "
+          f"agreement {v['top1_agreement'] * 100:.0f}%)")
+
+    result["serve"] = {SERVE_ARCH: bench_serve(
+        smoke=args.smoke, n_requests=args.requests, slots=args.slots)}
+    s = result["serve"][SERVE_ARCH]
+    print(f"{SERVE_ARCH}: float {s['float']['tokens_per_s']} tok/s | "
+          f"int8 weight-only {s['int8_weight_only']['tokens_per_s']} tok/s "
+          f"({s['speedup_int8']}x)")
+
+    result["modeled"] = modeled_section()
+    for name, m in result["modeled"].items():
+        print(f"modeled {name}: int8 traffic {m['traffic_ratio']}x, DRAM "
+              f"energy {m['energy_ratio']}x better, runtime "
+              f"{m['throughput_speedup']}x")
+
+    os.makedirs(os.path.dirname(args.out) or ".", exist_ok=True)
+    with open(args.out, "w") as f:
+        json.dump(result, f, indent=1)
+    print(f"wrote {args.out}")
+
+
+if __name__ == "__main__":
+    main()

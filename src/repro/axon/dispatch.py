@@ -13,6 +13,13 @@ backend -- lowers matmul-shaped contractions onto the Axon kernels:
     the 2-D kernel;
   * anything else (3+ operands, repeated labels, traced sums) -> XLA.
 
+Quantized operands (``repro.quant.QuantizedTensor`` weights) take a fourth
+route: under ``ExecutionPolicy(precision="int8")`` they dispatch the int8
+Pallas kernels (``quant_gemm`` / ``quant_conv2d``, with weight-only GEMV for
+decode-shaped steps), and under any other policy they dequantize onto the
+float paths above -- which is exactly the reference the differential tests
+compare against.
+
 Mapper decisions are LRU-cached per (shape, dtype) in ``repro.core.mapper``,
 so the candidate sweep runs once per unique GeMM shape per process.  Kernel
 dispatches carry a ``jax.custom_vjp`` whose backward is two more Axon GeMMs
@@ -37,8 +44,12 @@ from repro.kernels.axon_gemm import axon_gemm
 from repro.kernels.dwconv import dwconv
 from repro.kernels.gemv import gemv as gemv_kernel
 from repro.kernels.im2col_conv import im2col_conv
+from repro.kernels.quant_gemm import quant_gemm, quant_im2col_conv, wq_gemv
 from repro.kernels.zero_gate_gemm import zero_gate_gemm
 from repro.kernels import ref
+from repro.quant import calibrate as _qcal
+from repro.quant.qtensor import (QuantizedTensor, dequantize,
+                                 quantize_activation)
 
 
 # ---------------------------------------------------------------------------
@@ -115,6 +126,29 @@ def plan_contraction(spec: str, lhs_shape: tuple[int, ...],
     return ContractionPlan(
         kind=kind, lhs_perm=lhs_perm, rhs_perm=rhs_perm, B=B, M=M, K=K, N=N,
         out_group_shape=tuple(size[c] for c in grouped), out_perm=out_perm)
+
+
+@functools.lru_cache(maxsize=4096)
+def _rhs_sole_n_axis(spec: str, lhs_ndim: int, rhs_ndim: int) -> int | None:
+    """The rhs axis carrying the contraction's ONLY n-group label, or None.
+
+    The quantized kernels fold a per-channel weight scale into the epilogue
+    as a per-output-column vector, which is exact iff the scale varies along
+    exactly this axis (column scaling commutes with the K-sum)."""
+    if "->" not in spec or "." in spec:
+        return None
+    inputs, out = spec.split("->")
+    parts = [p.strip() for p in inputs.split(",")]
+    if len(parts) != 2:
+        return None
+    la, lb, lo = parts[0], parts[1], out.strip()
+    if len(la) != lhs_ndim or len(lb) != rhs_ndim:
+        return None
+    sa = set(la)
+    n_lbls = [c for c in lo if c in set(lb) and c not in sa]
+    if len(n_lbls) != 1:
+        return None
+    return lb.index(n_lbls[0])
 
 
 # ---------------------------------------------------------------------------
@@ -272,6 +306,134 @@ def _xla_einsum(spec, *operands, precision=None, preferred_element_type=None):
                       preferred_element_type=preferred_element_type)
 
 
+# ---------------------------------------------------------------------------
+# quantized kernels (inference-only: no custom VJP -- PTQ params are frozen)
+# ---------------------------------------------------------------------------
+
+
+@functools.lru_cache(maxsize=None)
+def _quant_gemm_callable(block: tuple[int, int, int], interpret: bool,
+                         out_dtype: str):
+    return jax.jit(functools.partial(
+        quant_gemm, block=block, out_dtype=jnp.dtype(out_dtype),
+        interpret=interpret))
+
+
+@functools.lru_cache(maxsize=None)
+def _wq_gemv_callable(block_k: int, block_n: int, interpret: bool,
+                      out_dtype: str):
+    return jax.jit(functools.partial(
+        wq_gemv, block_k=block_k, block_n=block_n,
+        out_dtype=jnp.dtype(out_dtype), interpret=interpret))
+
+
+@registry.register("quant_gemm")
+def _quant_gemm_impl(at, bt, scale, pol: ExecutionPolicy, out_dtype):
+    """(M, K) x (K, N) int8 weight GeMM with fused dequant epilogue.
+
+    ``at`` int8 = full int8 (int32 accumulation); ``at`` float = weight-only.
+    Small-M float activations (decode steps) ride the streaming GEMV."""
+    M, K = at.shape
+    N = bt.shape[1]
+    if at.dtype != jnp.int8 and M <= 8:
+        if pol.block is not None:
+            bk, bn = pol.block[1], pol.block[2]
+        else:
+            bk, bn = min(512, K), min(1024, N)
+        mv = _wq_gemv_callable(bk, bn, pol.interpret(),
+                               jnp.dtype(out_dtype).name)
+        return mv(at, bt, scale)
+    # the dominant streamed operand is the 1-byte weight (weight-only) or
+    # both int8 operands: let the mapper block for 1-byte traffic
+    block, _ = _mapped_blocking(pol, M, K, N, 1)
+    mm = _quant_gemm_callable(block, pol.interpret(),
+                              jnp.dtype(out_dtype).name)
+    return mm(at, bt, scale)
+
+
+@functools.lru_cache(maxsize=None)
+def _quant_conv_callable(*, stride, padding, out_dtype, interpret,
+                         **block_kwargs):
+    return jax.jit(functools.partial(
+        quant_im2col_conv, stride=stride, padding=padding,
+        out_dtype=jnp.dtype(out_dtype), interpret=interpret, **block_kwargs))
+
+
+@registry.register("quant_conv2d")
+def _quant_conv2d_impl(xq, wq, scale, pol: ExecutionPolicy, stride, padding,
+                       out_dtype, block_rows=8, block_cout=128,
+                       block_cin=512):
+    conv = _quant_conv_callable(
+        stride=stride, padding=padding, out_dtype=jnp.dtype(out_dtype),
+        block_rows=block_rows, block_cout=block_cout, block_cin=block_cin,
+        interpret=pol.interpret())
+    return conv(xq, wq, scale)
+
+
+def _use_int8(pol: ExecutionPolicy, quantized: bool | None) -> bool:
+    return (pol.precision == "int8") if quantized is None else bool(quantized)
+
+
+def _channel_scale(qt: QuantizedTensor, naxis: int) -> jax.Array | None:
+    """Flatten ``qt.scale`` to a per-output-column vector, or None if the
+    scale varies along any axis other than ``naxis`` (kernel-inexpressible).
+    """
+    varying = [i for i, d in enumerate(qt.scale.shape) if d != 1]
+    if varying == [naxis]:
+        return qt.scale.reshape(-1)
+    if not varying:                             # per-tensor scale
+        return jnp.broadcast_to(qt.scale.reshape(()), (qt.shape[naxis],))
+    return None
+
+
+def _per_tensor_act_scale(qt: QuantizedTensor) -> jax.Array | None:
+    if qt.act_scale is None or qt.act_scale.size != 1:
+        return None
+    return qt.act_scale.reshape(())
+
+
+def _quant_einsum(spec: str, a, b, pol: ExecutionPolicy,
+                  preferred_element_type, quantized: bool | None):
+    """Einsum with a QuantizedTensor operand.
+
+    Kernel path (weight on the rhs, matmul-shaped, unbatched, channel scale
+    on the sole n-group label): int8 GeMM when the weight carries a
+    calibrated activation scale, weight-only otherwise.  Every other
+    configuration dequantizes back to the float reference dispatch.
+    """
+    if isinstance(a, QuantizedTensor) and isinstance(b, QuantizedTensor):
+        a = dequantize(a)                  # no int8 kernel takes two weights
+    if isinstance(a, QuantizedTensor):
+        # weight-on-the-lhs has no kernel layout: reference path
+        return einsum(spec, dequantize(a), b, policy=pol,
+                      preferred_element_type=preferred_element_type)
+    qt = b
+    _qcal.record(qt, a)                    # no-op outside calibration scopes
+    plan = plan_contraction(spec, tuple(a.shape), tuple(qt.shape)) \
+        if hasattr(a, "shape") else None
+    naxis = _rhs_sole_n_axis(spec, a.ndim, qt.ndim) \
+        if plan is not None else None
+    colscale = _channel_scale(qt, naxis) if naxis is not None else None
+    if (not _use_int8(pol, quantized) or pol.resolved_backend() == "xla"
+            or plan is None or plan.B != 1 or colscale is None
+            or not jnp.issubdtype(a.dtype, jnp.floating)):
+        return einsum(spec, a, dequantize(qt), policy=pol,
+                      preferred_element_type=preferred_element_type)
+    if preferred_element_type is not None:
+        out_dtype = jnp.dtype(preferred_element_type)
+    else:
+        out_dtype = jnp.result_type(a.dtype, qt.dtype)
+    at = jax.lax.transpose(a, plan.lhs_perm).reshape(plan.M, plan.K)
+    bt = jax.lax.transpose(qt.q, plan.rhs_perm).reshape(plan.K, plan.N)
+    s_act = _per_tensor_act_scale(qt)
+    if s_act is not None:
+        at = quantize_activation(at, s_act)
+        colscale = colscale * s_act
+    out = registry.get("quant_gemm")(at, bt, colscale, pol, out_dtype)
+    out = out.reshape(plan.out_group_shape)
+    return jax.lax.transpose(out, plan.out_perm)
+
+
 @functools.lru_cache(maxsize=None)
 def _conv_callable(fn, ref_fn, *, stride, padding, out_dtype, **block_kwargs):
     """Kernel-path conv with a custom VJP.
@@ -353,15 +515,27 @@ def _xla_dwconv(x, w, *, stride, padding, out_dtype):
 
 
 def einsum(spec: str, *operands, precision=None, preferred_element_type=None,
-           policy: ExecutionPolicy | None = None) -> jax.Array:
+           policy: ExecutionPolicy | None = None,
+           quantized: bool | None = None) -> jax.Array:
     """Policy-dispatched einsum.
 
     Under the ``xla`` backend this is exactly ``jnp.einsum`` (bit-identical).
     Under ``pallas`` / ``interpret``, matmul-shaped two-operand contractions
     are lowered onto the Axon kernels (fp32 accumulation); the rest fall back
-    to XLA.
+    to XLA.  ``repro.quant.QuantizedTensor`` operands dispatch the int8
+    kernels when the policy's ``precision`` is ``"int8"`` (or ``quantized=
+    True`` overrides it per call) and dequantize to this float path
+    otherwise.
     """
     pol = policy if policy is not None else current_policy()
+    if any(isinstance(o, QuantizedTensor) for o in operands):
+        if len(operands) == 2 and precision is None:
+            return _quant_einsum(spec, operands[0], operands[1], pol,
+                                 preferred_element_type, quantized)
+        # ineligible for the int8 kernels (3+ operands, precision hints):
+        # dequantize onto the float reference path
+        operands = tuple(dequantize(o) if isinstance(o, QuantizedTensor)
+                         else o for o in operands)
     if pol.resolved_backend() != "xla" and len(operands) == 2 \
             and precision is None:
         a, b = operands
@@ -405,22 +579,27 @@ _LEAD_LABELS = "".join(c for c in string.ascii_lowercase if c not in "mkn")
 
 
 def matmul(a, b, *, policy: ExecutionPolicy | None = None,
-           preferred_element_type=None) -> jax.Array:
+           preferred_element_type=None,
+           quantized: bool | None = None) -> jax.Array:
     """``a @ b`` through the Axon dispatch (leading lhs dims fold into M)."""
     if a.ndim == 1 and b.ndim == 2:
-        return einsum("k,kn->n", a, b, policy=policy,
+        return einsum("k,kn->n", a, b, policy=policy, quantized=quantized,
                       preferred_element_type=preferred_element_type)
     if a.ndim >= 2 and b.ndim == 2 and a.ndim - 2 <= len(_LEAD_LABELS):
         lead = _LEAD_LABELS[:a.ndim - 2]
         spec = f"{lead}mk,kn->{lead}mn"
-        return einsum(spec, a, b, policy=policy,
+        return einsum(spec, a, b, policy=policy, quantized=quantized,
                       preferred_element_type=preferred_element_type)
     if a.ndim == b.ndim and a.ndim >= 3 and a.shape[:-2] == b.shape[:-2] \
             and a.ndim - 2 <= len(_LEAD_LABELS):
         lead = _LEAD_LABELS[:a.ndim - 2]
         spec = f"{lead}mk,{lead}kn->{lead}mn"
-        return einsum(spec, a, b, policy=policy,
+        return einsum(spec, a, b, policy=policy, quantized=quantized,
                       preferred_element_type=preferred_element_type)
+    if isinstance(a, QuantizedTensor):
+        a = dequantize(a)
+    if isinstance(b, QuantizedTensor):
+        b = dequantize(b)
     return jnp.matmul(a, b, preferred_element_type=preferred_element_type)
 
 
@@ -461,7 +640,8 @@ def resolve_conv_geometry(stride, padding, kh: int, kw: int, H: int, W: int):
 
 def conv2d(x, w, *, stride=1, padding=0, groups: int = 1, out_dtype=None,
            block_rows: int = 8, block_cout: int = 128, block_cin: int = 512,
-           policy: ExecutionPolicy | None = None) -> jax.Array:
+           policy: ExecutionPolicy | None = None,
+           quantized: bool | None = None) -> jax.Array:
     """NHWC x HWIO conv through the on-chip-im2col kernel (or XLA).
 
     ``stride`` is an int or ``(sh, sw)``; ``padding`` an int, ``(ph, pw)``,
@@ -471,8 +651,33 @@ def conv2d(x, w, *, stride=1, padding=0, groups: int = 1, out_dtype=None,
     GeMMs on the kernel backends.  Shapes the Pallas kernel cannot lower
     (zero-area outputs, kernel larger than the padded input, empty operands)
     fall back to the XLA reference path.  The ``block_*`` tiling kwargs only
-    affect the kernel backends (XLA picks its own tiling)."""
+    affect the kernel backends (XLA picks its own tiling).
+
+    A ``repro.quant.QuantizedTensor`` filter dispatches the int8
+    implicit-im2col kernel when the policy precision is ``"int8"`` (or
+    ``quantized=True``), the weight carries a calibrated per-tensor
+    activation scale, and the geometry is kernel-eligible (dense, groups=1);
+    otherwise it dequantizes onto this float path."""
     pol = policy if policy is not None else current_policy()
+    if isinstance(w, QuantizedTensor):
+        _qcal.record(w, x)
+        kh, kw = w.shape[0], w.shape[1]
+        st, pads, H_out, W_out = resolve_conv_geometry(
+            stride, padding, kh, kw, x.shape[1], x.shape[2])
+        colscale = _channel_scale(w, 3) if w.ndim == 4 else None
+        s_act = _per_tensor_act_scale(w)
+        if (_use_int8(pol, quantized) and pol.resolved_backend() != "xla"
+                and groups == 1 and colscale is not None
+                and s_act is not None and H_out >= 1 and W_out >= 1
+                and 0 not in x.shape and 0 not in w.shape
+                and jnp.issubdtype(x.dtype, jnp.floating)):
+            xq = quantize_activation(x, s_act)
+            out_dt = x.dtype if out_dtype is None else jnp.dtype(out_dtype)
+            return registry.get("quant_conv2d")(
+                xq, w.q, colscale * s_act, pol, st, pads, out_dt,
+                block_rows=block_rows, block_cout=block_cout,
+                block_cin=block_cin)
+        w = dequantize(w)
     kh, kw, cig, cout = w.shape
     if groups < 1:
         raise ValueError(f"groups must be >= 1, got {groups}")
@@ -505,8 +710,13 @@ def depthwise_conv2d(x, w, *, stride=1, padding=0,
     """NHWC x (kh, kw, C) depthwise conv (VPU kernel path, no im2col).
 
     Accepts the same generalized ``stride`` / ``padding`` as :func:`conv2d`;
-    Pallas-ineligible shapes fall back to the XLA reference path."""
+    Pallas-ineligible shapes fall back to the XLA reference path.  Depthwise
+    filters are never int8-quantized (VPU path, no im2col GeMM), so a
+    ``QuantizedTensor`` here always dequantizes."""
     pol = policy if policy is not None else current_policy()
+    if isinstance(w, QuantizedTensor):
+        _qcal.record(w, x)
+        w = dequantize(w)
     kh, kw = w.shape[0], w.shape[1]
     stride, padding, H_out, W_out = resolve_conv_geometry(
         stride, padding, kh, kw, x.shape[1], x.shape[2])

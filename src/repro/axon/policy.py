@@ -29,6 +29,7 @@ import jax.numpy as jnp
 from repro.core.dataflows import Dataflow
 
 BACKENDS = ("auto", "pallas", "xla", "interpret")
+PRECISIONS = ("float", "int8")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -40,9 +41,18 @@ class ExecutionPolicy:
     scope.  ``accum_dtype`` is the dtype kernels accumulate partial products
     in (float32 only for now); result dtypes follow jnp.einsum semantics,
     i.e. the per-call ``preferred_element_type``.
+
+    ``precision`` governs how ``repro.quant.QuantizedTensor`` operands
+    dispatch: ``"int8"`` routes them onto the quantized kernels (int8x int8
+    with int32 accumulation when a calibrated activation scale is present,
+    weight-only otherwise); ``"float"`` -- the default -- dequantizes them
+    back to the float reference path.  Float operands are unaffected either
+    way, so one policy flip compares int8 against the float baseline on
+    identical quantized params.
     """
 
     backend: str = "auto"
+    precision: str = "float"
     block: tuple[int, int, int] | None = None   # fixed (bm, bk, bn)
     order: Dataflow | None = None               # fixed loop order
     # kernel partial-product accumulation dtype; float32 is the only value
@@ -59,6 +69,10 @@ class ExecutionPolicy:
         if self.backend not in BACKENDS:
             raise ValueError(
                 f"backend must be one of {BACKENDS}, got {self.backend!r}")
+        if self.precision not in PRECISIONS:
+            raise ValueError(
+                f"precision must be one of {PRECISIONS}, "
+                f"got {self.precision!r}")
 
     def resolved_backend(self) -> str:
         """Collapse ``auto`` to the concrete backend for this process."""

@@ -44,6 +44,27 @@ DRAM_BANDWIDTH_BYTES = 6.4e9
 
 MAC_POWER_FRACTION = 0.53  # calibrated: 10 % sparsity -> 5.3 % power reduction
 
+# Operand width per precision: the paper's traffic/energy accounting is per
+# DRAM byte, so switching the serving dtype rescales traffic (and the
+# memory-bound side of the runtime roofline) by these ratios directly.
+OPERAND_BYTES = {"fp32": 4, "fp16": 2, "bf16": 2, "int8": 1}
+
+
+def operand_bytes(precision: str) -> int:
+    """Bytes per operand element for a serving precision."""
+    try:
+        return OPERAND_BYTES[precision]
+    except KeyError:
+        raise ValueError(
+            f"precision must be one of {sorted(OPERAND_BYTES)}, "
+            f"got {precision!r}") from None
+
+
+def precision_traffic_ratio(precision: str, baseline: str = "bf16") -> float:
+    """DRAM-traffic (= DRAM-energy) scale factor of ``precision`` operands
+    relative to ``baseline`` operands for the same layer stream."""
+    return operand_bytes(precision) / operand_bytes(baseline)
+
 
 def area_overhead_im2col() -> float:
     """Fractional area overhead of Axon+im2col vs the conventional SA."""

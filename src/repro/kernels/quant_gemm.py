@@ -1,0 +1,280 @@
+"""Quantized Pallas GeMM / im2col-conv kernels (int8 operands, int32 acc).
+
+The precision axis of the paper's claims: Axon's runtime and energy wins
+are per *operand byte* streamed from DRAM, so shrinking operands from
+bf16/f32 to int8 compounds directly with the on-chip-im2col traffic cut
+(cf. low-precision systolic arrays for CNN inference, arXiv:2005.08098).
+
+Three kernels, all with a fused dequant-rescale epilogue (the int32
+accumulator is scaled by the combined ``act_scale * weight_scale[channel]``
+column vector and cast ONCE, at the final K/C_in grid step -- no int32 or
+f32 intermediate ever round-trips to HBM):
+
+  * ``quant_gemm``       : ``(M, K) int8 x (K, N) int8 -> out_dtype``, also
+                           the weight-only form (float lhs, int8 rhs cast
+                           up in VMEM -- halves weight HBM bytes vs bf16).
+  * ``wq_gemv``          : the decode-step shape -- small-M float
+                           activations against a streamed int8 weight.
+  * ``quant_im2col_conv``: the implicit-im2col conv with int8 IFMAP/filter
+                           blocks; symmetric quantization makes the zero
+                           spatial padding exact (zero-point is 0).
+
+Accumulation bound: |a|,|b| <= 127 so each product is < 2^14; int32 holds
+exact sums for K up to ~2^17 -- far beyond any zoo layer's K.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels.ref import conv_out_hw, normalize_padding, normalize_stride
+
+
+def _pad_to(x: jax.Array, multiples: tuple[int, ...]) -> jax.Array:
+    pads = [(0, (-d) % m) for d, m in zip(x.shape, multiples)]
+    if any(p[1] for p in pads):
+        return jnp.pad(x, pads)
+    return x
+
+
+# ---------------------------------------------------------------------------
+# blocked GeMM: int8 x int8 (int32 acc) and weight-only (f32 acc)
+# ---------------------------------------------------------------------------
+
+
+def _qgemm_kernel(a_ref, b_ref, s_ref, o_ref, acc_ref, *, nk: int):
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    a = a_ref[...]
+    if acc_ref.dtype == jnp.int32:
+        acc_ref[...] += jnp.dot(a, b_ref[...],
+                                preferred_element_type=jnp.int32)
+    else:
+        # weight-only: int8 values (<= 127) are exact in any float dtype
+        acc_ref[...] += jnp.dot(a, b_ref[...].astype(a.dtype),
+                                preferred_element_type=jnp.float32)
+
+    @pl.when(k == nk - 1)
+    def _store():
+        o_ref[...] = (acc_ref[...].astype(jnp.float32)
+                      * s_ref[...]).astype(o_ref.dtype)
+
+
+def quant_gemm(
+    a: jax.Array,              # (M, K) int8, or float for weight-only
+    b: jax.Array,              # (K, N) int8
+    scale: jax.Array,          # (N,) f32 combined dequant scale per column
+    *,
+    block: tuple[int, int, int] = (256, 256, 256),
+    out_dtype: jnp.dtype = jnp.float32,
+    interpret: bool = False,
+) -> jax.Array:
+    """``dequant(a @ b)``: int32 (or f32) accumulate, scale-cast epilogue."""
+    M, K = a.shape
+    K2, N = b.shape
+    assert K == K2, (a.shape, b.shape)
+    assert scale.shape == (N,), (scale.shape, N)
+    bm, bk, bn = block
+    bm, bk, bn = min(bm, M), min(bk, K), min(bn, N)
+
+    a_p = _pad_to(a, (bm, bk))
+    b_p = _pad_to(b, (bk, bn))
+    s_p = _pad_to(scale.astype(jnp.float32), (bn,))[None, :]   # (1, Np)
+    Mp, Kp = a_p.shape
+    Np = b_p.shape[1]
+    nm, nk, nn = Mp // bm, Kp // bk, Np // bn
+    acc_dtype = jnp.int32 if a.dtype == jnp.int8 else jnp.float32
+
+    out = pl.pallas_call(
+        functools.partial(_qgemm_kernel, nk=nk),
+        grid=(nm, nn, nk),
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, l: (i, l)),
+            pl.BlockSpec((bk, bn), lambda i, j, l: (l, j)),
+            pl.BlockSpec((1, bn), lambda i, j, l: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, l: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((Mp, Np), out_dtype),
+        scratch_shapes=[pltpu.VMEM((bm, bn), acc_dtype)],
+        interpret=interpret,
+    )(a_p, b_p, s_p)
+    return out[:M, :N]
+
+
+# ---------------------------------------------------------------------------
+# weight-only GEMV: the serve engine's decode-step shape
+# ---------------------------------------------------------------------------
+
+
+def _wq_gemv_kernel(x_ref, w_ref, s_ref, o_ref, acc_ref, *, nk: int):
+    k = pl.program_id(1)
+
+    @pl.when(k == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    x = x_ref[...]
+    acc_ref[...] += jnp.dot(x, w_ref[...].astype(x.dtype),
+                            preferred_element_type=jnp.float32)
+
+    @pl.when(k == nk - 1)
+    def _store():
+        o_ref[...] = (acc_ref[...] * s_ref[...]).astype(o_ref.dtype)
+
+
+def wq_gemv(
+    x: jax.Array,              # (B, K) float, B small (decode rows)
+    w: jax.Array,              # (K, N) int8
+    scale: jax.Array,          # (N,) f32 per-column dequant scale
+    *,
+    block_k: int = 512,
+    block_n: int = 1024,
+    out_dtype: jnp.dtype = jnp.float32,
+    interpret: bool = False,
+) -> jax.Array:
+    """Streaming weight-only GEMV: W read once, at 1 byte per element."""
+    B, K = x.shape
+    K2, N = w.shape
+    assert K == K2 and scale.shape == (N,)
+    bk = min(block_k, K)
+    bn = min(block_n, N)
+
+    x_p = jnp.pad(x, ((0, 0), (0, (-K) % bk)))
+    w_p = jnp.pad(w, ((0, (-K) % bk), (0, (-N) % bn)))
+    s_p = _pad_to(scale.astype(jnp.float32), (bn,))[None, :]
+    nk = x_p.shape[1] // bk
+    nn = w_p.shape[1] // bn
+
+    out = pl.pallas_call(
+        functools.partial(_wq_gemv_kernel, nk=nk),
+        grid=(nn, nk),
+        in_specs=[
+            pl.BlockSpec((B, bk), lambda n, k: (0, k)),
+            pl.BlockSpec((bk, bn), lambda n, k: (k, n)),
+            pl.BlockSpec((1, bn), lambda n, k: (0, n)),
+        ],
+        out_specs=pl.BlockSpec((B, bn), lambda n, k: (0, n)),
+        out_shape=jax.ShapeDtypeStruct((B, nn * bn), out_dtype),
+        scratch_shapes=[pltpu.VMEM((B, bn), jnp.float32)],
+        interpret=interpret,
+    )(x_p, w_p, s_p)
+    return out[:, :N]
+
+
+# ---------------------------------------------------------------------------
+# int8 implicit-im2col conv (mirrors kernels/im2col_conv.py)
+# ---------------------------------------------------------------------------
+
+
+def _qconv_kernel(x_ref, halo_ref, w_ref, s_ref, o_ref, acc_ref, *,
+                  kh: int, kw: int, sh: int, sw: int, th: int, w_out: int,
+                  nci: int):
+    ci = pl.program_id(3)
+
+    @pl.when(ci == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    tile = jnp.concatenate([x_ref[0], halo_ref[0]], axis=0)
+
+    acc = acc_ref[...]
+    for dh in range(kh):
+        for dw in range(kw):
+            view = jax.lax.slice(
+                tile,
+                (dh, dw, 0),
+                (dh + sh * (th - 1) + 1, dw + sw * (w_out - 1) + 1,
+                 tile.shape[2]),
+                (sh, sw, 1),
+            )
+            lhs = view.reshape(th * w_out, tile.shape[2])
+            acc += jnp.dot(lhs, w_ref[dh, dw],
+                           preferred_element_type=jnp.int32)
+    acc_ref[...] = acc
+
+    @pl.when(ci == nci - 1)
+    def _store():
+        deq = acc_ref[...].astype(jnp.float32) * s_ref[...]
+        o_ref[...] = deq.reshape(1, th, w_out, -1).astype(o_ref.dtype)
+
+
+def quant_im2col_conv(
+    x: jax.Array,              # (N, H, W, C_in) int8 (pre-quantized IFMAP)
+    w: jax.Array,              # (kh, kw, C_in, C_out) int8
+    scale: jax.Array,          # (C_out,) f32 combined dequant scale
+    *,
+    stride=1,
+    padding=0,
+    block_rows: int = 8,
+    block_cout: int = 128,
+    block_cin: int = 512,
+    out_dtype: jnp.dtype = jnp.float32,
+    interpret: bool = False,
+) -> jax.Array:
+    """Int8 implicit-im2col conv: IFMAP bytes stream at 1 B/elem, reuse
+    ``kh * kw``-fold from VMEM, int32 accumulate, scale-cast epilogue."""
+    N, H, W, C_in = x.shape
+    kh, kw, C_in2, C_out = w.shape
+    assert C_in == C_in2 and scale.shape == (C_out,)
+    assert x.dtype == jnp.int8 and w.dtype == jnp.int8, (x.dtype, w.dtype)
+    sh, sw = normalize_stride(stride)
+    (pt, pb), (pleft, pr) = normalize_padding(padding)
+    H_out, W_out = conv_out_hw(H, W, kh, kw, (sh, sw), padding)
+    if H_out < 1 or W_out < 1:
+        raise ValueError(
+            f"quant_im2col_conv: zero-area output ({H_out}x{W_out}); the "
+            "axon front door routes these to the XLA reference path")
+
+    th = min(block_rows, H_out)
+    while (th - 1) * sh + kh > 2 * th * sh:
+        th += 1
+    bco = min(block_cout, C_out)
+    bci = min(block_cin, C_in)
+
+    n_h = -(-H_out // th)
+    h_span = (n_h + 1) * th * sh + kh
+    w_span = (W_out - 1) * sw + kw
+    # zero padding is exact: symmetric quantization has zero-point 0
+    x_p = jnp.pad(
+        x,
+        ((0, 0),
+         (pt, max(0, h_span - (H + pt))),
+         (pleft, max(0, w_span - (W + pleft))),
+         (0, (-C_in) % bci)),
+    )
+    Wp = x_p.shape[2]
+    w_p = jnp.pad(w, ((0, 0), (0, 0), (0, (-C_in) % bci), (0, (-C_out) % bco)))
+    s_p = _pad_to(scale.astype(jnp.float32), (bco,))[None, :]
+    n_co = w_p.shape[3] // bco
+    n_ci = w_p.shape[2] // bci
+
+    grid = (N, n_h, n_co, n_ci)
+    out = pl.pallas_call(
+        functools.partial(_qconv_kernel, kh=kh, kw=kw, sh=sh, sw=sw, th=th,
+                          w_out=W_out, nci=n_ci),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, th * sh, Wp, bci),
+                         lambda b, h, co, ci: (b, h, 0, ci)),
+            pl.BlockSpec((1, th * sh, Wp, bci),
+                         lambda b, h, co, ci: (b, h + 1, 0, ci)),
+            pl.BlockSpec((kh, kw, bci, bco),
+                         lambda b, h, co, ci: (0, 0, ci, co)),
+            pl.BlockSpec((1, bco), lambda b, h, co, ci: (0, co)),
+        ],
+        out_specs=pl.BlockSpec((1, th, W_out, bco),
+                               lambda b, h, co, ci: (b, h, 0, co)),
+        out_shape=jax.ShapeDtypeStruct((N, n_h * th, W_out, n_co * bco),
+                                       out_dtype),
+        scratch_shapes=[pltpu.VMEM((th * W_out, bco), jnp.int32)],
+        interpret=interpret,
+    )(x_p, x_p, w_p, s_p)
+    return out[:, :H_out, :, :C_out]

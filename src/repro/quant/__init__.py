@@ -1,0 +1,48 @@
+"""``repro.quant`` -- int8 post-training quantization.
+
+Quantize once (:func:`quantize_model` / :func:`quantize_lm_weights`), then
+serve many: the resulting pytree drops into the existing engines and every
+``axon`` operator dispatches the int8 Pallas kernels under
+``ExecutionPolicy(precision="int8")`` -- or dequantizes back to the float
+reference path under any other policy, which is what the differential tests
+pin the kernels against.
+"""
+from repro.quant.calibrate import (
+    Calibration,
+    MinMaxObserver,
+    OBSERVERS,
+    PercentileObserver,
+    calibration,
+)
+from repro.quant.ptq import (
+    LM_WEIGHT_KEYS,
+    QuantizedParams,
+    quantize_lm_weights,
+    quantize_model,
+    quantize_vision,
+)
+from repro.quant.qtensor import (
+    QuantizedTensor,
+    dequantize,
+    is_quantized,
+    quantize_activation,
+    quantize_weight,
+)
+
+__all__ = [
+    "Calibration",
+    "LM_WEIGHT_KEYS",
+    "MinMaxObserver",
+    "OBSERVERS",
+    "PercentileObserver",
+    "QuantizedParams",
+    "QuantizedTensor",
+    "calibration",
+    "dequantize",
+    "is_quantized",
+    "quantize_activation",
+    "quantize_lm_weights",
+    "quantize_model",
+    "quantize_vision",
+    "quantize_weight",
+]

@@ -1,0 +1,126 @@
+"""Calibration: activation-scale observers driven from the dispatcher.
+
+PTQ needs one number per quantized op: the scale of the activation feeding
+it.  Rather than threading hooks through every model, calibration taps the
+single choke point all contractions already flow through -- ``axon.einsum``
+/ ``axon.conv2d`` call :func:`record` whenever a :class:`QuantizedTensor`
+weight arrives.  Inside a :func:`calibration` scope each record feeds an
+observer keyed by the *identity* of the weight object, so running the model
+eagerly over a calibration batch collects per-call-site statistics with
+zero model-code changes; :meth:`Calibration.finalize` then rebuilds the
+params pytree with ``act_scale`` filled in.
+
+Eager-only by design: under ``jit`` / ``scan`` tracing the activation is an
+abstract tracer with no value to observe, so :func:`record` skips tracers
+(the LM's scan-stacked layers therefore stay weight-only -- exactly the
+serve engine's int8 mode).
+"""
+from __future__ import annotations
+
+import contextlib
+import contextvars
+import dataclasses
+
+import jax
+import numpy as np
+
+from repro.quant.qtensor import QuantizedTensor, abs_max_scale
+
+
+class MinMaxObserver:
+    """Track the running absolute maximum over calibration batches."""
+
+    def __init__(self) -> None:
+        self.amax = 0.0
+
+    def observe(self, x) -> None:
+        self.amax = max(self.amax, float(np.max(np.abs(np.asarray(x)))))
+
+    def scale(self):
+        return abs_max_scale(self.amax)
+
+
+class PercentileObserver:
+    """Clip to a high percentile of |x| instead of the outlier maximum.
+
+    Keeps the max of per-batch percentiles -- a batch-streaming surrogate
+    for the global percentile that never stores the full value population.
+    """
+
+    def __init__(self, pct: float = 99.9) -> None:
+        if not 0 < pct <= 100:
+            raise ValueError(f"pct must be in (0, 100], got {pct}")
+        self.pct = pct
+        self.amax = 0.0
+
+    def observe(self, x) -> None:
+        val = float(np.percentile(np.abs(np.asarray(x)), self.pct))
+        self.amax = max(self.amax, val)
+
+    def scale(self):
+        return abs_max_scale(self.amax)
+
+
+OBSERVERS = {"minmax": MinMaxObserver, "percentile": PercentileObserver}
+
+
+class Calibration:
+    """Collects one observer per QuantizedTensor identity."""
+
+    def __init__(self, observer: str = "percentile") -> None:
+        if observer not in OBSERVERS:
+            raise ValueError(
+                f"observer must be one of {sorted(OBSERVERS)}, "
+                f"got {observer!r}")
+        self._factory = OBSERVERS[observer]
+        self._seen: dict[int, tuple[QuantizedTensor, object]] = {}
+
+    def record(self, qt: QuantizedTensor, x) -> None:
+        if isinstance(x, jax.core.Tracer):
+            return                      # traced call site: nothing to observe
+        entry = self._seen.get(id(qt))
+        if entry is None:
+            entry = (qt, self._factory())
+            self._seen[id(qt)] = entry
+        entry[1].observe(x)
+
+    @property
+    def n_sites(self) -> int:
+        return len(self._seen)
+
+    def finalize(self, params):
+        """Rebuild ``params`` with observed ``act_scale`` on each recorded
+        QuantizedTensor (unrecorded ones stay weight-only)."""
+        def fill(leaf):
+            if isinstance(leaf, QuantizedTensor):
+                entry = self._seen.get(id(leaf))
+                if entry is not None:
+                    scale = entry[1].scale().reshape((1,) * leaf.ndim)
+                    return dataclasses.replace(leaf, act_scale=scale)
+            return leaf
+
+        return jax.tree.map(
+            fill, params, is_leaf=lambda x: isinstance(x, QuantizedTensor))
+
+
+_CALIB: contextvars.ContextVar[Calibration | None] = \
+    contextvars.ContextVar("quant_calibration", default=None)
+
+
+@contextlib.contextmanager
+def calibration(observer: str = "percentile"):
+    """Scope under which dispatch records activations feeding quantized
+    weights: ``with calibration() as c: apply(qparams, batch)``."""
+    calib = Calibration(observer)
+    token = _CALIB.set(calib)
+    try:
+        yield calib
+    finally:
+        _CALIB.reset(token)
+
+
+def record(qt: QuantizedTensor, x) -> None:
+    """Dispatcher tap: no-op unless a calibration scope is active."""
+    calib = _CALIB.get()
+    if calib is not None:
+        calib.record(qt, x)

@@ -1,0 +1,106 @@
+"""Post-training quantization drivers: float params in, QuantizedParams out.
+
+``QuantizedParams`` is not a new container -- it is the SAME pytree
+structure as the float params with weight leaves swapped for
+:class:`~repro.quant.qtensor.QuantizedTensor` nodes, so every consumer
+(``jax.jit``, ``lax.scan`` over stacked layers, the serve/vision engines)
+traverses it unchanged.
+
+Two walks cover the repo's model families:
+
+  * :func:`quantize_vision` -- conv (``(kh, kw, C_in, C_out)``) and dense
+    (``(d_in, d_out)``) leaves stored under the ``"w"`` key, per-channel
+    over the last axis.  Depthwise weights (3-D) stay float: they ride the
+    VPU path, not the im2col GeMM.
+  * :func:`quantize_lm_weights` -- the einsum-only projection weights of
+    the LM zoo (attention/MLP/MoE/lm_head), per-channel over the last axis
+    with ``reduce_axes=(-2,)`` so scan-stacked ``(L, d_in, d_out)`` (and
+    MoE ``(L, E, d_in, d_out)``) leaves keep independent per-layer scales.
+    Embeddings and weights that models reshape/transpose directly (e.g.
+    MLA's absorbed ``kv_b``) are deliberately excluded.
+
+:func:`quantize_model` adds calibration on top: quantize weights, run the
+model eagerly over calibration batches inside a
+:func:`~repro.quant.calibrate.calibration` scope (the axon dispatcher
+records the activation feeding every quantized op), and finalize the
+observed activation scales into the pytree -- quantize once, serve many.
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, Iterable
+
+import jax.numpy as jnp
+
+from repro.quant import calibrate as C
+from repro.quant.qtensor import QuantizedTensor, quantize_weight
+
+QuantizedParams = Any        # float-params pytree with QuantizedTensor leaves
+
+# LM projection weights that only ever flow through axon.einsum (never
+# reshaped/transposed/gathered by model code), so swapping them for
+# QuantizedTensor nodes is transparent.
+LM_WEIGHT_KEYS = frozenset({
+    "wq", "wk", "wv", "wo",              # GQA attention (+ MLA's wo)
+    "w_gate", "w_up", "w_down",          # dense SwiGLU and stacked MoE
+    "lm_head",                           # untied logits projection
+})
+
+
+def _walk(tree, quantize_leaf: Callable[[str, Any], Any], key: str = ""):
+    if isinstance(tree, dict):
+        return {k: _walk(v, quantize_leaf, k) for k, v in tree.items()}
+    if isinstance(tree, (list, tuple)):
+        walked = [_walk(v, quantize_leaf, key) for v in tree]
+        return type(tree)(walked) if isinstance(tree, tuple) else walked
+    return quantize_leaf(key, tree)
+
+
+def _is_float_array(leaf) -> bool:
+    return (hasattr(leaf, "dtype") and hasattr(leaf, "ndim")
+            and not isinstance(leaf, QuantizedTensor)
+            and jnp.issubdtype(leaf.dtype, jnp.floating))
+
+
+def quantize_vision(params) -> QuantizedParams:
+    """Quantize a vision model-zoo param pytree (conv + dense weights)."""
+    def leaf(key, v):
+        if key == "w" and _is_float_array(v) and v.ndim in (2, 4):
+            return quantize_weight(v, axis=-1)
+        return v
+
+    return _walk(params, leaf)
+
+
+def quantize_lm_weights(params,
+                        keys: frozenset[str] = LM_WEIGHT_KEYS
+                        ) -> QuantizedParams:
+    """Weight-only int8 for the LM zoo (the serve engine's decode mode)."""
+    def leaf(key, v):
+        if key in keys and _is_float_array(v) and v.ndim >= 2:
+            return quantize_weight(v, axis=-1, reduce_axes=(-2,))
+        return v
+
+    return _walk(params, leaf)
+
+
+def quantize_model(params, apply_fn: Callable[[QuantizedParams, Any], Any],
+                   calib_batches: Iterable[Any], *,
+                   weight_quantizer: Callable[[Any], QuantizedParams]
+                   = quantize_vision,
+                   observer: str = "percentile") -> QuantizedParams:
+    """Full PTQ: per-channel weights + calibrated activation scales.
+
+    ``apply_fn(qparams, batch)`` must run the model EAGERLY (not jitted):
+    calibration observes concrete activation values at each quantized call
+    site.  Returns the quantized pytree with ``act_scale`` filled in, ready
+    for ``ExecutionPolicy(precision="int8")`` serving.
+    """
+    qparams = weight_quantizer(params)
+    with C.calibration(observer) as calib:
+        for batch in calib_batches:
+            apply_fn(qparams, batch)
+    if calib.n_sites == 0:
+        raise ValueError(
+            "calibration observed no quantized call sites -- apply_fn must "
+            "run the quantized params eagerly through axon operators")
+    return calib.finalize(qparams)

@@ -1,0 +1,129 @@
+"""``QuantizedTensor``: the int8 carrier the whole quant subsystem rides on.
+
+A quantized weight is a pytree node holding the int8 payload, a float32
+scale broadcastable against it (``keepdims`` layout), and an optional
+calibrated per-tensor *activation* scale for the op that consumes it.  The
+node ducks as an array (``shape`` / ``ndim`` / ``dtype`` report the logical
+*float* tensor), so model code passes it to ``axon.einsum`` / ``conv2d``
+unchanged and the dispatcher decides between the int8 kernels and the
+dequantize-to-float reference path.
+
+Two layout rules make the container survive the repo's structural
+transforms without special cases:
+
+  * ``axis`` (the per-channel dimension) is stored *negative*, and
+  * ``scale`` / ``act_scale`` keep reduced dimensions as size-1
+    (``keepdims``),
+
+so when ``jax.lax.scan`` slices a stacked ``(L, d_in, d_out)`` weight down
+to ``(d_in, d_out)`` per layer, the sliced children still line up: the
+channel axis is still ``-1`` and the sliced ``(1, d_out)`` scale still
+broadcasts.  Quantization is symmetric (zero-point 0), so zero padding of
+int8 operands is exact -- conv spatial padding needs no zero-point surgery.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+INT8_MAX = 127.0
+_EPS = 1e-12
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass(frozen=True)
+class QuantizedTensor:
+    """Symmetric int8 tensor: ``dequant = q.astype(f32) * scale``.
+
+    ``q``        : int8 payload, the logical tensor's shape.
+    ``scale``    : float32, same ndim as ``q`` with reduced dims kept as 1.
+    ``act_scale``: optional per-tensor float32 scale (size 1) for the
+                   activation feeding the op that consumes this weight --
+                   filled in by calibration; ``None`` = weight-only mode.
+    ``axis``     : per-channel (output-feature) axis, negative indexing.
+    ``dtype_name``: the logical float dtype dequantization restores.
+    """
+
+    q: jax.Array
+    scale: jax.Array
+    act_scale: jax.Array | None = None
+    axis: int = -1
+    dtype_name: str = "float32"
+
+    # -- array duck-typing (logical view) -----------------------------------
+    @property
+    def shape(self) -> tuple[int, ...]:
+        return tuple(self.q.shape)
+
+    @property
+    def ndim(self) -> int:
+        return self.q.ndim
+
+    @property
+    def dtype(self):
+        return jnp.dtype(self.dtype_name)
+
+    # -- pytree protocol ----------------------------------------------------
+    def tree_flatten(self):
+        return (self.q, self.scale, self.act_scale), (self.axis,
+                                                      self.dtype_name)
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        q, scale, act_scale = children
+        axis, dtype_name = aux
+        return cls(q=q, scale=scale, act_scale=act_scale, axis=axis,
+                   dtype_name=dtype_name)
+
+
+def quantize_weight(w: jax.Array, *, axis: int = -1,
+                    reduce_axes: tuple[int, ...] | None = None
+                    ) -> QuantizedTensor:
+    """Per-channel symmetric int8 quantization of a weight tensor.
+
+    ``axis`` is the output-feature (per-channel) dimension.  ``reduce_axes``
+    are the dimensions the abs-max reduction runs over -- default: every
+    axis except ``axis`` (plain dense / conv weights).  Stacked weights
+    (scan-stacked layers ``(L, d_in, d_out)``, stacked MoE experts) pass
+    ``reduce_axes=(-2,)`` so leading stack dims keep independent scales.
+    """
+    axis = axis if axis < 0 else axis - w.ndim
+    if reduce_axes is None:
+        reduce_axes = tuple(a for a in range(-w.ndim, 0) if a != axis)
+    else:
+        reduce_axes = tuple(a if a < 0 else a - w.ndim for a in reduce_axes)
+        if axis in reduce_axes:
+            raise ValueError(
+                f"channel axis {axis} cannot also be reduced {reduce_axes}")
+    wf = w.astype(jnp.float32)
+    amax = jnp.max(jnp.abs(wf), axis=reduce_axes, keepdims=True)
+    scale = jnp.maximum(amax, _EPS) / INT8_MAX
+    q = jnp.clip(jnp.round(wf / scale), -INT8_MAX, INT8_MAX).astype(jnp.int8)
+    return QuantizedTensor(q=q, scale=scale, axis=axis,
+                           dtype_name=jnp.dtype(w.dtype).name)
+
+
+def quantize_activation(x: jax.Array, act_scale: jax.Array) -> jax.Array:
+    """On-the-fly symmetric int8 activation quantization (per-tensor)."""
+    xf = x.astype(jnp.float32) / act_scale.astype(jnp.float32)
+    return jnp.clip(jnp.round(xf), -INT8_MAX, INT8_MAX).astype(jnp.int8)
+
+
+def dequantize(qt: QuantizedTensor) -> jax.Array:
+    """Restore the float tensor: the reference path and the fallback."""
+    return (qt.q.astype(jnp.float32) * qt.scale).astype(qt.dtype)
+
+
+def abs_max_scale(amax: float | jax.Array) -> jax.Array:
+    """Activation scale from an observed absolute maximum."""
+    return jnp.maximum(jnp.asarray(amax, jnp.float32), _EPS) / INT8_MAX
+
+
+def is_quantized(tree: Any) -> bool:
+    """True if any leaf of ``tree`` is a :class:`QuantizedTensor`."""
+    leaves = jax.tree.leaves(
+        tree, is_leaf=lambda x: isinstance(x, QuantizedTensor))
+    return any(isinstance(l, QuantizedTensor) for l in leaves)

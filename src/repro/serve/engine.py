@@ -32,7 +32,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro import axon
+from repro import axon, quant
 from repro.configs.base import ModelConfig
 from repro.models import transformer as T
 
@@ -124,6 +124,11 @@ class ServeEngine:
                       smallest sliding window so a chunk never overruns a
                       rolling SWA cache)
       queue_policy  : 'fifo' (arrival order) or 'sjf' (shortest prompt first)
+      quantized     : weight-only int8 -- projection weights are per-channel
+                      quantized at construction (or accepted pre-quantized)
+                      and the step policy serves at precision="int8", so the
+                      GeMV-shaped decode steps stream 1-byte weights through
+                      the quantized kernels
 
     ``generate`` returns outputs in request order; ``last_stats`` holds
     per-request latency/token counts for the most recent call.
@@ -133,11 +138,20 @@ class ServeEngine:
                  max_len: int = 512, prefill_chunk: int = 16,
                  temperature: float = 0.0, seed: int = 0,
                  policy: axon.ExecutionPolicy | None = None,
-                 queue_policy: str = "fifo"):
+                 queue_policy: str = "fifo", quantized: bool = False):
         if queue_policy not in QUEUE_POLICIES:
             raise ValueError(
                 f"queue_policy must be one of {QUEUE_POLICIES}, "
                 f"got {queue_policy!r}")
+        if quantized and not quant.is_quantized(params):
+            params = quant.quantize_lm_weights(params)
+        # quantized=True (or pre-quantized params with no explicit policy)
+        # serves at int8; an explicitly supplied policy is otherwise
+        # respected verbatim (precision="float" = dequantized reference)
+        if quant.is_quantized(params) and (quantized or policy is None):
+            pol = policy if policy is not None else axon.current_policy()
+            if pol.precision == "float":
+                policy = dataclasses.replace(pol, precision="int8")
         self.params = params
         self.cfg = cfg
         self.batch_slots = batch_slots

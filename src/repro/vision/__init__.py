@@ -2,16 +2,21 @@
 
 Closes the loop with the paper's ResNet50/YOLOv3 claims: the same networks
 the analytic models score are executable here through the Axon operator API
-(``blocks`` / ``models``), servable under continuous batching (``engine``),
-and traceable back into the analytic runtime/energy models (``trace``).
+(``blocks`` / ``models``), servable under continuous batching (``engine``)
+with on-accelerator letterboxing (``preprocess``) and YOLO NMS
+(``postprocess``), and traceable back into the analytic runtime/energy
+models (``trace``).
 """
 from repro.vision.engine import ImageRequest, VisionEngine, make_infer_step
 from repro.vision.models import ARCHS, VisionConfig, apply, init
+from repro.vision.postprocess import YOLO_ANCHORS, nms, postprocess_yolo
+from repro.vision.preprocess import letterbox, unletterbox_boxes
 from repro.vision.trace import (
     TracedConv,
     conv_shapes,
     lowered_gemms,
     paper_report,
+    precision_report,
     to_conv_shape,
     trace_model,
 )
@@ -22,12 +27,18 @@ __all__ = [
     "TracedConv",
     "VisionConfig",
     "VisionEngine",
+    "YOLO_ANCHORS",
     "apply",
     "conv_shapes",
     "init",
+    "letterbox",
     "lowered_gemms",
     "make_infer_step",
+    "nms",
     "paper_report",
+    "postprocess_yolo",
+    "precision_report",
     "to_conv_shape",
     "trace_model",
+    "unletterbox_boxes",
 ]

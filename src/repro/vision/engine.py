@@ -14,6 +14,14 @@ traffic can be replayed: the engine admits only requests whose arrival time
 has passed, sleeping until the next arrival when all lanes would otherwise
 be empty.
 
+Variable-size images are admitted through the on-accelerator
+:func:`repro.vision.preprocess.letterbox` helper (aspect-preserving resize +
+centered pad, one compile per unique input geometry), so the jitted step
+shape stays fixed regardless of what arrives.  Quantized parameter pytrees
+(``repro.quant`` -- QuantizedTensor leaves) are served as-is: the engine
+flips the step policy to ``precision="int8"`` so every conv/dense dispatches
+the int8 kernels -- quantize once, serve many.
+
 ``last_stats`` reports throughput (img/s), per-request latency percentiles,
 and mean batch occupancy for the most recent ``infer`` call.
 """
@@ -29,7 +37,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro import axon
-from repro.vision import models
+from repro.quant import is_quantized
+from repro.vision import models, preprocess
 from repro.vision.models import VisionConfig
 
 QUEUE_POLICIES = ("fifo",)
@@ -50,30 +59,65 @@ def make_infer_step(cfg: VisionConfig,
 
 @dataclasses.dataclass
 class ImageRequest:
-    image: np.ndarray            # (H, W, C), cfg.input_hw
+    image: np.ndarray            # (H, W, C); any H, W when letterboxing is on
     arrival_s: float = 0.0       # offset from infer() start (0 = already here)
 
 
 class VisionEngine:
-    """Continuous-batching single-pass inference over ``batch_slots`` lanes."""
+    """Continuous-batching single-pass inference over ``batch_slots`` lanes.
+
+    ``letterbox=True`` (default) admits images of any spatial size by
+    letterboxing them onto ``cfg.input_hw`` at admission; ``False`` restores
+    the strict exact-shape contract.  Passing a quantized params pytree
+    (QuantizedTensor leaves) with no explicit ``policy`` serves through the
+    int8 kernels automatically; an explicitly supplied policy is respected
+    verbatim (``precision="float"`` gives the dequantized reference path on
+    the same quantized params).
+    """
 
     def __init__(self, params, cfg: VisionConfig, *, batch_slots: int = 8,
-                 policy: axon.ExecutionPolicy | None = None):
+                 policy: axon.ExecutionPolicy | None = None,
+                 letterbox: bool = True):
         self.params = params
         self.cfg = cfg
         self.batch_slots = batch_slots
-        self._step = jax.jit(make_infer_step(cfg, policy=policy))
+        self.letterbox = letterbox
+        pol = policy if policy is not None else axon.current_policy()
+        if policy is None and is_quantized(params) \
+                and pol.precision == "float":
+            pol = dataclasses.replace(pol, precision="int8")
+        self.policy = pol
+        self._step = jax.jit(make_infer_step(cfg, policy=pol))
         self.last_stats: dict[str, Any] | None = None
 
     def _validate(self, requests: list[ImageRequest]) -> None:
         want = (*self.cfg.input_hw, self.cfg.in_channels)
         for idx, req in enumerate(requests):
-            if tuple(req.image.shape) != want:
+            shape = tuple(req.image.shape)
+            if self.letterbox:
+                ok = (len(shape) == 3 and shape[2] == self.cfg.in_channels
+                      and min(shape[:2]) >= 1)
+            else:
+                ok = shape == want
+            if not ok:
                 raise ValueError(
-                    f"request {idx}: image shape {tuple(req.image.shape)} != "
-                    f"model input {want}")
+                    f"request {idx}: image shape {shape} not servable for "
+                    f"model input {want} (letterbox={self.letterbox})")
             if req.arrival_s < 0:
                 raise ValueError(f"request {idx}: negative arrival_s")
+
+    def _admit_image(self, image: np.ndarray) -> jax.Array:
+        """Admit one image as a device array at the model input shape --
+        letterboxed images never round-trip back to the host."""
+        want = (*self.cfg.input_hw, self.cfg.in_channels)
+        if tuple(image.shape) == want:
+            return jnp.asarray(image, self.cfg.pdtype)
+        return preprocess.letterbox(image, self.cfg.input_hw,
+                                    dtype=self.cfg.pdtype)
+
+    def _zero_lane(self) -> jax.Array:
+        return jnp.zeros((*self.cfg.input_hw, self.cfg.in_channels),
+                         self.cfg.pdtype)
 
     def warmup(self) -> None:
         """Compile the (single) step shape outside any timed region."""
@@ -106,13 +150,13 @@ class VisionEngine:
             while pending and len(lanes) < B \
                     and requests[pending[0]].arrival_s <= now:
                 lanes.append(pending.popleft())
-            batch = np.zeros((B, *self.cfg.input_hw, self.cfg.in_channels),
-                             np.float32)
-            for b, ridx in enumerate(lanes):
-                batch[b] = requests[ridx].image
+            lane_imgs = []
+            for ridx in lanes:
+                lane_imgs.append(self._admit_image(requests[ridx].image))
                 queue_delay[ridx] = now - requests[ridx].arrival_s
-            out = self._step(self.params, jnp.asarray(batch,
-                                                      self.cfg.pdtype))
+            if len(lane_imgs) < B:             # pad empty lanes on device
+                lane_imgs.extend([self._zero_lane()] * (B - len(lane_imgs)))
+            out = self._step(self.params, jnp.stack(lane_imgs))
             out = jax.block_until_ready(out)
             done = time.perf_counter() - t0
             steps += 1

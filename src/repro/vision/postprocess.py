@@ -1,0 +1,151 @@
+"""YOLO head postprocessing: box decode + class-aware NMS, on-accelerator.
+
+Everything here is jnp with static output shapes, so the whole pipeline
+jits and runs on the same device as the model -- detection maps never
+round-trip to the host for the O(H*W*anchors) decode, only the final
+``max_det`` rows do.
+
+Decode follows YOLOv3: per cell/anchor ``xy = (sigmoid(t_xy) + cell) /
+grid``, ``wh = anchor * exp(t_wh)``, objectness/class scores via sigmoid,
+boxes emitted as normalized xyxy.  NMS is greedy and *class-aware* via the
+coordinate-offset trick (each class's boxes are shifted to a disjoint
+region, so one IoU pass never suppresses across classes) with fixed-size
+outputs (``max_det`` rows, invalid rows flagged) so the whole thing is one
+compiled program per geometry.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["YOLO_ANCHORS", "decode_scale", "decode_outputs", "nms",
+           "postprocess_yolo"]
+
+# COCO anchors (pixels on the nominal 416x416 canvas), per detection head,
+# keyed by the model-zoo output names (det1 = coarsest grid).
+YOLO_ANCHORS = {
+    "yolov3": {
+        "det1": ((116, 90), (156, 198), (373, 326)),
+        "det2": ((30, 61), (62, 45), (59, 119)),
+        "det3": ((10, 13), (16, 30), (33, 23)),
+    },
+    "yolov3_tiny": {
+        "det1": ((81, 82), (135, 169), (344, 319)),
+        "det2": ((10, 14), (23, 27), (37, 58)),
+    },
+}
+_NOMINAL_CANVAS = 416.0
+
+
+def decode_scale(det: jax.Array, anchors, *, num_classes: int,
+                 canvas: float = _NOMINAL_CANVAS
+                 ) -> tuple[jax.Array, jax.Array]:
+    """One detection map -> (boxes (N, h*w*A, 4) xyxy in [0, 1],
+    scores (N, h*w*A, C) = sigmoid(obj) * sigmoid(cls))."""
+    N, h, w, _ = det.shape
+    A = len(anchors)
+    det = det.reshape(N, h, w, A, 5 + num_classes).astype(jnp.float32)
+    cell_x = jnp.arange(w, dtype=jnp.float32)[None, None, :, None]
+    cell_y = jnp.arange(h, dtype=jnp.float32)[None, :, None, None]
+    cx = (jax.nn.sigmoid(det[..., 0]) + cell_x) / w
+    cy = (jax.nn.sigmoid(det[..., 1]) + cell_y) / h
+    anc = jnp.asarray(anchors, jnp.float32) / canvas          # (A, 2)
+    # clip t_wh so exp() of random/garbage heads cannot overflow
+    bw = anc[:, 0] * jnp.exp(jnp.clip(det[..., 2], -10.0, 10.0))
+    bh = anc[:, 1] * jnp.exp(jnp.clip(det[..., 3], -10.0, 10.0))
+    obj = jax.nn.sigmoid(det[..., 4])
+    cls = jax.nn.sigmoid(det[..., 5:])
+    boxes = jnp.stack([cx - bw / 2, cy - bh / 2, cx + bw / 2, cy + bh / 2],
+                      axis=-1)
+    scores = obj[..., None] * cls
+    return (boxes.reshape(N, h * w * A, 4),
+            scores.reshape(N, h * w * A, num_classes))
+
+
+def decode_outputs(outputs: dict, anchors: dict, *, num_classes: int
+                   ) -> tuple[jax.Array, jax.Array]:
+    """Decode and concatenate every scale of a YOLO model-zoo output dict."""
+    boxes, scores = [], []
+    for name in sorted(outputs):
+        b, s = decode_scale(outputs[name], anchors[name],
+                            num_classes=num_classes)
+        boxes.append(b)
+        scores.append(s)
+    return jnp.concatenate(boxes, axis=1), jnp.concatenate(scores, axis=1)
+
+
+def _iou(box: jax.Array, boxes: jax.Array) -> jax.Array:
+    """IoU of one xyxy box against (P, 4)."""
+    lt = jnp.maximum(box[:2], boxes[:, :2])
+    rb = jnp.minimum(box[2:], boxes[:, 2:])
+    inter = jnp.prod(jnp.maximum(rb - lt, 0.0), axis=-1)
+    area = jnp.maximum(jnp.prod(box[2:] - box[:2]), 0.0)
+    areas = jnp.maximum(jnp.prod(boxes[:, 2:] - boxes[:, :2], axis=-1), 0.0)
+    return inter / jnp.maximum(area + areas - inter, 1e-9)
+
+
+@functools.partial(jax.jit, static_argnames=("max_det",))
+def nms(boxes: jax.Array, scores: jax.Array, classes: jax.Array, *,
+        iou_thresh: float = 0.45, score_thresh: float = 0.25,
+        max_det: int = 100):
+    """Greedy class-aware NMS with fixed-shape outputs.
+
+    ``boxes (P, 4)`` normalized xyxy, ``scores (P,)``, ``classes (P,)``.
+    Returns ``(boxes (max_det, 4), scores (max_det,), classes (max_det,),
+    valid (max_det,) bool)`` -- invalid rows are zeroed.  Class-aware via
+    coordinate offsetting: per-class shifted copies never overlap, so one
+    greedy pass suppresses within classes only.
+    """
+    live = jnp.where(scores >= score_thresh, scores, 0.0)
+    # suppression geometry is clipped to the canvas first, so an offset of
+    # 2/class fully separates classes even for degenerate oversized boxes
+    # (decode clamps t_wh, but garbage heads can still overshoot [0, 1])
+    shifted = (jnp.clip(boxes, 0.0, 1.0)
+               + (classes.astype(jnp.float32) * 2.0)[:, None])
+
+    def body(i, carry):
+        live, picks = carry
+        j = jnp.argmax(live)
+        ok = live[j] > 0.0
+        picks = picks.at[i].set(jnp.where(ok, j, -1))
+        iou = _iou(shifted[j], shifted)
+        suppress = ok & (iou > iou_thresh)       # includes j (IoU 1 > thresh)
+        live = jnp.where(suppress, 0.0, live)
+        return live, picks
+
+    _, picks = jax.lax.fori_loop(
+        0, max_det, body,
+        (live, jnp.full((max_det,), -1, jnp.int32)))
+    valid = picks >= 0
+    take = jnp.maximum(picks, 0)
+    return (jnp.where(valid[:, None], boxes[take], 0.0),
+            jnp.where(valid, scores[take], 0.0),
+            jnp.where(valid, classes[take], 0),
+            valid)
+
+
+def postprocess_yolo(outputs: dict, *, arch: str, num_classes: int,
+                     anchors: dict | None = None, iou_thresh: float = 0.45,
+                     score_thresh: float = 0.25,
+                     max_det: int = 100) -> dict:
+    """Model-zoo YOLO outputs -> batched fixed-shape detections.
+
+    Returns ``{"boxes" (N, max_det, 4), "scores" (N, max_det),
+    "classes" (N, max_det), "valid" (N, max_det)}``, all on-device.
+    """
+    anchors = anchors if anchors is not None else YOLO_ANCHORS[arch]
+    if set(anchors) != set(outputs):
+        raise ValueError(
+            f"anchor scales {sorted(anchors)} do not match model outputs "
+            f"{sorted(outputs)}")
+    boxes, scores = decode_outputs(outputs, anchors,
+                                   num_classes=num_classes)
+    best = scores.max(axis=-1)                            # (N, P)
+    cls = scores.argmax(axis=-1).astype(jnp.int32)
+
+    run = functools.partial(nms, iou_thresh=iou_thresh,
+                            score_thresh=score_thresh, max_det=max_det)
+    b, s, c, v = jax.vmap(run)(boxes, best, cls)
+    return {"boxes": b, "scores": s, "classes": c, "valid": v}

@@ -1,0 +1,78 @@
+"""On-accelerator letterbox/resize preprocessing.
+
+The engine's jitted step has ONE fixed shape; real traffic has images of
+every size.  ``letterbox`` bridges the two: aspect-preserving resize onto
+the model's input canvas with centered constant-fill padding, compiled once
+per *input* geometry (LRU on the static shape) while the engine step's
+shape never changes.  The YOLO convention (fill 0.5 on normalized inputs,
+centered offsets) is the default; :func:`unletterbox_boxes` maps detections
+back to the original image frame for the postprocess pipeline.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = ["letterbox", "letterbox_geometry", "unletterbox_boxes"]
+
+
+def letterbox_geometry(in_hw: tuple[int, int], target_hw: tuple[int, int]
+                       ) -> tuple[tuple[int, int], tuple[int, int]]:
+    """((resized_h, resized_w), (pad_top, pad_left)) for an aspect-
+    preserving fit of ``in_hw`` into ``target_hw``."""
+    h, w = in_hw
+    th, tw = target_hw
+    if min(h, w) < 1 or min(th, tw) < 1:
+        raise ValueError(f"degenerate letterbox geometry {in_hw}->{target_hw}")
+    scale = min(th / h, tw / w)
+    nh = max(1, min(th, round(h * scale)))
+    nw = max(1, min(tw, round(w * scale)))
+    return (nh, nw), ((th - nh) // 2, (tw - nw) // 2)
+
+
+@functools.lru_cache(maxsize=512)
+def _letterbox_jit(in_shape: tuple[int, int, int],
+                   target_hw: tuple[int, int], fill: float, dtype_name: str):
+    (nh, nw), (pt, pl) = letterbox_geometry(in_shape[:2], target_hw)
+    th, tw = target_hw
+    C = in_shape[2]
+
+    def fn(image):
+        img = image.astype(jnp.float32)
+        resized = jax.image.resize(img, (nh, nw, C), method="linear")
+        canvas = jnp.full((th, tw, C), fill, jnp.float32)
+        canvas = jax.lax.dynamic_update_slice(canvas, resized, (pt, pl, 0))
+        return canvas.astype(jnp.dtype(dtype_name))
+
+    return jax.jit(fn)
+
+
+def letterbox(image, target_hw: tuple[int, int], *, fill: float = 0.5,
+              dtype=jnp.float32) -> jax.Array:
+    """Aspect-preserving resize + centered pad to ``target_hw`` (H, W, C).
+
+    Jit-compiled per distinct (input shape, target, fill) -- serving a
+    stream of arbitrary sizes costs one compile per unique geometry, and
+    the downstream model step shape stays fixed."""
+    image = jnp.asarray(image)
+    if image.ndim != 3:
+        raise ValueError(f"letterbox expects (H, W, C), got {image.shape}")
+    fn = _letterbox_jit(tuple(image.shape), tuple(target_hw), float(fill),
+                        jnp.dtype(dtype).name)
+    return fn(image)
+
+
+def unletterbox_boxes(boxes, in_hw: tuple[int, int],
+                      target_hw: tuple[int, int]):
+    """Map normalized xyxy boxes on the letterboxed canvas back to
+    normalized coordinates on the original ``in_hw`` image."""
+    (nh, nw), (pt, pl) = letterbox_geometry(in_hw, target_hw)
+    th, tw = target_hw
+    boxes = jnp.asarray(boxes)
+    x = (boxes[..., 0::2] * tw - pl) / nw
+    y = (boxes[..., 1::2] * th - pt) / nh
+    out = jnp.stack([x[..., 0], y[..., 0], x[..., 1], y[..., 1]], axis=-1)
+    return jnp.clip(out, 0.0, 1.0)

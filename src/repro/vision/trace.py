@@ -18,7 +18,8 @@ import jax
 
 from repro.core.dataflows import GemmShape
 from repro.core.energy_model import (DRAM_BANDWIDTH_BYTES, PAPER_ASIC,
-                                     bounded_runtime_s, dram_energy_joules)
+                                     bounded_runtime_s, dram_energy_joules,
+                                     operand_bytes)
 from repro.core.im2col_model import ConvShape, lower_to_gemm, model_traffic
 from repro.core.runtime_model import ArrayShape, best_dataflow
 from repro.vision import models
@@ -26,7 +27,7 @@ from repro.vision.blocks import TracedConv, trace_taps
 from repro.vision.models import VisionConfig
 
 __all__ = ["TracedConv", "trace_model", "to_conv_shape", "conv_shapes",
-           "lowered_gemms", "paper_report"]
+           "lowered_gemms", "paper_report", "precision_report"]
 
 
 def trace_model(cfg: VisionConfig, *, batch: int = 1) -> list[TracedConv]:
@@ -83,6 +84,45 @@ def lowered_gemms(cfg: VisionConfig) -> list[tuple[str, GemmShape]]:
     return [(c.name, lower_to_gemm(c)) for c in conv_shapes(cfg)]
 
 
+def precision_report(cfg: VisionConfig, *,
+                     array: tuple[int, int] = (16, 16),
+                     feeder_group: int = 16,
+                     precisions: tuple[str, ...] = ("bf16", "int8")) -> dict:
+    """Modeled operand-precision sweep for the Axon orchestration.
+
+    Compute cycles are precision-independent (same MAC count); DRAM traffic
+    -- and with it DRAM energy and the memory-bound side of the runtime
+    roofline -- scales with bytes per operand.  The first precision is the
+    baseline the ``*_vs_*`` ratios compare against (int8 operands halve the
+    bf16 stream: 2x less DRAM energy, and runtime speedup wherever the
+    layer stream is memory-bound)."""
+    arr = ArrayShape(*array)
+    convs = conv_shapes(cfg)
+    gemms = [lower_to_gemm(c) for c in convs]
+    cycles_ax = sum(best_dataflow(g, arr, axon=True)[1] for g in gemms)
+    per: dict[str, dict] = {}
+    for prec in precisions:
+        _, ax_bytes = model_traffic(convs,
+                                    bytes_per_elem=operand_bytes(prec),
+                                    feeder_group=feeder_group)
+        per[prec] = {
+            "operand_bytes": ax_bytes,
+            "dram_energy_j": dram_energy_joules(ax_bytes),
+            "runtime_s": bounded_runtime_s(cycles_ax, ax_bytes),
+        }
+    base = precisions[0]
+    for prec in precisions[1:]:
+        per[f"{prec}_vs_{base}"] = {
+            "traffic_ratio": per[prec]["operand_bytes"]
+            / per[base]["operand_bytes"],
+            "energy_ratio": per[base]["dram_energy_j"]
+            / per[prec]["dram_energy_j"],
+            "throughput_speedup": per[base]["runtime_s"]
+            / per[prec]["runtime_s"],
+        }
+    return per
+
+
 def paper_report(cfg: VisionConfig, *, array: tuple[int, int] = (16, 16),
                  bytes_per_elem: int = 2, feeder_group: int = 16) -> dict:
     """The paper's Axon-vs-conventional comparison from the runnable model.
@@ -92,7 +132,9 @@ def paper_report(cfg: VisionConfig, *, array: tuple[int, int] = (16, 16),
     orchestrations, and the Fig. 11 operand-traffic model for both im2col
     schemes; combine into roofline-bounded runtimes (compute cycles vs DRAM
     bandwidth) and DRAM energy.  Returns the throughput and energy ratios
-    the paper headlines, plus per-layer detail."""
+    the paper headlines, plus per-layer detail and the operand-precision
+    sweep (``"precision"``: int8 vs bf16 traffic/energy/runtime for the
+    Axon orchestration -- the modeled counterpart of ``repro.quant``)."""
     arr = ArrayShape(*array)
     convs = conv_shapes(cfg)
     gemms = [lower_to_gemm(c) for c in convs]
@@ -119,4 +161,6 @@ def paper_report(cfg: VisionConfig, *, array: tuple[int, int] = (16, 16),
         "cycle_speedup": cycles_sa / cycles_ax,   # fill-latency-only view
         "dram_energy_j": {"conventional": e_sa, "axon": e_ax},
         "energy_ratio": e_sa / e_ax,
+        "precision": precision_report(cfg, array=array,
+                                      feeder_group=feeder_group),
     }

@@ -1,0 +1,571 @@
+"""``repro.quant``: differential validation of the int8 path.
+
+The load-bearing property: everything the int8 kernels compute is pinned
+against the *dequantize-then-float* reference -- the same QuantizedTensor
+run through the float dispatch -- within a scale-derived tolerance (the
+int32 accumulation is exact, so the two paths differ only by float-32
+summation rounding).  On top of that: quantize/dequantize round-trip
+bounds, calibration round trips, dispatch fallback routing (batched specs,
+missing act scales, XLA backend, per-call overrides), and the acceptance
+end-to-end -- quantized reduced ResNet50 top-1 agreement with the float
+model, plus the engines' quantize-once-serve-many modes.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from _hypothesis_compat import given, settings, st
+
+from repro import axon, quant
+from repro.configs import get_config, get_vision_config
+from repro.kernels.quant_gemm import quant_gemm, quant_im2col_conv, wq_gemv
+from repro.kernels.ref import conv2d_ref
+from repro.serve.engine import Request, ServeEngine, make_chunk_step
+from repro.models import transformer as T
+from repro.vision import models
+from repro.vision.engine import ImageRequest, VisionEngine
+
+KEY = jax.random.PRNGKey(0)
+
+
+def _rand(shape, seed, scale=1.0):
+    return jax.random.normal(jax.random.PRNGKey(seed), shape,
+                             jnp.float32) * scale
+
+
+def _with_act_scale(qt: quant.QuantizedTensor, x) -> quant.QuantizedTensor:
+    amax = float(jnp.abs(x).max())
+    return dataclasses.replace(
+        qt, act_scale=jnp.full((1,) * qt.ndim, max(amax, 1e-12) / 127.0,
+                               jnp.float32))
+
+
+def _qtol(qt: quant.QuantizedTensor, K: int, act_scale=None) -> dict:
+    """Scale-derived tolerance: both paths sum K products of magnitude
+    <= 127^2 * s; only f32 rounding separates them."""
+    s_w = float(jnp.max(qt.scale))
+    s_a = float(act_scale) if act_scale is not None else 1.0
+    return dict(rtol=1e-4, atol=max(127.0 * 127.0 * s_w * s_a * K * 1e-6,
+                                    1e-6))
+
+
+# ---------------------------------------------------------------------------
+# quantize / dequantize properties
+# ---------------------------------------------------------------------------
+
+
+class TestQuantizeDequantize:
+    def test_round_trip_bound(self):
+        w = _rand((32, 24), 0, scale=3.0)
+        qt = quant.quantize_weight(w)
+        err = jnp.abs(quant.dequantize(qt) - w)
+        # symmetric rounding: per-element error <= scale/2 per channel
+        assert bool(jnp.all(err <= qt.scale * 0.5 + 1e-7))
+
+    def test_layout(self):
+        qt = quant.quantize_weight(_rand((3, 3, 6, 8), 1))
+        assert qt.q.dtype == jnp.int8
+        assert qt.scale.shape == (1, 1, 1, 8)
+        assert qt.axis == -1 and qt.shape == (3, 3, 6, 8)
+        assert qt.dtype == jnp.float32
+        assert int(jnp.max(jnp.abs(qt.q.astype(jnp.int32)))) <= 127
+
+    def test_zero_channel_is_safe(self):
+        w = _rand((16, 4), 2).at[:, 1].set(0.0)
+        qt = quant.quantize_weight(w)
+        deq = quant.dequantize(qt)
+        assert bool(jnp.all(jnp.isfinite(deq)))
+        np.testing.assert_array_equal(np.asarray(deq[:, 1]), 0.0)
+
+    def test_stacked_matches_per_layer(self):
+        """reduce_axes=(-2,) on (L, d, e) == quantizing each layer alone."""
+        w = _rand((3, 16, 8), 3, scale=2.0)
+        stacked = quant.quantize_weight(w, reduce_axes=(-2,))
+        for l in range(3):
+            single = quant.quantize_weight(w[l])
+            np.testing.assert_array_equal(np.asarray(stacked.q[l]),
+                                          np.asarray(single.q))
+            np.testing.assert_allclose(np.asarray(stacked.scale[l]),
+                                       np.asarray(single.scale))
+
+    def test_reduce_axes_cannot_cover_channel_axis(self):
+        with pytest.raises(ValueError):
+            quant.quantize_weight(_rand((4, 4), 4), axis=-1,
+                                  reduce_axes=(-1,))
+
+    def test_activation_quantization_clips(self):
+        s = jnp.asarray(0.1, jnp.float32)
+        x = jnp.asarray([-100.0, -0.05, 0.0, 0.05, 100.0])
+        q = quant.quantize_activation(x, s)
+        assert q.dtype == jnp.int8
+        np.testing.assert_array_equal(np.asarray(q), [-127, 0, 0, 0, 127])
+
+    def test_is_quantized(self):
+        p = {"a": {"w": quant.quantize_weight(_rand((4, 4), 5)),
+                   "b": jnp.zeros(4)}}
+        assert quant.is_quantized(p)
+        assert not quant.is_quantized({"w": jnp.ones((4, 4))})
+
+    @given(m=st.integers(1, 32), n=st.integers(1, 32),
+           seed=st.integers(0, 50))
+    @settings(max_examples=15, deadline=None)
+    def test_round_trip_fuzz(self, m, n, seed):
+        w = _rand((m, n), seed, scale=5.0)
+        qt = quant.quantize_weight(w)
+        err = jnp.abs(quant.dequantize(qt) - w)
+        assert bool(jnp.all(err <= qt.scale * 0.5 + 1e-6))
+
+
+# ---------------------------------------------------------------------------
+# kernels, direct (interpret mode)
+# ---------------------------------------------------------------------------
+
+
+class TestQuantKernels:
+    def test_quant_gemm_matches_integer_reference(self):
+        M, K, N = 17, 33, 29
+        a = _rand((M, K), 0)
+        qt = quant.quantize_weight(_rand((K, N), 1))
+        s_a = float(jnp.abs(a).max()) / 127.0
+        aq = quant.quantize_activation(a, jnp.asarray(s_a))
+        scale = qt.scale.reshape(-1) * s_a
+        got = quant_gemm(aq, qt.q, scale, block=(8, 16, 16),
+                         interpret=True)
+        want = (aq.astype(jnp.int32) @ qt.q.astype(jnp.int32)
+                ).astype(jnp.float32) * scale[None, :]
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   **_qtol(qt, K, s_a))
+
+    def test_quant_gemm_weight_only(self):
+        M, K, N = 12, 40, 24
+        a = _rand((M, K), 2)
+        qt = quant.quantize_weight(_rand((K, N), 3))
+        got = quant_gemm(a, qt.q, qt.scale.reshape(-1), block=(8, 16, 16),
+                         interpret=True)
+        want = a @ quant.dequantize(qt)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   rtol=1e-4, atol=1e-5)
+
+    def test_wq_gemv(self):
+        K, N = 96, 130
+        x = _rand((2, K), 4)
+        qt = quant.quantize_weight(_rand((K, N), 5))
+        got = wq_gemv(x, qt.q, qt.scale.reshape(-1), block_k=32, block_n=64,
+                      interpret=True)
+        want = x @ quant.dequantize(qt)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   rtol=1e-4, atol=1e-5)
+
+    def test_quant_conv_matches_dequant_reference(self):
+        x = _rand((2, 9, 11, 6), 6)
+        qt = quant.quantize_weight(_rand((3, 3, 6, 8), 7))
+        s_a = float(jnp.abs(x).max()) / 127.0
+        xq = quant.quantize_activation(x, jnp.asarray(s_a))
+        scale = qt.scale.reshape(-1) * s_a
+        got = quant_im2col_conv(xq, qt.q, scale, stride=2, padding=1,
+                                block_rows=4, block_cout=8, block_cin=4,
+                                interpret=True)
+        x_dq = xq.astype(jnp.float32) * s_a
+        want = conv2d_ref(x_dq, quant.dequantize(qt), stride=2, padding=1)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   **_qtol(qt, 3 * 3 * 6, s_a))
+
+    @given(m=st.integers(1, 40), k=st.integers(1, 48), n=st.integers(1, 40),
+           seed=st.integers(0, 100))
+    @settings(max_examples=12, deadline=None)
+    def test_quant_gemm_fuzz(self, m, k, n, seed):
+        a = _rand((m, k), seed, scale=2.0)
+        qt = quant.quantize_weight(_rand((k, n), seed + 1, scale=3.0))
+        s_a = max(float(jnp.abs(a).max()), 1e-9) / 127.0
+        aq = quant.quantize_activation(a, jnp.asarray(s_a))
+        scale = qt.scale.reshape(-1) * s_a
+        got = quant_gemm(aq, qt.q, scale, block=(16, 16, 16), interpret=True)
+        want = (aq.astype(jnp.int32) @ qt.q.astype(jnp.int32)
+                ).astype(jnp.float32) * scale[None, :]
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   **_qtol(qt, k, s_a))
+
+    @given(h=st.integers(3, 12), w=st.integers(3, 12),
+           cin=st.integers(1, 8), cout=st.integers(1, 10),
+           kk=st.sampled_from([1, 3]), stride=st.sampled_from([1, 2]),
+           pad=st.sampled_from([0, 1]), seed=st.integers(0, 100))
+    @settings(max_examples=12, deadline=None)
+    def test_quant_conv_fuzz(self, h, w, cin, cout, kk, stride, pad, seed):
+        if (h + 2 * pad - kk) < 0 or (w + 2 * pad - kk) < 0:
+            return
+        x = _rand((1, h, w, cin), seed)
+        qt = quant.quantize_weight(_rand((kk, kk, cin, cout), seed + 1))
+        s_a = max(float(jnp.abs(x).max()), 1e-9) / 127.0
+        xq = quant.quantize_activation(x, jnp.asarray(s_a))
+        scale = qt.scale.reshape(-1) * s_a
+        got = quant_im2col_conv(xq, qt.q, scale, stride=stride, padding=pad,
+                                block_rows=4, block_cout=8, block_cin=4,
+                                interpret=True)
+        x_dq = xq.astype(jnp.float32) * s_a
+        want = conv2d_ref(x_dq, quant.dequantize(qt), stride=stride,
+                          padding=pad)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   **_qtol(qt, kk * kk * cin, s_a))
+
+
+# ---------------------------------------------------------------------------
+# dispatch routing
+# ---------------------------------------------------------------------------
+
+
+class TestQuantDispatch:
+    def _ref(self, spec, a, qt):
+        return jnp.einsum(spec, a, quant.dequantize(qt))
+
+    def test_weight_only_einsum(self):
+        a = _rand((16, 32), 0)
+        qt = quant.quantize_weight(_rand((32, 24), 1))
+        with axon.policy(backend="pallas", precision="int8"):
+            got = axon.einsum("mk,kn->mn", a, qt)
+        np.testing.assert_allclose(np.asarray(got),
+                                   np.asarray(self._ref("mk,kn->mn", a, qt)),
+                                   rtol=1e-4, atol=1e-5)
+
+    def test_full_int8_einsum(self):
+        a = _rand((16, 32), 2)
+        qt = _with_act_scale(quant.quantize_weight(_rand((32, 24), 3)), a)
+        with axon.policy(backend="pallas", precision="int8"):
+            got = axon.einsum("mk,kn->mn", a, qt)
+        s_a = float(qt.act_scale.reshape(()))
+        a_dq = quant.quantize_activation(a, qt.act_scale.reshape(())
+                                         ).astype(jnp.float32) * s_a
+        want = a_dq @ quant.dequantize(qt)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   **_qtol(qt, 32, s_a))
+
+    def test_gemv_shape_rides_weight_only_kernel(self):
+        a = _rand((2, 64), 4)
+        qt = quant.quantize_weight(_rand((64, 48), 5))
+        with axon.policy(backend="pallas", precision="int8"):
+            got = axon.einsum("mk,kn->mn", a, qt)
+        np.testing.assert_allclose(np.asarray(got),
+                                   np.asarray(self._ref("mk,kn->mn", a, qt)),
+                                   rtol=1e-4, atol=1e-5)
+
+    def test_model_spec_folds_batch(self):
+        a = _rand((2, 5, 32), 6)
+        qt = quant.quantize_weight(_rand((32, 24), 7))
+        with axon.policy(backend="pallas", precision="int8"):
+            got = axon.einsum("bsd,de->bse", a, qt)
+        np.testing.assert_allclose(
+            np.asarray(got), np.asarray(self._ref("bsd,de->bse", a, qt)),
+            rtol=1e-4, atol=1e-5)
+
+    def test_xla_backend_is_exact_dequant(self):
+        a = _rand((8, 16), 8)
+        qt = _with_act_scale(quant.quantize_weight(_rand((16, 12), 9)), a)
+        with axon.policy(backend="xla", precision="int8"):
+            got = axon.einsum("mk,kn->mn", a, qt)
+        np.testing.assert_array_equal(
+            np.asarray(got), np.asarray(self._ref("mk,kn->mn", a, qt)))
+
+    def test_float_precision_dequantizes(self):
+        a = _rand((8, 16), 10)
+        qt = quant.quantize_weight(_rand((16, 12), 11))
+        with axon.policy(backend="xla"):          # default precision="float"
+            got = axon.einsum("mk,kn->mn", a, qt)
+        np.testing.assert_array_equal(
+            np.asarray(got), np.asarray(self._ref("mk,kn->mn", a, qt)))
+
+    def test_per_call_override(self):
+        a = _rand((8, 16), 12)
+        qt = quant.quantize_weight(_rand((16, 12), 13))
+        with axon.policy(backend="xla"):
+            base = axon.einsum("mk,kn->mn", a, qt)
+        with axon.policy(backend="pallas"):       # precision float ...
+            got = axon.einsum("mk,kn->mn", a, qt, quantized=True)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(base),
+                                   rtol=1e-4, atol=1e-5)
+
+    def test_shared_batch_spec_falls_back(self):
+        """MoE-style shared-batch contraction: dequant reference path."""
+        a = _rand((3, 4, 16), 14)
+        qt = quant.quantize_weight(_rand((3, 16, 8), 15),
+                                   reduce_axes=(-2,))
+        with axon.policy(backend="pallas", precision="int8"):
+            got = axon.einsum("ecd,edf->ecf", a, qt)
+        want = jnp.einsum("ecd,edf->ecf", a, quant.dequantize(qt))
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   rtol=1e-4, atol=1e-5)
+
+    def test_three_operand_spec_dequantizes(self):
+        a = _rand((4, 8), 30)
+        qt = quant.quantize_weight(_rand((8, 6), 31))
+        c = _rand((6, 5), 32)
+        with axon.policy(backend="pallas", precision="int8"):
+            got = axon.einsum("mk,kn,np->mp", a, qt, c)
+        want = jnp.einsum("mk,kn,np->mp", a, quant.dequantize(qt), c)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   rtol=1e-4, atol=1e-5)
+
+    def test_weight_on_lhs_falls_back(self):
+        qt = quant.quantize_weight(_rand((24, 32), 16))
+        b = _rand((24, 8), 17)
+        with axon.policy(backend="pallas", precision="int8"):
+            got = axon.einsum("nk,nm->km", qt, b)
+        want = jnp.einsum("nk,nm->km", quant.dequantize(qt), b)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   rtol=1e-4, atol=1e-5)
+
+    def test_scale_on_contraction_axis_falls_back(self):
+        """Per-channel scale on K cannot fold into a column epilogue."""
+        qt = quant.quantize_weight(_rand((16, 12), 18), axis=0)
+        assert qt.scale.shape == (16, 1)
+        a = _rand((8, 16), 19)
+        with axon.policy(backend="pallas", precision="int8"):
+            got = axon.einsum("mk,kn->mn", a, qt)
+        np.testing.assert_allclose(
+            np.asarray(got), np.asarray(self._ref("mk,kn->mn", a, qt)),
+            rtol=1e-4, atol=1e-5)
+
+    def test_matmul_front_door(self):
+        a = _rand((4, 6, 32), 20)
+        qt = quant.quantize_weight(_rand((32, 16), 21))
+        with axon.policy(backend="pallas", precision="int8"):
+            got = axon.matmul(a, qt)
+        np.testing.assert_allclose(
+            np.asarray(got), np.asarray(a @ quant.dequantize(qt)),
+            rtol=1e-4, atol=1e-5)
+
+    def test_conv2d_int8(self):
+        x = _rand((2, 8, 8, 6), 22)
+        qt = _with_act_scale(quant.quantize_weight(_rand((3, 3, 6, 8), 23)),
+                             x)
+        with axon.policy(backend="pallas", precision="int8"):
+            got = axon.conv2d(x, qt, stride=1, padding="SAME")
+        s_a = float(qt.act_scale.reshape(()))
+        x_dq = quant.quantize_activation(x, qt.act_scale.reshape(())
+                                         ).astype(jnp.float32) * s_a
+        want = conv2d_ref(x_dq, quant.dequantize(qt), stride=1,
+                          padding=((1, 1), (1, 1)))
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   **_qtol(qt, 3 * 3 * 6, s_a))
+
+    def test_conv2d_without_act_scale_falls_back(self):
+        x = _rand((1, 6, 6, 4), 24)
+        qt = quant.quantize_weight(_rand((3, 3, 4, 8), 25))
+        with axon.policy(backend="pallas", precision="int8"):
+            got = axon.conv2d(x, qt, padding=1)
+        with axon.policy(backend="pallas"):
+            want = axon.conv2d(x, quant.dequantize(qt), padding=1)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   rtol=1e-5, atol=1e-6)
+
+    def test_grouped_conv_falls_back(self):
+        x = _rand((1, 6, 6, 8), 26)
+        qt = _with_act_scale(quant.quantize_weight(_rand((3, 3, 4, 8), 27)),
+                             x)
+        with axon.policy(backend="pallas", precision="int8"):
+            got = axon.conv2d(x, qt, padding=1, groups=2)
+        want = conv2d_ref(x, quant.dequantize(qt), padding=1, groups=2)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   rtol=1e-4, atol=1e-5)
+
+    def test_depthwise_dequantizes(self):
+        x = _rand((1, 6, 6, 4), 28)
+        qt = quant.quantize_weight(_rand((3, 3, 4), 29))
+        with axon.policy(backend="pallas", precision="int8"):
+            got = axon.depthwise_conv2d(x, qt, padding=1)
+        with axon.policy(backend="pallas"):
+            want = axon.depthwise_conv2d(x, quant.dequantize(qt), padding=1)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   rtol=1e-5, atol=1e-6)
+
+    def test_bad_precision_rejected(self):
+        with pytest.raises(ValueError):
+            axon.ExecutionPolicy(precision="int4")
+
+    @given(m=st.integers(1, 24), k=st.integers(1, 40), n=st.integers(1, 32),
+           act=st.booleans(), seed=st.integers(0, 100))
+    @settings(max_examples=15, deadline=None)
+    def test_einsum_dispatch_fuzz(self, m, k, n, act, seed):
+        """Fuzzed int8 dispatch vs the dequantized float reference."""
+        a = _rand((m, k), seed, scale=2.0)
+        qt = quant.quantize_weight(_rand((k, n), seed + 1, scale=3.0))
+        if act:
+            qt = _with_act_scale(qt, a)
+        with axon.policy(backend="pallas", precision="int8"):
+            got = axon.einsum("mk,kn->mn", a, qt)
+        if act:
+            s_a = float(qt.act_scale.reshape(()))
+            a_ref = quant.quantize_activation(
+                a, qt.act_scale.reshape(())).astype(jnp.float32) * s_a
+        else:
+            s_a = None
+            a_ref = a
+        want = a_ref @ quant.dequantize(qt)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   **_qtol(qt, k, s_a))
+
+
+# ---------------------------------------------------------------------------
+# calibration
+# ---------------------------------------------------------------------------
+
+
+class TestCalibration:
+    def test_minmax_observer(self):
+        obs = quant.MinMaxObserver()
+        obs.observe(np.asarray([1.0, -3.0]))
+        obs.observe(np.asarray([2.0]))
+        np.testing.assert_allclose(float(obs.scale()), 3.0 / 127.0)
+
+    def test_percentile_le_minmax(self):
+        x = np.concatenate([np.ones(999), [100.0]])
+        mm, pc = quant.MinMaxObserver(), quant.PercentileObserver(99.0)
+        mm.observe(x)
+        pc.observe(x)
+        assert float(pc.scale()) < float(mm.scale())
+
+    def test_bad_observer_rejected(self):
+        with pytest.raises(ValueError):
+            quant.Calibration("median")
+        with pytest.raises(ValueError):
+            quant.PercentileObserver(0.0)
+
+    def test_quantize_model_round_trip(self):
+        params = {"c": {"w": _rand((3, 3, 4, 8), 0)},
+                  "d": {"w": _rand((8, 5), 1)}}
+
+        def apply_fn(p, x):
+            h = axon.conv2d(x, p["c"]["w"], padding=1)
+            h = h.mean(axis=(1, 2))
+            return axon.einsum("nd,df->nf", h, p["d"]["w"])
+
+        batches = [_rand((2, 6, 6, 4), s) for s in (2, 3)]
+        qp = quant.quantize_model(params, apply_fn, batches,
+                                  observer="minmax")
+        for leaf in (qp["c"]["w"], qp["d"]["w"]):
+            assert isinstance(leaf, quant.QuantizedTensor)
+            assert leaf.act_scale is not None
+            assert float(leaf.act_scale.reshape(())) > 0
+        # minmax scale of the conv input == max |batch| / 127 exactly
+        amax = max(float(jnp.abs(b).max()) for b in batches)
+        np.testing.assert_allclose(
+            float(qp["c"]["w"].act_scale.reshape(())), amax / 127.0,
+            rtol=1e-6)
+
+    def test_quantize_model_requires_eager_axon_calls(self):
+        params = {"d": {"w": _rand((8, 5), 4)}}
+
+        def jitted_apply(p, x):     # traced: observers see only tracers
+            return jax.jit(lambda p, x: axon.einsum(
+                "nd,df->nf", x, p["d"]["w"]))(p, x)
+
+        with pytest.raises(ValueError, match="no quantized call sites"):
+            quant.quantize_model(params, jitted_apply, [_rand((2, 8), 5)])
+
+    def test_lm_walk_targets_projections_only(self):
+        cfg = get_config("yi-9b", reduced=True)
+        params = T.init_params(KEY, cfg)
+        qp = quant.quantize_lm_weights(params)
+        assert quant.is_quantized(qp)
+        assert not isinstance(qp["embed"], quant.QuantizedTensor)
+        leaves = jax.tree.leaves(
+            qp, is_leaf=lambda x: isinstance(x, quant.QuantizedTensor))
+        n_q = sum(isinstance(l, quant.QuantizedTensor) for l in leaves)
+        assert n_q > 0
+
+
+# ---------------------------------------------------------------------------
+# end-to-end: quantized models and engines
+# ---------------------------------------------------------------------------
+
+
+@pytest.fixture(scope="module")
+def resnet_ptq():
+    cfg = get_vision_config("resnet50", reduced=True)
+    params = models.init(KEY, cfg)
+    calib = _rand((4, *cfg.input_hw, cfg.in_channels), 100)
+    qparams = quant.quantize_model(
+        params, lambda p, b: models.apply(p, b, cfg), [calib])
+    return cfg, params, qparams
+
+
+class TestQuantizedResNet:
+    def test_top1_agreement(self, resnet_ptq):
+        """Acceptance: quantized reduced ResNet50 agrees with float top-1
+        on a fixed random eval batch, through the int8 Pallas kernels."""
+        cfg, params, qparams = resnet_ptq
+        x = _rand((8, *cfg.input_hw, cfg.in_channels), 200)
+        logits_f = models.apply(params, x, cfg)
+        with axon.policy(backend="pallas", precision="int8"):
+            logits_q = jax.jit(
+                lambda p, b: models.apply(p, b, cfg))(qparams, x)
+        rel = float(jnp.linalg.norm(logits_q - logits_f)
+                    / jnp.linalg.norm(logits_f))
+        agree = int((logits_q.argmax(-1) == logits_f.argmax(-1)).sum())
+        assert rel < 0.15, rel
+        assert agree >= 6, (agree, rel)
+
+    def test_every_conv_and_dense_calibrated(self, resnet_ptq):
+        _, _, qparams = resnet_ptq
+        qleaves = [l for l in jax.tree.leaves(
+            qparams, is_leaf=lambda x: isinstance(x, quant.QuantizedTensor))
+            if isinstance(l, quant.QuantizedTensor)]
+        assert qleaves and all(l.act_scale is not None for l in qleaves)
+
+
+class TestQuantizedEngines:
+    def test_vision_engine_serves_quantized(self, resnet_ptq):
+        cfg, params, qparams = resnet_ptq
+        reqs = [ImageRequest(image=np.asarray(
+            _rand((*cfg.input_hw, cfg.in_channels), 300 + i)))
+            for i in range(3)]
+        with axon.policy(backend="pallas"):
+            # no explicit policy: quantized params auto-select int8
+            eng_q = VisionEngine(qparams, cfg, batch_slots=2)
+        assert eng_q.policy.precision == "int8"
+        out_q = eng_q.infer(reqs)
+        eng_f = VisionEngine(params, cfg, batch_slots=2,
+                             policy=axon.ExecutionPolicy(backend="pallas"))
+        out_f = eng_f.infer(reqs)
+        # an explicitly pinned float policy on the SAME qparams is the
+        # dequantized reference path, not int8
+        eng_ref = VisionEngine(qparams, cfg, batch_slots=2,
+                               policy=axon.ExecutionPolicy(
+                                   backend="pallas", precision="float"))
+        assert eng_ref.policy.precision == "float"
+        assert eng_q.last_stats["images"] == 3
+        for q, f in zip(out_q, out_f):
+            assert q.shape == f.shape
+            assert np.argmax(q) == np.argmax(f)
+
+    def test_serve_engine_weight_only(self):
+        cfg = get_config("yi-9b", reduced=True)
+        params = T.init_params(KEY, cfg)
+        reqs = [Request(prompt=[5, 6, 7], max_new_tokens=4, eos_id=1),
+                Request(prompt=[9, 3], max_new_tokens=3, eos_id=1)]
+        eng_f = ServeEngine(params, cfg, batch_slots=2, max_len=32)
+        out_f = eng_f.generate(reqs)
+        eng_q = ServeEngine(params, cfg, batch_slots=2, max_len=32,
+                            quantized=True)
+        assert quant.is_quantized(eng_q.params)
+        out_q = eng_q.generate(reqs)
+        assert [len(o) for o in out_q] == [len(o) for o in out_f]
+        assert eng_q.last_stats["generated_tokens"] == sum(
+            len(o) for o in out_q)
+
+    def test_weight_only_decode_logits_close(self):
+        """One chunk step through the int8 GEMV path vs the float step."""
+        cfg = get_config("yi-9b", reduced=True)
+        params = T.init_params(KEY, cfg)
+        qparams = quant.quantize_lm_weights(params)
+        caches = T.init_caches(cfg, batch=2, max_len=16, dtype=jnp.float32)
+        toks = jnp.asarray([[5, 6, 7, 8], [9, 3, 2, 4]], jnp.int32)
+        valid = jnp.ones((2, 4), bool)
+        rng = jax.random.PRNGKey(1)
+        step_f = jax.jit(make_chunk_step(cfg))
+        tok_f, _ = step_f(params, caches, toks, valid, rng)
+        step_q = jax.jit(make_chunk_step(
+            cfg, policy=axon.ExecutionPolicy(backend="pallas",
+                                             precision="int8")))
+        tok_q, _ = step_q(qparams, caches, toks, valid, rng)
+        np.testing.assert_array_equal(np.asarray(tok_q), np.asarray(tok_f))

@@ -20,7 +20,7 @@ from repro import axon
 from repro.configs import VISION_IDS, get_vision_config
 from repro.core import workloads
 from repro.core.im2col_model import lower_to_gemm
-from repro.vision import models, trace
+from repro.vision import models, postprocess, preprocess, trace
 from repro.vision.engine import ImageRequest, VisionEngine
 
 KEY = jax.random.PRNGKey(0)
@@ -124,10 +124,18 @@ class TestEngine:
                                        rtol=1e-5, atol=1e-5)
 
     def test_bad_image_shape_rejected(self, zoo):
+        """Wrong channel count / rank is always rejected; wrong spatial size
+        only when letterboxing is disabled (it is admitted otherwise)."""
         cfg, params, _ = zoo["mobilenet-v1"]
         eng = VisionEngine(params, cfg, batch_slots=2)
-        with pytest.raises(ValueError, match="image shape"):
-            eng.infer([ImageRequest(image=np.zeros((4, 4, 3), np.float32))])
+        with pytest.raises(ValueError, match="not servable"):
+            eng.infer([ImageRequest(image=np.zeros((4, 4, 7), np.float32))])
+        with pytest.raises(ValueError, match="not servable"):
+            eng.infer([ImageRequest(image=np.zeros((4, 4), np.float32))])
+        strict = VisionEngine(params, cfg, batch_slots=2, letterbox=False)
+        with pytest.raises(ValueError, match="not servable"):
+            strict.infer([ImageRequest(image=np.zeros((4, 4, 3),
+                                                      np.float32))])
 
 
 class TestTraceCrossValidation:
@@ -241,3 +249,145 @@ class TestPaperReport:
         macs = sum(lower_to_gemm(c).M * lower_to_gemm(c).K * lower_to_gemm(c).N
                    for c in trace.conv_shapes(cfg))
         assert rep["macs"] == macs
+
+
+class TestLetterbox:
+    def test_geometry_and_fill(self):
+        img = np.full((50, 100, 3), 2.0, np.float32)
+        out = np.asarray(preprocess.letterbox(img, (64, 64), fill=0.5))
+        assert out.shape == (64, 64, 3)
+        # wide image: rows above/below the resized strip are pure fill
+        (nh, nw), (pt, pl) = preprocess.letterbox_geometry((50, 100), (64, 64))
+        assert (nh, nw) == (32, 64) and pl == 0
+        np.testing.assert_allclose(out[:pt], 0.5)
+        np.testing.assert_allclose(out[pt + nh:], 0.5)
+        np.testing.assert_allclose(out[pt: pt + nh], 2.0, atol=1e-6)
+
+    def test_identity_when_shape_matches(self):
+        img = np.random.default_rng(0).normal(size=(64, 64, 3)) \
+            .astype(np.float32)
+        out = np.asarray(preprocess.letterbox(img, (64, 64)))
+        np.testing.assert_allclose(out, img, atol=1e-5)
+
+    def test_degenerate_rejected(self):
+        with pytest.raises(ValueError):
+            preprocess.letterbox_geometry((0, 10), (64, 64))
+        with pytest.raises(ValueError):
+            preprocess.letterbox(np.zeros((4, 4)), (64, 64))
+
+    def test_unletterbox_round_trip(self):
+        # a box drawn on the canvas maps back to original coordinates
+        boxes = preprocess.unletterbox_boxes(
+            jnp.asarray([[0.0, 0.25, 1.0, 0.75]]), (50, 100), (64, 64))
+        np.testing.assert_allclose(np.asarray(boxes), [[0, 0, 1, 1]],
+                                   atol=0.01)
+
+    def test_engine_accepts_variable_sizes(self, zoo):
+        cfg, params, _ = zoo["resnet50"]
+        eng = VisionEngine(params, cfg, batch_slots=2,
+                           policy=axon.ExecutionPolicy(backend="xla"))
+        rng = np.random.default_rng(0)
+        shapes = [(32, 32, 3), (20, 48, 3), (64, 16, 3)]
+        reqs = [ImageRequest(image=rng.normal(size=s).astype(np.float32))
+                for s in shapes]
+        outs = eng.infer(reqs)
+        assert all(o.shape == (cfg.num_classes,) for o in outs)
+        # the exact-size request must match direct apply on the raw image
+        direct = models.apply(params, jnp.asarray(reqs[0].image)[None], cfg)
+        np.testing.assert_allclose(outs[0], np.asarray(direct[0]),
+                                   rtol=1e-4, atol=1e-5)
+
+    def test_strict_mode_rejects_mismatched_shapes(self, zoo):
+        cfg, params, _ = zoo["resnet50"]
+        eng = VisionEngine(params, cfg, batch_slots=2, letterbox=False,
+                           policy=axon.ExecutionPolicy(backend="xla"))
+        bad = [ImageRequest(image=np.zeros((16, 16, 3), np.float32))]
+        with pytest.raises(ValueError, match="not servable"):
+            eng.infer(bad)
+
+
+class TestPostprocess:
+    def _synthetic_map(self, h, w, A, C, boxes):
+        """Detection map whose decode yields the given (cell, anchor, cls,
+        logit) spikes on a zero (sigmoid=0.5) background."""
+        det = np.full((1, h, w, A * (5 + C)), -20.0, np.float32)
+        det = det.reshape(1, h, w, A, 5 + C)
+        for (cy, cx, a, cls, score_logit) in boxes:
+            det[0, cy, cx, a, 0:2] = 0.0          # center of the cell
+            det[0, cy, cx, a, 2:4] = 0.0          # wh = anchor size
+            det[0, cy, cx, a, 4] = score_logit
+            det[0, cy, cx, a, 5 + cls] = score_logit
+        return jnp.asarray(det.reshape(1, h, w, A * (5 + C)))
+
+    def test_decode_centers_and_sizes(self):
+        anchors = ((41.6, 83.2),)                 # /416 -> (0.1, 0.2)
+        det = self._synthetic_map(4, 4, 1, 3, [(1, 2, 0, 0, 8.0)])
+        boxes, scores = postprocess.decode_scale(det, anchors, num_classes=3)
+        idx = int(scores[0].max(-1).argmax())
+        cx, cy = (2 + 0.5) / 4, (1 + 0.5) / 4
+        np.testing.assert_allclose(
+            np.asarray(boxes[0, idx]),
+            [cx - 0.05, cy - 0.1, cx + 0.05, cy + 0.1], atol=1e-5)
+        assert float(scores[0, idx].max()) > 0.99
+
+    def test_nms_class_aware(self):
+        boxes = jnp.asarray([[0.1, 0.1, 0.5, 0.5], [0.12, 0.12, 0.52, 0.52],
+                             [0.1, 0.1, 0.5, 0.5], [0.7, 0.7, 0.9, 0.9]])
+        scores = jnp.asarray([0.9, 0.8, 0.85, 0.3])
+        classes = jnp.asarray([0, 0, 1, 0], jnp.int32)
+        b, s, c, v = postprocess.nms(boxes, scores, classes, max_det=4,
+                                     score_thresh=0.2)
+        # same-class overlap suppressed; cross-class overlap survives
+        np.testing.assert_allclose(np.asarray(s), [0.9, 0.85, 0.3, 0.0],
+                                   atol=1e-6)
+        np.testing.assert_array_equal(np.asarray(c), [0, 1, 0, 0])
+        np.testing.assert_array_equal(np.asarray(v),
+                                      [True, True, True, False])
+        np.testing.assert_allclose(np.asarray(b[3]), 0.0)
+
+    def test_nms_oversized_boxes_stay_class_separated(self):
+        """Boxes overshooting the canvas must not leak across the per-class
+        offset bands (suppression geometry is canvas-clipped first)."""
+        boxes = jnp.asarray([[-5.0, -5.0, 6.0, 6.0],
+                             [-5.0, -5.0, 6.0, 6.0]])
+        scores = jnp.asarray([0.9, 0.8])
+        classes = jnp.asarray([0, 1], jnp.int32)
+        _, _, c, v = postprocess.nms(boxes, scores, classes, max_det=2,
+                                     score_thresh=0.2)
+        np.testing.assert_array_equal(np.asarray(v), [True, True])
+        np.testing.assert_array_equal(np.asarray(c), [0, 1])
+
+    def test_nms_score_threshold(self):
+        boxes = jnp.asarray([[0.1, 0.1, 0.2, 0.2]])
+        _, s, _, v = postprocess.nms(boxes, jnp.asarray([0.1]),
+                                     jnp.zeros((1,), jnp.int32),
+                                     score_thresh=0.5, max_det=2)
+        assert not bool(v.any()) and float(s.sum()) == 0.0
+
+    def test_yolo_tiny_smoke(self, zoo):
+        """End-to-end: tiny YOLO outputs -> fixed-shape detections."""
+        cfg, params, x = zoo["yolov3-tiny"]
+        out = models.apply(params, x, cfg)
+        res = postprocess.postprocess_yolo(
+            out, arch=cfg.arch, num_classes=cfg.num_classes,
+            score_thresh=0.05, max_det=16)
+        N = x.shape[0]
+        assert res["boxes"].shape == (N, 16, 4)
+        assert res["scores"].shape == (N, 16)
+        assert res["classes"].shape == (N, 16)
+        assert res["valid"].shape == (N, 16)
+        assert bool(jnp.all(jnp.isfinite(res["boxes"])))
+        # jits as one program
+        jitted = jax.jit(lambda o: postprocess.postprocess_yolo(
+            o, arch=cfg.arch, num_classes=cfg.num_classes,
+            score_thresh=0.05, max_det=16))
+        res2 = jitted(out)
+        np.testing.assert_allclose(np.asarray(res2["scores"]),
+                                   np.asarray(res["scores"]), atol=1e-6)
+
+    def test_anchor_scale_mismatch_rejected(self, zoo):
+        cfg, params, x = zoo["yolov3-tiny"]
+        out = models.apply(params, x, cfg)
+        with pytest.raises(ValueError, match="anchor scales"):
+            postprocess.postprocess_yolo(out, arch="yolov3",
+                                         num_classes=cfg.num_classes)
