@@ -1,4 +1,4 @@
-"""Int8 vs float serving benchmark: the precision axis of the paper's claims.
+"""Reduced-precision serving benchmark: the precision axis of the paper.
 
 Three sections in one artifact (BENCH_quant.json):
 
@@ -7,13 +7,16 @@ Three sections in one artifact (BENCH_quant.json):
             (interpret on CPU CI, real kernels on TPU) -- img/s, p99, and
             the top-1 agreement of the two paths on a fixed eval batch
             (the accuracy side of the accuracy-vs-speed trade).
-  serve   : a reduced LM through ``ServeEngine`` -- float vs weight-only
-            int8 (per-channel quantized projections, int8 GEMV decode) --
-            tokens/s on a small mixed-length workload.
+  serve   : a reduced LM through ``ServeEngine`` -- float vs the whole
+            width ladder: weight-only int8 (int8 GEMV decode), calibrated
+            activation int8 (per-layer scan-threaded scales, full int8 x
+            int8 GeMMs), packed int4 weight-only (0.5 B/elem weights), and
+            fp8 (e4m3 both sides) -- tokens/s on a small mixed-length
+            workload.
   modeled : the analytic counterpart from ``trace.paper_report`` on the
-            FULL configs: int8-vs-bf16 operand traffic, DRAM energy, and
-            roofline runtime ratios for the Axon orchestration (tracing
-            runs no compute, so full-size models are free).
+            FULL configs: int8/fp8/int4-vs-bf16 operand traffic, DRAM
+            energy, and roofline runtime ratios for the Axon orchestration
+            (tracing runs no compute, so full-size models are free).
 
 Usage:
   PYTHONPATH=src python benchmarks/quant_bench.py [--smoke] [--out PATH]
@@ -88,10 +91,19 @@ def bench_serve(*, smoke: bool, n_requests: int, slots: int) -> dict:
             for _ in range(n)]
     pol = axon.ExecutionPolicy(backend="pallas")
 
+    # calibrated activation int8: per-layer scales threaded through lax.scan
+    calib = [{"tokens": jnp.asarray(
+        rng.integers(2, cfg.vocab, (2, 12)), jnp.int32)} for _ in range(2)]
+    qparams_cal = quant.quantize_lm(params, cfg, calib)
+
     entry: dict = {"config": SERVE_ARCH + "-reduced", "requests": n}
-    for label, kwargs in (("float", {}), ("int8_weight_only",
-                                          {"quantized": True})):
-        eng = ServeEngine(params, cfg, batch_slots=slots, max_len=64,
+    modes = (("float", params, {}),
+             ("int8_weight_only", params, {"quantized": True}),
+             ("int8_calibrated", qparams_cal, {"quantized": True}),
+             ("int4_weight_only", params, {"quantized": "int4"}),
+             ("fp8", params, {"quantized": "fp8"}))
+    for label, p, kwargs in modes:
+        eng = ServeEngine(p, cfg, batch_slots=slots, max_len=64,
                           policy=pol, **kwargs)
         eng.generate(reqs)                         # warm the two step shapes
         eng.generate(reqs)
@@ -101,9 +113,12 @@ def bench_serve(*, smoke: bool, n_requests: int, slots: int) -> dict:
             "generated_tokens": st["generated_tokens"],
             "steps": st["steps"],
         }
-    entry["speedup_int8"] = round(
-        entry["int8_weight_only"]["tokens_per_s"]
-        / max(entry["float"]["tokens_per_s"], 1e-9), 3)
+    for label in ("int8_weight_only", "int8_calibrated", "int4_weight_only",
+                  "fp8"):
+        entry[f"speedup_{label}"] = round(
+            entry[label]["tokens_per_s"]
+            / max(entry["float"]["tokens_per_s"], 1e-9), 3)
+    entry["speedup_int8"] = entry["speedup_int8_weight_only"]
     return entry
 
 
@@ -111,14 +126,25 @@ def modeled_section() -> dict:
     out = {}
     for name in MODELED:
         per = trace.paper_report(get_vision_config(name))["precision"]
-        ratios = per["int8_vs_bf16"]
-        out[name] = {
+        entry = {
             "bf16_operand_mb": round(per["bf16"]["operand_bytes"] / 1e6, 2),
-            "int8_operand_mb": round(per["int8"]["operand_bytes"] / 1e6, 2),
-            "traffic_ratio": round(ratios["traffic_ratio"], 4),
-            "energy_ratio": round(ratios["energy_ratio"], 4),
-            "throughput_speedup": round(ratios["throughput_speedup"], 4),
         }
+        for prec in ("int8", "fp8", "int4"):
+            ratios = per[f"{prec}_vs_bf16"]
+            entry[f"{prec}_operand_mb"] = round(
+                per[prec]["operand_bytes"] / 1e6, 2)
+            entry[prec] = {
+                "traffic_ratio": round(ratios["traffic_ratio"], 4),
+                "energy_ratio": round(ratios["energy_ratio"], 4),
+                "throughput_speedup": round(ratios["throughput_speedup"], 4),
+            }
+        # back-compat aliases for the int8 headline figures
+        entry.update({
+            "traffic_ratio": entry["int8"]["traffic_ratio"],
+            "energy_ratio": entry["int8"]["energy_ratio"],
+            "throughput_speedup": entry["int8"]["throughput_speedup"],
+        })
+        out[name] = entry
     return out
 
 
@@ -144,14 +170,21 @@ def main() -> None:
         smoke=args.smoke, n_requests=args.requests, slots=args.slots)}
     s = result["serve"][SERVE_ARCH]
     print(f"{SERVE_ARCH}: float {s['float']['tokens_per_s']} tok/s | "
-          f"int8 weight-only {s['int8_weight_only']['tokens_per_s']} tok/s "
-          f"({s['speedup_int8']}x)")
+          f"int8 weight-only {s['int8_weight_only']['tokens_per_s']} "
+          f"({s['speedup_int8_weight_only']}x) | calibrated "
+          f"{s['int8_calibrated']['tokens_per_s']} "
+          f"({s['speedup_int8_calibrated']}x) | int4 "
+          f"{s['int4_weight_only']['tokens_per_s']} "
+          f"({s['speedup_int4_weight_only']}x) | fp8 "
+          f"{s['fp8']['tokens_per_s']} ({s['speedup_fp8']}x)")
 
     result["modeled"] = modeled_section()
     for name, m in result["modeled"].items():
-        print(f"modeled {name}: int8 traffic {m['traffic_ratio']}x, DRAM "
-              f"energy {m['energy_ratio']}x better, runtime "
-              f"{m['throughput_speedup']}x")
+        for prec in ("int8", "fp8", "int4"):
+            p = m[prec]
+            print(f"modeled {name} [{prec}]: traffic {p['traffic_ratio']}x, "
+                  f"DRAM energy {p['energy_ratio']}x better, runtime "
+                  f"{p['throughput_speedup']}x")
 
     os.makedirs(os.path.dirname(args.out) or ".", exist_ok=True)
     with open(args.out, "w") as f:

@@ -18,6 +18,7 @@ from repro.axon.dispatch import (
     explain,
     matmul,
     plan_contraction,
+    quant_route,
     resolve_conv_geometry,
 )
 from repro.axon.policy import (
@@ -42,6 +43,7 @@ __all__ = [
     "matmul",
     "plan_contraction",
     "policy",
+    "quant_route",
     "resolve_conv_geometry",
     "set_default_policy",
 ]

@@ -14,11 +14,16 @@ backend -- lowers matmul-shaped contractions onto the Axon kernels:
   * anything else (3+ operands, repeated labels, traced sums) -> XLA.
 
 Quantized operands (``repro.quant.QuantizedTensor`` weights) take a fourth
-route: under ``ExecutionPolicy(precision="int8")`` they dispatch the int8
-Pallas kernels (``quant_gemm`` / ``quant_conv2d``, with weight-only GEMV for
-decode-shaped steps), and under any other policy they dequantize onto the
-float paths above -- which is exactly the reference the differential tests
-compare against.
+route: under ``ExecutionPolicy(precision="int8")`` (or ``"fp8"``) they
+dispatch the quantized Pallas kernels matching their storage format --
+``quant_gemm`` / ``quant_conv2d`` for int8 (weight-only GEMV for
+decode-shaped steps), ``int4_gemm`` / ``int4_gemv`` for nibble-packed int4
+weights, ``fp8_gemm`` for e4m3 -- and under any other policy they
+dequantize onto the float paths above, which is exactly the reference the
+differential tests compare against.  :func:`quant_route` is the eligibility
+predicate, exposed so the conformance tests can pin every fallback reason.
+``precision="fp8"`` additionally casts eligible float GeMMs to e4m3
+operands (f32 accumulation) with no quantization step at all.
 
 Mapper decisions are LRU-cached per (shape, dtype) in ``repro.core.mapper``,
 so the candidate sweep runs once per unique GeMM shape per process.  Kernel
@@ -44,12 +49,13 @@ from repro.kernels.axon_gemm import axon_gemm
 from repro.kernels.dwconv import dwconv
 from repro.kernels.gemv import gemv as gemv_kernel
 from repro.kernels.im2col_conv import im2col_conv
-from repro.kernels.quant_gemm import quant_gemm, quant_im2col_conv, wq_gemv
+from repro.kernels.quant_gemm import (fp8_gemm, int4_gemm, int4_gemv,
+                                      quant_gemm, quant_im2col_conv, wq_gemv)
 from repro.kernels.zero_gate_gemm import zero_gate_gemm
 from repro.kernels import ref
 from repro.quant import calibrate as _qcal
 from repro.quant.qtensor import (QuantizedTensor, dequantize,
-                                 quantize_activation)
+                                 quantize_activation, to_fp8)
 
 
 # ---------------------------------------------------------------------------
@@ -327,6 +333,30 @@ def _wq_gemv_callable(block_k: int, block_n: int, interpret: bool,
         out_dtype=jnp.dtype(out_dtype), interpret=interpret))
 
 
+@functools.lru_cache(maxsize=None)
+def _int4_gemm_callable(block: tuple[int, int, int], k_size: int,
+                        interpret: bool, out_dtype: str):
+    return jax.jit(functools.partial(
+        int4_gemm, k_size=k_size, block=block,
+        out_dtype=jnp.dtype(out_dtype), interpret=interpret))
+
+
+@functools.lru_cache(maxsize=None)
+def _int4_gemv_callable(block_k: int, block_n: int, k_size: int,
+                        interpret: bool, out_dtype: str):
+    return jax.jit(functools.partial(
+        int4_gemv, k_size=k_size, block_k=block_k, block_n=block_n,
+        out_dtype=jnp.dtype(out_dtype), interpret=interpret))
+
+
+@functools.lru_cache(maxsize=None)
+def _fp8_gemm_callable(block: tuple[int, int, int], interpret: bool,
+                       out_dtype: str):
+    return jax.jit(functools.partial(
+        fp8_gemm, block=block, out_dtype=jnp.dtype(out_dtype),
+        interpret=interpret))
+
+
 @registry.register("quant_gemm")
 def _quant_gemm_impl(at, bt, scale, pol: ExecutionPolicy, out_dtype):
     """(M, K) x (K, N) int8 weight GeMM with fused dequant epilogue.
@@ -351,6 +381,39 @@ def _quant_gemm_impl(at, bt, scale, pol: ExecutionPolicy, out_dtype):
     return mm(at, bt, scale)
 
 
+@registry.register("int4_gemm")
+def _int4_gemm_impl(at, bt, scale, k_size, pol: ExecutionPolicy, out_dtype):
+    """(M, K) float x nibble-packed (K/2, N) int4 weight, weight-only.
+
+    Decode-shaped small-M activations ride the streaming int4 GEMV; the
+    mapper blocks for 1-byte weight traffic (conservative for 0.5 B)."""
+    M = at.shape[0]
+    N = bt.shape[1]
+    if M <= 8:
+        if pol.block is not None:
+            bk, bn = pol.block[1], pol.block[2]
+        else:
+            bk, bn = min(512, k_size), min(1024, N)
+        mv = _int4_gemv_callable(bk, bn, k_size, pol.interpret(),
+                                 jnp.dtype(out_dtype).name)
+        return mv(at, bt, scale)
+    block, _ = _mapped_blocking(pol, M, k_size, N, 1)
+    mm = _int4_gemm_callable(block, k_size, pol.interpret(),
+                             jnp.dtype(out_dtype).name)
+    return mm(at, bt, scale)
+
+
+@registry.register("fp8_gemm")
+def _fp8_gemm_impl(at, bt, scale, pol: ExecutionPolicy, out_dtype):
+    """(M, K) x (K, N) e4m3 GeMM, f32 accumulation, scale-cast epilogue."""
+    M, K = at.shape
+    N = bt.shape[1]
+    block, _ = _mapped_blocking(pol, M, K, N, 1)
+    mm = _fp8_gemm_callable(block, pol.interpret(),
+                            jnp.dtype(out_dtype).name)
+    return mm(at, bt, scale)
+
+
 @functools.lru_cache(maxsize=None)
 def _quant_conv_callable(*, stride, padding, out_dtype, interpret,
                          **block_kwargs):
@@ -370,8 +433,9 @@ def _quant_conv2d_impl(xq, wq, scale, pol: ExecutionPolicy, stride, padding,
     return conv(xq, wq, scale)
 
 
-def _use_int8(pol: ExecutionPolicy, quantized: bool | None) -> bool:
-    return (pol.precision == "int8") if quantized is None else bool(quantized)
+def _use_quant(pol: ExecutionPolicy, quantized: bool | None) -> bool:
+    return (pol.precision in ("int8", "fp8")) if quantized is None \
+        else bool(quantized)
 
 
 def _channel_scale(qt: QuantizedTensor, naxis: int) -> jax.Array | None:
@@ -392,44 +456,98 @@ def _per_tensor_act_scale(qt: QuantizedTensor) -> jax.Array | None:
     return qt.act_scale.reshape(())
 
 
+def quant_route(spec: str, a, qt: QuantizedTensor, pol: ExecutionPolicy,
+                quantized: bool | None = None) -> tuple[str, str]:
+    """The quantized-kernel eligibility predicate: ``(route, reason)``.
+
+    ``route`` is the registry kind the dispatch will use -- ``"quant_gemm"``
+    (int8 / weight-only int8), ``"int4_gemm"``, ``"fp8_gemm"`` -- or
+    ``"dequant"`` with the reason the weight falls back to the bit-exact
+    dequantized float path.  Pure function of static call-site properties
+    (spec, shapes, scale layout, policy), so the conformance tests pin every
+    branch without reading kernel outputs."""
+    if not _use_quant(pol, quantized):
+        return "dequant", "policy precision is float"
+    if pol.resolved_backend() == "xla":
+        return "dequant", "xla backend"
+    if not (hasattr(a, "shape") and hasattr(a, "dtype")
+            and jnp.issubdtype(a.dtype, jnp.floating)):
+        return "dequant", "non-float activation"
+    plan = plan_contraction(spec, tuple(a.shape), tuple(qt.shape))
+    if plan is None:
+        return "dequant", "spec is not a matmul-shaped contraction"
+    if plan.B != 1:
+        return "dequant", "shared-batch contraction (B > 1)"
+    naxis = _rhs_sole_n_axis(spec, a.ndim, qt.ndim)
+    if naxis is None:
+        return "dequant", "no sole n-group label on the rhs"
+    if _channel_scale(qt, naxis) is None:
+        return "dequant", "scale varies off the sole n-group axis"
+    fmt = qt.fmt
+    if fmt == "int4":
+        # the packed payload cannot be transposed/reshaped like a logical
+        # array: only the identity (K, N) rhs layout has a kernel
+        if qt.ndim != 2 or plan.rhs_perm != (0, 1):
+            return "dequant", "int4 payload needs the identity (K, N) layout"
+        return "int4_gemm", "packed int4 weight-only kernel"
+    if fmt == "fp8":
+        return "fp8_gemm", "e4m3 kernel (f32 accumulation)"
+    return "quant_gemm", "int8 kernel"
+
+
 def _quant_einsum(spec: str, a, b, pol: ExecutionPolicy,
                   preferred_element_type, quantized: bool | None):
     """Einsum with a QuantizedTensor operand.
 
     Kernel path (weight on the rhs, matmul-shaped, unbatched, channel scale
-    on the sole n-group label): int8 GeMM when the weight carries a
-    calibrated activation scale, weight-only otherwise.  Every other
-    configuration dequantizes back to the float reference dispatch.
+    on the sole n-group label): the kernel matching the weight's storage
+    format -- full int8 when a calibrated activation scale is present,
+    weight-only int8/int4 otherwise, e4m3 for fp8 weights.  Every other
+    configuration (see :func:`quant_route`) dequantizes back to the float
+    reference dispatch.
     """
     if isinstance(a, QuantizedTensor) and isinstance(b, QuantizedTensor):
-        a = dequantize(a)                  # no int8 kernel takes two weights
+        a = dequantize(a)               # no quantized kernel takes two weights
     if isinstance(a, QuantizedTensor):
         # weight-on-the-lhs has no kernel layout: reference path
         return einsum(spec, dequantize(a), b, policy=pol,
                       preferred_element_type=preferred_element_type)
     qt = b
     _qcal.record(qt, a)                    # no-op outside calibration scopes
-    plan = plan_contraction(spec, tuple(a.shape), tuple(qt.shape)) \
-        if hasattr(a, "shape") else None
-    naxis = _rhs_sole_n_axis(spec, a.ndim, qt.ndim) \
-        if plan is not None else None
-    colscale = _channel_scale(qt, naxis) if naxis is not None else None
-    if (not _use_int8(pol, quantized) or pol.resolved_backend() == "xla"
-            or plan is None or plan.B != 1 or colscale is None
-            or not jnp.issubdtype(a.dtype, jnp.floating)):
+    route, _ = quant_route(spec, a, qt, pol, quantized)
+    if route == "dequant":
         return einsum(spec, a, dequantize(qt), policy=pol,
                       preferred_element_type=preferred_element_type)
+    plan = plan_contraction(spec, tuple(a.shape), tuple(qt.shape))
+    naxis = _rhs_sole_n_axis(spec, a.ndim, qt.ndim)
+    colscale = _channel_scale(qt, naxis)
     if preferred_element_type is not None:
         out_dtype = jnp.dtype(preferred_element_type)
     else:
         out_dtype = jnp.result_type(a.dtype, qt.dtype)
     at = jax.lax.transpose(a, plan.lhs_perm).reshape(plan.M, plan.K)
-    bt = jax.lax.transpose(qt.q, plan.rhs_perm).reshape(plan.K, plan.N)
     s_act = _per_tensor_act_scale(qt)
-    if s_act is not None:
-        at = quantize_activation(at, s_act)
-        colscale = colscale * s_act
-    out = registry.get("quant_gemm")(at, bt, colscale, pol, out_dtype)
+    if route == "int4_gemm":
+        # weight-only by design: int4 activations would need calibrated
+        # clipping far tighter than serving accuracy tolerates
+        out = registry.get("int4_gemm")(at, qt.q, colscale, plan.K, pol,
+                                        out_dtype)
+    elif route == "fp8_gemm":
+        bt = jax.lax.transpose(qt.q, plan.rhs_perm).reshape(plan.K, plan.N)
+        if s_act is not None:
+            at = quantize_activation(at, s_act, fmt="fp8")
+            colscale = colscale * s_act
+        else:
+            # uncalibrated: e4m3 is a float format -- a saturating direct
+            # cast is the scale-1.0 quantization
+            at = to_fp8(at)
+        out = registry.get("fp8_gemm")(at, bt, colscale, pol, out_dtype)
+    else:
+        bt = jax.lax.transpose(qt.q, plan.rhs_perm).reshape(plan.K, plan.N)
+        if s_act is not None:
+            at = quantize_activation(at, s_act)
+            colscale = colscale * s_act
+        out = registry.get("quant_gemm")(at, bt, colscale, pol, out_dtype)
     out = out.reshape(plan.out_group_shape)
     return jax.lax.transpose(out, plan.out_perm)
 
@@ -522,10 +640,12 @@ def einsum(spec: str, *operands, precision=None, preferred_element_type=None,
     Under the ``xla`` backend this is exactly ``jnp.einsum`` (bit-identical).
     Under ``pallas`` / ``interpret``, matmul-shaped two-operand contractions
     are lowered onto the Axon kernels (fp32 accumulation); the rest fall back
-    to XLA.  ``repro.quant.QuantizedTensor`` operands dispatch the int8
-    kernels when the policy's ``precision`` is ``"int8"`` (or ``quantized=
+    to XLA.  ``repro.quant.QuantizedTensor`` operands dispatch the quantized
+    kernels matching their storage format (int8 / packed int4 / e4m3) when
+    the policy's ``precision`` is ``"int8"`` or ``"fp8"`` (or ``quantized=
     True`` overrides it per call) and dequantize to this float path
-    otherwise.
+    otherwise; ``precision="fp8"`` also casts eligible float contractions to
+    e4m3 operands.
     """
     pol = policy if policy is not None else current_policy()
     if any(isinstance(o, QuantizedTensor) for o in operands):
@@ -547,6 +667,9 @@ def einsum(spec: str, *operands, precision=None, preferred_element_type=None,
                 and jnp.issubdtype(b.dtype, jnp.floating)):
             plan = plan_contraction(spec, tuple(a.shape), tuple(b.shape))
             if plan is not None:
+                if pol.precision == "fp8" and plan.B == 1:
+                    return _fp8_dispatch(plan, a, b, pol,
+                                         preferred_element_type)
                 return _dispatch(plan, a, b, pol, preferred_element_type)
     return registry.get("xla_einsum")(
         spec, *operands, precision=precision,
@@ -570,6 +693,24 @@ def _dispatch(plan: ContractionPlan, a, b, pol: ExecutionPolicy,
     if pol.zero_gate and plan.B == 1:
         kind = "zero_gate"
     out = registry.get(kind)(at, bt, pol, out_dtype)      # (B, M, N)
+    out = out.reshape(plan.out_group_shape)
+    return jax.lax.transpose(out, plan.out_perm)
+
+
+def _fp8_dispatch(plan: ContractionPlan, a, b, pol: ExecutionPolicy,
+                  preferred_element_type) -> jax.Array:
+    """``precision="fp8"`` on float operands: cast BOTH sides to e4m3 and
+    run the fp8 kernel (f32 accumulation) -- 1-byte operand traffic for an
+    unquantized model.  Shared-batch contractions (B > 1) stay on the float
+    kernels; this path takes precedence over zero-gating in scope."""
+    if preferred_element_type is not None:
+        out_dtype = jnp.dtype(preferred_element_type)
+    else:
+        out_dtype = jnp.result_type(a.dtype, b.dtype)
+    at = to_fp8(jax.lax.transpose(a, plan.lhs_perm).reshape(plan.M, plan.K))
+    bt = to_fp8(jax.lax.transpose(b, plan.rhs_perm).reshape(plan.K, plan.N))
+    ones = jnp.ones((plan.N,), jnp.float32)
+    out = registry.get("fp8_gemm")(at, bt, ones, pol, out_dtype)
     out = out.reshape(plan.out_group_shape)
     return jax.lax.transpose(out, plan.out_perm)
 
@@ -666,7 +807,10 @@ def conv2d(x, w, *, stride=1, padding=0, groups: int = 1, out_dtype=None,
             stride, padding, kh, kw, x.shape[1], x.shape[2])
         colscale = _channel_scale(w, 3) if w.ndim == 4 else None
         s_act = _per_tensor_act_scale(w)
-        if (_use_int8(pol, quantized) and pol.resolved_backend() != "xla"
+        # the quantized conv kernel speaks int8 only; int4/fp8 filters
+        # dequantize onto the float path (conv stays an int8 workload)
+        if (_use_quant(pol, quantized) and pol.resolved_backend() != "xla"
+                and w.fmt == "int8"
                 and groups == 1 and colscale is not None
                 and s_act is not None and H_out >= 1 and W_out >= 1
                 and 0 not in x.shape and 0 not in w.shape

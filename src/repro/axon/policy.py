@@ -29,7 +29,7 @@ import jax.numpy as jnp
 from repro.core.dataflows import Dataflow
 
 BACKENDS = ("auto", "pallas", "xla", "interpret")
-PRECISIONS = ("float", "int8")
+PRECISIONS = ("float", "int8", "fp8")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -42,17 +42,29 @@ class ExecutionPolicy:
     in (float32 only for now); result dtypes follow jnp.einsum semantics,
     i.e. the per-call ``preferred_element_type``.
 
-    ``precision`` governs how ``repro.quant.QuantizedTensor`` operands
-    dispatch: ``"int8"`` routes them onto the quantized kernels (int8x int8
-    with int32 accumulation when a calibrated activation scale is present,
-    weight-only otherwise); ``"float"`` -- the default -- dequantizes them
-    back to the float reference path.  Float operands are unaffected either
-    way, so one policy flip compares int8 against the float baseline on
-    identical quantized params.
+    ``precision`` governs reduced-width dispatch.  ``"int8"`` and ``"fp8"``
+    both route ``repro.quant.QuantizedTensor`` operands onto the quantized
+    kernels *matching the tensor's own storage format* (int8 with int32
+    accumulation when a calibrated activation scale is present, weight-only
+    int8/int4, or e4m3 fp8 -- see ``QuantizedTensor.fmt``); ``"float"`` --
+    the default -- dequantizes them back to the float reference path.
+    ``"fp8"`` additionally casts eligible *float x float* GeMMs to e4m3
+    operands (f32 accumulation) -- serving an unquantized model at 1-byte
+    operand traffic.  Under ``"int8"`` float operands are unaffected, so one
+    policy flip compares int8 against the float baseline on identical
+    quantized params.
+
+    ``attn_int8`` routes the cached-decode attention (QK^T and PV) through
+    the int8 flash kernel with per-head scales (float softmax); it only
+    takes effect on the kernel backends -- ``xla`` stays the float
+    reference.  Single-device serving only for now: the kernel path skips
+    the float path's cache-layout sharding constraints, so on a
+    multi-device mesh it would gather the KV cache (see ROADMAP).
     """
 
     backend: str = "auto"
     precision: str = "float"
+    attn_int8: bool = False
     block: tuple[int, int, int] | None = None   # fixed (bm, bk, bn)
     order: Dataflow | None = None               # fixed loop order
     # kernel partial-product accumulation dtype; float32 is the only value

@@ -47,11 +47,15 @@ MAC_POWER_FRACTION = 0.53  # calibrated: 10 % sparsity -> 5.3 % power reduction
 # Operand width per precision: the paper's traffic/energy accounting is per
 # DRAM byte, so switching the serving dtype rescales traffic (and the
 # memory-bound side of the runtime roofline) by these ratios directly.
-OPERAND_BYTES = {"fp32": 4, "fp16": 2, "bf16": 2, "int8": 1}
+# fp8 (e4m3) streams at int8 width; int4 packs two operands per byte
+# (``repro.quant``'s nibble packing), hence the half-byte entry.
+OPERAND_BYTES = {"fp32": 4, "fp16": 2, "bf16": 2, "int8": 1, "fp8": 1,
+                 "int4": 0.5}
 
 
-def operand_bytes(precision: str) -> int:
-    """Bytes per operand element for a serving precision."""
+def operand_bytes(precision: str) -> float:
+    """Bytes per operand element for a serving precision (0.5 for packed
+    int4)."""
     try:
         return OPERAND_BYTES[precision]
     except KeyError:

@@ -1,20 +1,29 @@
-"""Quantized Pallas GeMM / im2col-conv kernels (int8 operands, int32 acc).
+"""Quantized Pallas GeMM / im2col-conv kernels (sub-byte operands, wide acc).
 
 The precision axis of the paper's claims: Axon's runtime and energy wins
 are per *operand byte* streamed from DRAM, so shrinking operands from
-bf16/f32 to int8 compounds directly with the on-chip-im2col traffic cut
-(cf. low-precision systolic arrays for CNN inference, arXiv:2005.08098).
+bf16/f32 to int8 -- and below, to packed int4 and fp8 -- compounds directly
+with the on-chip-im2col traffic cut (cf. low-precision systolic arrays for
+CNN inference, arXiv:2005.08098; DiP's traffic-per-MAC argument for
+transformer GeMMs).
 
-Three kernels, all with a fused dequant-rescale epilogue (the int32
-accumulator is scaled by the combined ``act_scale * weight_scale[channel]``
-column vector and cast ONCE, at the final K/C_in grid step -- no int32 or
-f32 intermediate ever round-trips to HBM):
+All kernels carry a fused dequant-rescale epilogue (the wide accumulator is
+scaled by the combined ``act_scale * weight_scale[channel]`` column vector
+and cast ONCE, at the final K/C_in grid step -- no int32 or f32
+intermediate ever round-trips to HBM):
 
   * ``quant_gemm``       : ``(M, K) int8 x (K, N) int8 -> out_dtype``, also
                            the weight-only form (float lhs, int8 rhs cast
                            up in VMEM -- halves weight HBM bytes vs bf16).
   * ``wq_gemv``          : the decode-step shape -- small-M float
                            activations against a streamed int8 weight.
+  * ``int4_gemm`` /
+    ``int4_gemv``        : weight-only against a nibble-packed int4 weight
+                           streamed at 0.5 B/elem; the unpack (sign-extend
+                           + interleave) is fused into the VMEM epilogue of
+                           each K step, so HBM only ever sees packed bytes.
+  * ``fp8_gemm``         : e4m3 activation x e4m3 weight at 1 B/elem each,
+                           f32 accumulation, scale-cast epilogue.
   * ``quant_im2col_conv``: the implicit-im2col conv with int8 IFMAP/filter
                            blocks; symmetric quantization makes the zero
                            spatial padding exact (zero-point is 0).
@@ -32,6 +41,7 @@ from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
 from repro.kernels.ref import conv_out_hw, normalize_padding, normalize_stride
+from repro.quant.qtensor import FP8_DTYPE, unpack_int4
 
 
 def _pad_to(x: jax.Array, multiples: tuple[int, ...]) -> jax.Array:
@@ -167,6 +177,207 @@ def wq_gemv(
         interpret=interpret,
     )(x_p, w_p, s_p)
     return out[:, :N]
+
+
+# ---------------------------------------------------------------------------
+# packed int4 weight-only GeMM / GEMV (fused unpack-dequant epilogue)
+# ---------------------------------------------------------------------------
+
+
+def _unpack_nibbles(packed: jax.Array) -> jax.Array:
+    """(bk/2, bn) packed int8 -> (bk, bn) int8 in [-8, 7], VMEM-local.
+
+    One packing convention lives in ``qtensor.unpack_int4`` (sign-extending
+    shifts + sublane interleave); it lowers inside the kernel body without
+    the unpacked values ever touching HBM."""
+    return unpack_int4(packed, 2 * packed.shape[0], axis=0)
+
+
+def _int4_gemm_kernel(a_ref, b_ref, s_ref, o_ref, acc_ref, *, nk: int):
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    a = a_ref[...]
+    w = _unpack_nibbles(b_ref[...])
+    acc_ref[...] += jnp.dot(a, w.astype(a.dtype),
+                            preferred_element_type=jnp.float32)
+
+    @pl.when(k == nk - 1)
+    def _store():
+        o_ref[...] = (acc_ref[...] * s_ref[...]).astype(o_ref.dtype)
+
+
+def int4_gemm(
+    a: jax.Array,              # (M, K) float activations
+    b_packed: jax.Array,       # (ceil(K/2), N) int8: two nibbles per byte
+    scale: jax.Array,          # (N,) f32 combined dequant scale per column
+    *,
+    k_size: int,               # logical (unpacked) K
+    block: tuple[int, int, int] = (256, 256, 256),
+    out_dtype: jnp.dtype = jnp.float32,
+    interpret: bool = False,
+) -> jax.Array:
+    """Weight-only GeMM against a nibble-packed int4 weight.
+
+    The weight streams from HBM at 0.5 B/elem; each K-step block unpacks in
+    VMEM and feeds the MXU at the activation dtype (int4 values are exact in
+    any float format)."""
+    M, K = a.shape
+    K2, N = b_packed.shape
+    assert K == k_size and K2 == (K + 1) // 2, (a.shape, b_packed.shape)
+    assert scale.shape == (N,), (scale.shape, N)
+    bm, bk, bn = block
+    bm, bn = min(bm, M), min(bn, N)
+    bk = min(bk, K)
+    bk += bk % 2                              # packed pairs: bk must be even
+
+    a_p = _pad_to(a, (bm, bk))
+    b_p = _pad_to(b_packed, (bk // 2, bn))
+    s_p = _pad_to(scale.astype(jnp.float32), (bn,))[None, :]
+    Mp, Kp = a_p.shape
+    Np = b_p.shape[1]
+    nm, nk, nn = Mp // bm, Kp // bk, Np // bn
+
+    out = pl.pallas_call(
+        functools.partial(_int4_gemm_kernel, nk=nk),
+        grid=(nm, nn, nk),
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, l: (i, l)),
+            pl.BlockSpec((bk // 2, bn), lambda i, j, l: (l, j)),
+            pl.BlockSpec((1, bn), lambda i, j, l: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, l: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((Mp, Np), out_dtype),
+        scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
+        interpret=interpret,
+    )(a_p, b_p, s_p)
+    return out[:M, :N]
+
+
+def _int4_gemv_kernel(x_ref, w_ref, s_ref, o_ref, acc_ref, *, nk: int):
+    k = pl.program_id(1)
+
+    @pl.when(k == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    x = x_ref[...]
+    w = _unpack_nibbles(w_ref[...])
+    acc_ref[...] += jnp.dot(x, w.astype(x.dtype),
+                            preferred_element_type=jnp.float32)
+
+    @pl.when(k == nk - 1)
+    def _store():
+        o_ref[...] = (acc_ref[...] * s_ref[...]).astype(o_ref.dtype)
+
+
+def int4_gemv(
+    x: jax.Array,              # (B, K) float, B small (decode rows)
+    w_packed: jax.Array,       # (ceil(K/2), N) int8 packed nibbles
+    scale: jax.Array,          # (N,) f32 per-column dequant scale
+    *,
+    k_size: int,
+    block_k: int = 512,
+    block_n: int = 1024,
+    out_dtype: jnp.dtype = jnp.float32,
+    interpret: bool = False,
+) -> jax.Array:
+    """Streaming int4 weight-only GEMV: W read once, at half a byte per
+    element -- the decode step's memory-bound shape at its narrowest."""
+    B, K = x.shape
+    K2, N = w_packed.shape
+    assert K == k_size and K2 == (K + 1) // 2 and scale.shape == (N,)
+    bk = min(block_k, K)
+    bk += bk % 2
+    bn = min(block_n, N)
+
+    x_p = jnp.pad(x, ((0, 0), (0, (-K) % bk)))
+    w_p = _pad_to(w_packed, (bk // 2, bn))
+    s_p = _pad_to(scale.astype(jnp.float32), (bn,))[None, :]
+    nk = x_p.shape[1] // bk
+    nn = w_p.shape[1] // bn
+
+    out = pl.pallas_call(
+        functools.partial(_int4_gemv_kernel, nk=nk),
+        grid=(nn, nk),
+        in_specs=[
+            pl.BlockSpec((B, bk), lambda n, k: (0, k)),
+            pl.BlockSpec((bk // 2, bn), lambda n, k: (k, n)),
+            pl.BlockSpec((1, bn), lambda n, k: (0, n)),
+        ],
+        out_specs=pl.BlockSpec((B, bn), lambda n, k: (0, n)),
+        out_shape=jax.ShapeDtypeStruct((B, nn * bn), out_dtype),
+        scratch_shapes=[pltpu.VMEM((B, bn), jnp.float32)],
+        interpret=interpret,
+    )(x_p, w_p, s_p)
+    return out[:, :N]
+
+
+# ---------------------------------------------------------------------------
+# fp8 (e4m3) GeMM: 1-byte operands on BOTH sides, f32 accumulation
+# ---------------------------------------------------------------------------
+
+
+def _fp8_gemm_kernel(a_ref, b_ref, s_ref, o_ref, acc_ref, *, nk: int):
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    # upcast in VMEM: HBM streamed 1 B/elem either way, and f32 MACs keep
+    # the kernel exact on every backend (e4m3 -> f32 is value-preserving)
+    acc_ref[...] += jnp.dot(a_ref[...].astype(jnp.float32),
+                            b_ref[...].astype(jnp.float32),
+                            preferred_element_type=jnp.float32)
+
+    @pl.when(k == nk - 1)
+    def _store():
+        o_ref[...] = (acc_ref[...] * s_ref[...]).astype(o_ref.dtype)
+
+
+def fp8_gemm(
+    a: jax.Array,              # (M, K) e4m3 (or float for weight-only)
+    b: jax.Array,              # (K, N) e4m3
+    scale: jax.Array,          # (N,) f32 combined dequant scale per column
+    *,
+    block: tuple[int, int, int] = (256, 256, 256),
+    out_dtype: jnp.dtype = jnp.float32,
+    interpret: bool = False,
+) -> jax.Array:
+    """``dequant(a @ b)`` with e4m3 operands and float32 accumulation."""
+    M, K = a.shape
+    K2, N = b.shape
+    assert K == K2, (a.shape, b.shape)
+    assert scale.shape == (N,), (scale.shape, N)
+    assert b.dtype == FP8_DTYPE, b.dtype
+    bm, bk, bn = block
+    bm, bk, bn = min(bm, M), min(bk, K), min(bn, N)
+
+    a_p = _pad_to(a, (bm, bk))
+    b_p = _pad_to(b, (bk, bn))
+    s_p = _pad_to(scale.astype(jnp.float32), (bn,))[None, :]
+    Mp, Kp = a_p.shape
+    Np = b_p.shape[1]
+    nm, nk, nn = Mp // bm, Kp // bk, Np // bn
+
+    out = pl.pallas_call(
+        functools.partial(_fp8_gemm_kernel, nk=nk),
+        grid=(nm, nn, nk),
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, l: (i, l)),
+            pl.BlockSpec((bk, bn), lambda i, j, l: (l, j)),
+            pl.BlockSpec((1, bn), lambda i, j, l: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, l: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((Mp, Np), out_dtype),
+        scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
+        interpret=interpret,
+    )(a_p, b_p, s_p)
+    return out[:M, :N]
 
 
 # ---------------------------------------------------------------------------

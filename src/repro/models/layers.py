@@ -16,6 +16,7 @@ import jax
 import jax.numpy as jnp
 
 from repro import axon
+from repro.kernels.flash_attention import int8_flash_attention_fwd
 from repro.parallel.sharding import constrain, constrain_priority
 
 Params = dict[str, Any]
@@ -190,23 +191,17 @@ def cached_attention(
     query t of slot b sees cache entries at positions <= q_pos[b, t] (inside
     the sliding window when ``window`` > 0) and earlier valid chunk tokens.
     Padded queries (k_valid False) produce garbage rows the caller discards.
+
+    Under ``ExecutionPolicy(attn_int8=True)`` (kernel backends only) the
+    whole computation routes through the int8 flash kernel: Q and the
+    cache+chunk K/V quantize per head, QK^T and PV run on int8 operands with
+    int32 accumulation (float softmax), and the per-slot masks pass through
+    unchanged -- the decode step's KV byte stream at 1 B/elem.
     """
     B, T, H, dh = q.shape
     S, KvH, dv = k_old.shape[1], k_old.shape[2], v_old.shape[-1]
     rep = H // KvH
     scale = dh ** -0.5
-    qf = ((q.reshape(B, T, KvH, rep, dh).astype(jnp.float32) * scale)
-          .astype(k_old.dtype))
-    # match the cache layout (kv-heads over 'model' when divisible; with a
-    # seq-sharded cache q stays replicated over 'model' and the scores come
-    # out S-sharded)
-    qf = constrain_priority(qf, 1, [2])
-    # keep the cache in its storage dtype; accumulate in fp32 via
-    # preferred_element_type (no fp32 copy of the cache is materialized)
-    s_old = axon.einsum("btgrd,bsgd->btgrs", qf, k_old,
-                        preferred_element_type=jnp.float32)
-    s_new = axon.einsum("btgrd,bugd->btgru", qf, k_new,
-                        preferred_element_type=jnp.float32)
     j = jnp.arange(S)
     if window:
         # absolute position held by rolling slot j before this step's writes
@@ -221,6 +216,43 @@ def cached_attention(
     ok_new = k_valid[:, None, :] & (q_pos[:, None, :] <= q_pos[:, :, None])
     if window:
         ok_new = ok_new & (q_pos[:, None, :] > q_pos[:, :, None] - window)
+
+    pol = axon.current_policy()
+    if pol.attn_int8 and pol.resolved_backend() != "xla":
+        mask = jnp.concatenate([ok_old, ok_new], axis=-1)    # (B, T, S + T)
+        # zero never-written / stale / padded positions BEFORE quantizing:
+        # reset_slots leaves old requests' KV contents in place (the float
+        # path only masks scores), and a stale outlier entering the per-head
+        # abs-max would coarsen every live token's quantization
+        live_old = (abs_old >= 0) if window \
+            else (j[None, :] < start[:, None])               # (B, S)
+        k_all = jnp.concatenate(
+            [jnp.where(live_old[:, :, None, None], k_old, 0),
+             jnp.where(k_valid[:, :, None, None], k_new, 0)], axis=1)
+        v_all = jnp.concatenate(
+            [jnp.where(live_old[:, :, None, None], v_old, 0),
+             jnp.where(k_valid[:, :, None, None], v_new, 0)], axis=1)
+        out = int8_flash_attention_fwd(
+            q.transpose(0, 2, 1, 3),                         # (B, H, T, dh)
+            k_all.transpose(0, 2, 1, 3),
+            v_all.transpose(0, 2, 1, 3),
+            mask=mask, scale=scale,
+            block_q=min(128, T), block_kv=min(128, S + T),
+            interpret=pol.interpret())
+        return out.transpose(0, 2, 1, 3).astype(q.dtype)     # (B, T, H, dv)
+
+    qf = ((q.reshape(B, T, KvH, rep, dh).astype(jnp.float32) * scale)
+          .astype(k_old.dtype))
+    # match the cache layout (kv-heads over 'model' when divisible; with a
+    # seq-sharded cache q stays replicated over 'model' and the scores come
+    # out S-sharded)
+    qf = constrain_priority(qf, 1, [2])
+    # keep the cache in its storage dtype; accumulate in fp32 via
+    # preferred_element_type (no fp32 copy of the cache is materialized)
+    s_old = axon.einsum("btgrd,bsgd->btgrs", qf, k_old,
+                        preferred_element_type=jnp.float32)
+    s_new = axon.einsum("btgrd,bugd->btgru", qf, k_new,
+                        preferred_element_type=jnp.float32)
     s_old = jnp.where(ok_old[:, :, None, None, :], s_old, _NEG_INF)
     s_new = jnp.where(ok_new[:, :, None, None, :], s_new, _NEG_INF)
     p = jax.nn.softmax(jnp.concatenate([s_old, s_new], axis=-1), axis=-1)

@@ -1,11 +1,19 @@
-"""``repro.quant`` -- int8 post-training quantization.
+"""``repro.quant`` -- sub-byte post-training quantization (int8/int4/fp8).
 
-Quantize once (:func:`quantize_model` / :func:`quantize_lm_weights`), then
-serve many: the resulting pytree drops into the existing engines and every
-``axon`` operator dispatches the int8 Pallas kernels under
-``ExecutionPolicy(precision="int8")`` -- or dequantizes back to the float
-reference path under any other policy, which is what the differential tests
-pin the kernels against.
+Quantize once (:func:`quantize_model` / :func:`quantize_lm` /
+:func:`quantize_lm_weights`), then serve many: the resulting pytree drops
+into the existing engines and every ``axon`` operator dispatches the
+quantized Pallas kernels matching each weight's storage format under
+``ExecutionPolicy(precision="int8")`` (or ``"fp8"``) -- or dequantizes back
+to the float reference path under any other policy, which is what the
+differential tests pin the kernels against.
+
+Formats: per-channel symmetric **int8** (full int8 x int8 with calibrated
+activation scales, weight-only otherwise), nibble-packed **int4**
+(weight-only, 0.5 B/elem), and **fp8** e4m3 (1 B/elem both sides, f32
+accumulation).  Scan-stacked LM layers calibrate through the scan-unrolled
+:func:`quantize_lm` pass, which threads per-layer activation scales through
+``lax.scan`` as stacked ``(L, 1, 1)`` arrays.
 """
 from repro.quant.calibrate import (
     Calibration,
@@ -13,24 +21,35 @@ from repro.quant.calibrate import (
     OBSERVERS,
     PercentileObserver,
     calibration,
+    current_calibration,
 )
 from repro.quant.ptq import (
     LM_WEIGHT_KEYS,
     QuantizedParams,
+    lm_calibration_forward,
+    quantize_lm,
     quantize_lm_weights,
     quantize_model,
     quantize_vision,
 )
 from repro.quant.qtensor import (
+    FP8_DTYPE,
+    FP8_MAX,
     QuantizedTensor,
     dequantize,
     is_quantized,
+    pack_int4,
     quantize_activation,
     quantize_weight,
+    slice_leading,
+    to_fp8,
+    unpack_int4,
 )
 
 __all__ = [
     "Calibration",
+    "FP8_DTYPE",
+    "FP8_MAX",
     "LM_WEIGHT_KEYS",
     "MinMaxObserver",
     "OBSERVERS",
@@ -38,11 +57,18 @@ __all__ = [
     "QuantizedParams",
     "QuantizedTensor",
     "calibration",
+    "current_calibration",
     "dequantize",
     "is_quantized",
+    "lm_calibration_forward",
+    "pack_int4",
     "quantize_activation",
+    "quantize_lm",
     "quantize_lm_weights",
     "quantize_model",
     "quantize_vision",
     "quantize_weight",
+    "slice_leading",
+    "to_fp8",
+    "unpack_int4",
 ]

@@ -11,9 +11,15 @@ zero model-code changes; :meth:`Calibration.finalize` then rebuilds the
 params pytree with ``act_scale`` filled in.
 
 Eager-only by design: under ``jit`` / ``scan`` tracing the activation is an
-abstract tracer with no value to observe, so :func:`record` skips tracers
-(the LM's scan-stacked layers therefore stay weight-only -- exactly the
-serve engine's int8 mode).
+abstract tracer with no value to observe, so :func:`record` skips tracers.
+Scan-stacked LM layers get their per-layer statistics through the *alias*
+mechanism instead: a scan-unrolled calibration pass (``repro.quant.ptq.
+quantize_lm``) slices each layer's weights out of the stacked pytree and
+registers the slices via :meth:`Calibration.alias`, so their records land
+in per-``(stacked tensor, layer index)`` observers.  ``finalize`` turns
+those into a stacked ``(L, 1, ..., 1)`` ``act_scale`` that ``lax.scan``
+slices back down to a per-layer scalar at serve time -- the keepdims /
+negative-axis layout rule extended to activation scales.
 """
 from __future__ import annotations
 
@@ -24,7 +30,8 @@ import dataclasses
 import jax
 import numpy as np
 
-from repro.quant.qtensor import QuantizedTensor, abs_max_scale
+from repro.quant.qtensor import (QuantizedTensor, abs_max_scale,
+                                 slice_leading)
 
 
 class MinMaxObserver:
@@ -36,8 +43,8 @@ class MinMaxObserver:
     def observe(self, x) -> None:
         self.amax = max(self.amax, float(np.max(np.abs(np.asarray(x)))))
 
-    def scale(self):
-        return abs_max_scale(self.amax)
+    def scale(self, fmt: str = "int8"):
+        return abs_max_scale(self.amax, fmt)
 
 
 class PercentileObserver:
@@ -57,15 +64,23 @@ class PercentileObserver:
         val = float(np.percentile(np.abs(np.asarray(x)), self.pct))
         self.amax = max(self.amax, val)
 
-    def scale(self):
-        return abs_max_scale(self.amax)
+    def scale(self, fmt: str = "int8"):
+        return abs_max_scale(self.amax, fmt)
 
 
 OBSERVERS = {"minmax": MinMaxObserver, "percentile": PercentileObserver}
 
+# site key for records that are not layer-sliced (plain eager call sites)
+_WHOLE = -1
+
 
 class Calibration:
-    """Collects one observer per QuantizedTensor identity."""
+    """Collects observers per QuantizedTensor identity (and layer site).
+
+    Plain call sites key by ``id(weight)``; scan-unrolled drivers register
+    per-layer slices with :meth:`alias` so their records accumulate under
+    ``(id(stacked weight), layer index)`` instead.
+    """
 
     def __init__(self, observer: str = "percentile") -> None:
         if observer not in OBSERVERS:
@@ -73,31 +88,87 @@ class Calibration:
                 f"observer must be one of {sorted(OBSERVERS)}, "
                 f"got {observer!r}")
         self._factory = OBSERVERS[observer]
-        self._seen: dict[int, tuple[QuantizedTensor, object]] = {}
+        # id(parent qt) -> (parent qt, {site: observer}); site is _WHOLE for
+        # unsliced records, a layer index for aliased ones
+        self._seen: dict[int, tuple[QuantizedTensor, dict[int, object]]] = {}
+        # id(slice qt) -> (slice qt keep-alive, id(parent), layer index)
+        self._alias: dict[int, tuple[QuantizedTensor, int, int]] = {}
+        # (id(parent), layer index) -> memoized slice (see layer_slice)
+        self._slices: dict[tuple[int, int], QuantizedTensor] = {}
+
+    def alias(self, sliced: QuantizedTensor, parent: QuantizedTensor,
+              index: int) -> None:
+        """Route future records of ``sliced`` to ``parent``'s observer for
+        layer ``index``.  Keeps both objects alive so the id keys stay
+        unambiguous for the lifetime of the scope."""
+        self._alias[id(sliced)] = (sliced, id(parent), int(index))
+        if id(parent) not in self._seen:
+            self._seen[id(parent)] = (parent, {})
+
+    def layer_slice(self, parent: QuantizedTensor,
+                    index: int) -> QuantizedTensor:
+        """Memoized per-layer slice of a stacked weight, alias-registered.
+
+        Scan-unrolled drivers call this once per (weight, layer) per batch;
+        memoizing keeps ONE slice alive per layer for the whole scope
+        instead of one per batch -- calibration memory stays O(params), not
+        O(params x batches)."""
+        key = (id(parent), int(index))
+        cached = self._slices.get(key)
+        if cached is None:
+            cached = self._slices[key] = slice_leading(parent, index)
+            self.alias(cached, parent, index)
+        return cached
 
     def record(self, qt: QuantizedTensor, x) -> None:
         if isinstance(x, jax.core.Tracer):
             return                      # traced call site: nothing to observe
-        entry = self._seen.get(id(qt))
-        if entry is None:
-            entry = (qt, self._factory())
-            self._seen[id(qt)] = entry
-        entry[1].observe(x)
+        alias = self._alias.get(id(qt))
+        if alias is not None:
+            _, key, site = alias
+        else:
+            key, site = id(qt), _WHOLE
+            if key not in self._seen:
+                self._seen[key] = (qt, {})
+        sites = self._seen[key][1]
+        obs = sites.get(site)
+        if obs is None:
+            obs = sites[site] = self._factory()
+        obs.observe(x)
 
     @property
     def n_sites(self) -> int:
-        return len(self._seen)
+        return sum(len(sites) for _, sites in self._seen.values())
 
     def finalize(self, params):
         """Rebuild ``params`` with observed ``act_scale`` on each recorded
-        QuantizedTensor (unrecorded ones stay weight-only)."""
+        QuantizedTensor (unrecorded ones stay weight-only).
+
+        Whole-tensor records produce a per-tensor ``(1, ..., 1)`` scale;
+        layer-aliased records produce a stacked ``(L, 1, ..., 1)`` scale
+        (one slot per leading-axis layer; layers that never recorded fall
+        back to the max observed scale, keeping them servable)."""
+        import jax.numpy as jnp
+
         def fill(leaf):
-            if isinstance(leaf, QuantizedTensor):
-                entry = self._seen.get(id(leaf))
-                if entry is not None:
-                    scale = entry[1].scale().reshape((1,) * leaf.ndim)
-                    return dataclasses.replace(leaf, act_scale=scale)
-            return leaf
+            if not isinstance(leaf, QuantizedTensor):
+                return leaf
+            entry = self._seen.get(id(leaf))
+            if entry is None or not entry[1]:
+                return leaf
+            sites = entry[1]
+            fmt = leaf.fmt
+            if set(sites) == {_WHOLE}:
+                scale = sites[_WHOLE].scale(fmt).reshape((1,) * leaf.ndim)
+                return dataclasses.replace(leaf, act_scale=scale)
+            L = leaf.q.shape[0]
+            per_layer = {s: float(o.scale(fmt)) for s, o in sites.items()
+                         if s != _WHOLE}
+            fallback = max(per_layer.values())
+            vals = [per_layer.get(l, fallback) for l in range(L)]
+            scale = jnp.asarray(vals, jnp.float32).reshape(
+                (L,) + (1,) * (leaf.ndim - 1))
+            return dataclasses.replace(leaf, act_scale=scale)
 
         return jax.tree.map(
             fill, params, is_leaf=lambda x: isinstance(x, QuantizedTensor))
@@ -117,6 +188,12 @@ def calibration(observer: str = "percentile"):
         yield calib
     finally:
         _CALIB.reset(token)
+
+
+def current_calibration() -> Calibration | None:
+    """The active calibration scope, if any (used by scan-unrolled
+    drivers to register layer-slice aliases)."""
+    return _CALIB.get()
 
 
 def record(qt: QuantizedTensor, x) -> None:

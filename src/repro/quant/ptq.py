@@ -24,15 +24,28 @@ model eagerly over calibration batches inside a
 :func:`~repro.quant.calibrate.calibration` scope (the axon dispatcher
 records the activation feeding every quantized op), and finalize the
 observed activation scales into the pytree -- quantize once, serve many.
+
+:func:`quantize_lm` is the LM counterpart, solving the problem eager
+calibration cannot: the LM zoo executes its layers under ``lax.scan`` over
+stacked params, where activations are tracers with no value to observe.
+The driver runs a *scan-unrolled* forward instead -- a Python loop over
+layers that slices each layer's params out of the stacked pytree
+(:func:`~repro.quant.qtensor.slice_leading` -- the same slice ``lax.scan``
+performs) and registers the slices as per-layer observation sites.
+``finalize`` stacks the per-layer scales into ``(L, 1, 1)`` ``act_scale``
+arrays that scan slices back to per-layer scalars at serve time, upgrading
+LM serving from weight-only to calibrated activation int8.
 """
 from __future__ import annotations
 
 from typing import Any, Callable, Iterable
 
+import jax
 import jax.numpy as jnp
 
 from repro.quant import calibrate as C
-from repro.quant.qtensor import QuantizedTensor, quantize_weight
+from repro.quant.qtensor import (QuantizedTensor, quantize_weight,
+                                 slice_leading)
 
 QuantizedParams = Any        # float-params pytree with QuantizedTensor leaves
 
@@ -72,15 +85,88 @@ def quantize_vision(params) -> QuantizedParams:
 
 
 def quantize_lm_weights(params,
-                        keys: frozenset[str] = LM_WEIGHT_KEYS
-                        ) -> QuantizedParams:
-    """Weight-only int8 for the LM zoo (the serve engine's decode mode)."""
+                        keys: frozenset[str] = LM_WEIGHT_KEYS,
+                        *, fmt: str = "int8") -> QuantizedParams:
+    """Weight-only quantization for the LM zoo (the serve engine's decode
+    mode).  ``fmt``: ``"int8"`` (1 B/elem), ``"int4"`` (packed nibbles,
+    0.5 B/elem), or ``"fp8"`` (e4m3)."""
     def leaf(key, v):
         if key in keys and _is_float_array(v) and v.ndim >= 2:
-            return quantize_weight(v, axis=-1, reduce_axes=(-2,))
+            return quantize_weight(v, axis=-1, reduce_axes=(-2,), fmt=fmt)
         return v
 
     return _walk(params, leaf)
+
+
+def _slice_layer(stacked, index: int, calib: C.Calibration | None):
+    """One layer's params out of a scan-stacked pytree -- exactly the slice
+    ``lax.scan`` performs -- registering QuantizedTensor slices as per-layer
+    calibration sites (memoized per layer, so repeated batches reuse one
+    slice instead of accumulating copies)."""
+    def leaf(v):
+        if isinstance(v, QuantizedTensor):
+            if calib is not None:
+                return calib.layer_slice(v, index)
+            return slice_leading(v, index)
+        return v[index]
+
+    return jax.tree.map(
+        leaf, stacked, is_leaf=lambda x: isinstance(x, QuantizedTensor))
+
+
+def lm_calibration_forward(qparams, batch, cfg):
+    """The LM forward with every ``lax.scan`` over layers unrolled.
+
+    Functionally ``transformer.forward`` (same blocks, same order, shared
+    attn every N layers, final norm + head) but executed eagerly layer by
+    layer so the dispatcher's calibration tap sees concrete activations at
+    each quantized call site -- keyed per layer through the slice aliases.
+    Calibration-only: the scanned path stays the one that serves.
+    """
+    from repro.models import layers as L          # deferred: avoids a cycle
+    from repro.models import transformer as T
+
+    calib = C.current_calibration()
+    x = T._embed_inputs(qparams, batch, cfg)
+    positions = jnp.arange(x.shape[1])
+    for p_s, stage in zip(qparams["stages"], cfg.stages):
+        every = stage.shared_attn_every
+        for l in range(stage.n_layers):
+            if every and l % every == 0:
+                x, _ = T.shared_attn_fwd(p_s["shared"], x, cfg, positions,
+                                         None, False)
+            layer_p = _slice_layer(p_s["layers"], l, calib)
+            x, _, _ = T.block_fwd(layer_p, x, cfg, stage,
+                                  positions=positions)
+    x = L.rmsnorm(qparams["final_norm"], x)
+    return T._head_logits(qparams, x, cfg)
+
+
+def quantize_lm(params, cfg, calib_batches: Iterable[Any], *,
+                fmt: str = "int8",
+                observer: str = "percentile") -> QuantizedParams:
+    """Scan-safe LM PTQ: per-channel weights + per-layer activation scales.
+
+    Quantizes the projection weights (:func:`quantize_lm_weights`), runs the
+    scan-unrolled forward over ``calib_batches`` (dicts with ``"tokens"``
+    etc., as consumed by ``transformer.forward``) inside a calibration
+    scope, and finalizes stacked ``(L, 1, 1)`` activation scales that
+    ``lax.scan`` slices to per-layer scalars at serve time.  The result
+    serves through ``ServeEngine`` as calibrated activation int8 (full
+    int8 x int8 decode GeMMs) rather than weight-only.
+
+    ``fmt="int4"`` / ``"fp8"`` quantize the weights at those widths; int4
+    stays weight-only at dispatch (the act scales are recorded but unused).
+    """
+    qparams = quantize_lm_weights(params, fmt=fmt)
+    with C.calibration(observer) as calib:
+        for batch in calib_batches:
+            lm_calibration_forward(qparams, batch, cfg)
+    if calib.n_sites == 0:
+        raise ValueError(
+            "calibration observed no quantized call sites -- check that the "
+            "config matches the params and the batches are non-empty")
+    return calib.finalize(qparams)
 
 
 def quantize_model(params, apply_fn: Callable[[QuantizedParams, Any], Any],

@@ -1,25 +1,37 @@
-"""``QuantizedTensor``: the int8 carrier the whole quant subsystem rides on.
+"""``QuantizedTensor``: the sub-byte carrier the whole quant subsystem rides on.
 
-A quantized weight is a pytree node holding the int8 payload, a float32
+A quantized weight is a pytree node holding the quantized payload, a float32
 scale broadcastable against it (``keepdims`` layout), and an optional
-calibrated per-tensor *activation* scale for the op that consumes it.  The
-node ducks as an array (``shape`` / ``ndim`` / ``dtype`` report the logical
-*float* tensor), so model code passes it to ``axon.einsum`` / ``conv2d``
-unchanged and the dispatcher decides between the int8 kernels and the
+calibrated *activation* scale for the op that consumes it.  The node ducks
+as an array (``shape`` / ``ndim`` / ``dtype`` report the logical *float*
+tensor), so model code passes it to ``axon.einsum`` / ``conv2d`` unchanged
+and the dispatcher decides between the quantized kernels and the
 dequantize-to-float reference path.
 
-Two layout rules make the container survive the repo's structural
+Three storage formats share the one container (``fmt`` property):
+
+  * ``int8`` : 1 byte per element, symmetric, the PR-4 baseline.
+  * ``int4`` : ``bits=4`` -- two nibbles packed per int8 byte along the
+               *reduction* axis (``-2``), values in [-7, 7].  Weight-only:
+               the kernels unpack in the epilogue, activations stay float.
+  * ``fp8``  : ``float8_e4m3fn`` payload, scaled so each channel's abs-max
+               lands on e4m3's top of range (448).
+
+Layout rules that make the container survive the repo's structural
 transforms without special cases:
 
-  * ``axis`` (the per-channel dimension) is stored *negative*, and
+  * ``axis`` (the per-channel dimension) is stored *negative*,
   * ``scale`` / ``act_scale`` keep reduced dimensions as size-1
-    (``keepdims``),
+    (``keepdims``), and
+  * int4 packing runs along axis ``-2`` -- also negative,
 
 so when ``jax.lax.scan`` slices a stacked ``(L, d_in, d_out)`` weight down
 to ``(d_in, d_out)`` per layer, the sliced children still line up: the
-channel axis is still ``-1`` and the sliced ``(1, d_out)`` scale still
-broadcasts.  Quantization is symmetric (zero-point 0), so zero padding of
-int8 operands is exact -- conv spatial padding needs no zero-point surgery.
+channel axis is still ``-1``, the packed axis is still ``-2``, and a sliced
+``(1, d_out)`` scale (or per-layer ``(1, 1)`` activation scale from a
+stacked ``(L, 1, 1)``) still broadcasts.  Quantization is symmetric
+(zero-point 0), so zero padding of quantized operands is exact -- conv
+spatial padding needs no zero-point surgery.
 """
 from __future__ import annotations
 
@@ -30,21 +42,81 @@ import jax
 import jax.numpy as jnp
 
 INT8_MAX = 127.0
+INT4_MAX = 7.0
+FP8_MAX = 448.0          # float8_e4m3fn finite max
+FP8_DTYPE = jnp.float8_e4m3fn
 _EPS = 1e-12
+
+# abs-max -> per-format activation/weight quantization divisor
+FMT_MAX = {"int8": INT8_MAX, "int4": INT4_MAX, "fp8": FP8_MAX}
+
+
+# ---------------------------------------------------------------------------
+# int4 nibble packing
+# ---------------------------------------------------------------------------
+
+
+def pack_int4(q: jax.Array, axis: int = -2) -> jax.Array:
+    """Pack int8 values in [-8, 7] two-per-byte along ``axis``.
+
+    Consecutive pairs ``(q0, q1)`` become ``(q1 << 4) | (q0 & 0xF)``; an odd
+    axis length is zero-padded (symmetric quantization makes the pad exact).
+    The packed axis shrinks to ``ceil(size / 2)``.
+    """
+    axis = axis if axis >= 0 else q.ndim + axis
+    size = q.shape[axis]
+    if size % 2:
+        pad = [(0, 0)] * q.ndim
+        pad[axis] = (0, 1)
+        q = jnp.pad(q, pad)
+    q = q.astype(jnp.int8)
+    lo = jax.lax.slice_in_dim(q, 0, None, 2, axis)
+    hi = jax.lax.slice_in_dim(q, 1, None, 2, axis)
+    return ((hi << 4) | (lo & 0xF)).astype(jnp.int8)
+
+
+def unpack_int4(packed: jax.Array, size: int, axis: int = -2) -> jax.Array:
+    """Inverse of :func:`pack_int4`: int8 values in [-8, 7], sign-extended.
+
+    ``size`` is the logical (unpacked) axis length -- the trailing pad
+    nibble of an odd-size axis is dropped.
+    """
+    axis = axis if axis >= 0 else packed.ndim + axis
+    p = packed.astype(jnp.int8)
+    lo = ((p << 4) >> 4).astype(jnp.int8)        # arithmetic: sign-extends
+    hi = (p >> 4).astype(jnp.int8)
+    both = jnp.stack([lo, hi], axis=axis + 1)    # (..., n/2, 2, ...)
+    shape = list(packed.shape)
+    shape[axis] = 2 * shape[axis]
+    out = both.reshape(shape)
+    return jax.lax.slice_in_dim(out, 0, size, 1, axis)
+
+
+# ---------------------------------------------------------------------------
+# the container
+# ---------------------------------------------------------------------------
 
 
 @jax.tree_util.register_pytree_node_class
 @dataclasses.dataclass(frozen=True)
 class QuantizedTensor:
-    """Symmetric int8 tensor: ``dequant = q.astype(f32) * scale``.
+    """Symmetric quantized tensor: ``dequant = unpack(q).astype(f32) * scale``.
 
-    ``q``        : int8 payload, the logical tensor's shape.
-    ``scale``    : float32, same ndim as ``q`` with reduced dims kept as 1.
-    ``act_scale``: optional per-tensor float32 scale (size 1) for the
-                   activation feeding the op that consumes this weight --
-                   filled in by calibration; ``None`` = weight-only mode.
+    ``q``        : payload -- int8 (``bits=8``), nibble-packed int8
+                   (``bits=4``, packed along axis ``-2``), or
+                   ``float8_e4m3fn`` (``bits=8`` with fp8 payload).
+    ``scale``    : float32, logical ndim with reduced dims kept as 1.
+    ``act_scale``: optional float32 scale for the activation feeding the op
+                   that consumes this weight -- per-tensor (size 1), or
+                   per-layer ``(L, 1, ..., 1)`` on scan-stacked weights so
+                   ``lax.scan`` slices a per-layer scalar; filled in by
+                   calibration.  ``None`` = weight-only mode.
     ``axis``     : per-channel (output-feature) axis, negative indexing.
     ``dtype_name``: the logical float dtype dequantization restores.
+    ``bits``     : 8 or 4 (4 = nibble-packed int payload).
+    ``pack_size``: logical length of the packed axis (``-2``) when
+                   ``bits=4``; static so ``shape`` stays concrete under
+                   tracing.  None for 8-bit formats.
     """
 
     q: jax.Array
@@ -52,11 +124,16 @@ class QuantizedTensor:
     act_scale: jax.Array | None = None
     axis: int = -1
     dtype_name: str = "float32"
+    bits: int = 8
+    pack_size: int | None = None
 
     # -- array duck-typing (logical view) -----------------------------------
     @property
     def shape(self) -> tuple[int, ...]:
-        return tuple(self.q.shape)
+        s = tuple(self.q.shape)
+        if self.bits == 4:
+            s = s[:-2] + (self.pack_size,) + s[-1:]
+        return s
 
     @property
     def ndim(self) -> int:
@@ -66,30 +143,57 @@ class QuantizedTensor:
     def dtype(self):
         return jnp.dtype(self.dtype_name)
 
+    @property
+    def fmt(self) -> str:
+        """Storage format: ``"int8"``, ``"int4"``, or ``"fp8"``."""
+        if self.bits == 4:
+            return "int4"
+        if self.q.dtype == FP8_DTYPE:
+            return "fp8"
+        return "int8"
+
     # -- pytree protocol ----------------------------------------------------
     def tree_flatten(self):
-        return (self.q, self.scale, self.act_scale), (self.axis,
-                                                      self.dtype_name)
+        return (self.q, self.scale, self.act_scale), (
+            self.axis, self.dtype_name, self.bits, self.pack_size)
 
     @classmethod
     def tree_unflatten(cls, aux, children):
         q, scale, act_scale = children
-        axis, dtype_name = aux
+        axis, dtype_name, bits, pack_size = aux
         return cls(q=q, scale=scale, act_scale=act_scale, axis=axis,
-                   dtype_name=dtype_name)
+                   dtype_name=dtype_name, bits=bits, pack_size=pack_size)
+
+
+def slice_leading(qt: QuantizedTensor, index: int) -> QuantizedTensor:
+    """Slice one layer out of a scan-stacked QuantizedTensor.
+
+    Mirrors exactly what ``lax.scan`` does when the stacked tensor rides the
+    xs pytree: every array child loses its leading axis; the negative-axis
+    aux data stays valid on the slice.  Used by the scan-unrolled
+    calibration pass."""
+    return dataclasses.replace(
+        qt, q=qt.q[index], scale=qt.scale[index],
+        act_scale=None if qt.act_scale is None else qt.act_scale[index])
 
 
 def quantize_weight(w: jax.Array, *, axis: int = -1,
-                    reduce_axes: tuple[int, ...] | None = None
-                    ) -> QuantizedTensor:
-    """Per-channel symmetric int8 quantization of a weight tensor.
+                    reduce_axes: tuple[int, ...] | None = None,
+                    fmt: str = "int8") -> QuantizedTensor:
+    """Per-channel symmetric quantization of a weight tensor.
 
     ``axis`` is the output-feature (per-channel) dimension.  ``reduce_axes``
     are the dimensions the abs-max reduction runs over -- default: every
     axis except ``axis`` (plain dense / conv weights).  Stacked weights
     (scan-stacked layers ``(L, d_in, d_out)``, stacked MoE experts) pass
     ``reduce_axes=(-2,)`` so leading stack dims keep independent scales.
+
+    ``fmt``: ``"int8"`` (1 B/elem), ``"int4"`` (packed 0.5 B/elem,
+    weight-only -- requires channel axis ``-1`` and ndim >= 2 so the packed
+    reduction axis is ``-2``), or ``"fp8"`` (e4m3, 1 B/elem).
     """
+    if fmt not in FMT_MAX:
+        raise ValueError(f"fmt must be one of {sorted(FMT_MAX)}, got {fmt!r}")
     axis = axis if axis < 0 else axis - w.ndim
     if reduce_axes is None:
         reduce_axes = tuple(a for a in range(-w.ndim, 0) if a != axis)
@@ -98,28 +202,56 @@ def quantize_weight(w: jax.Array, *, axis: int = -1,
         if axis in reduce_axes:
             raise ValueError(
                 f"channel axis {axis} cannot also be reduced {reduce_axes}")
+    if fmt == "int4" and (w.ndim < 2 or axis != -1):
+        raise ValueError(
+            "int4 packs along the reduction axis -2: needs ndim >= 2 and "
+            f"channel axis -1, got ndim={w.ndim}, axis={axis}")
     wf = w.astype(jnp.float32)
     amax = jnp.max(jnp.abs(wf), axis=reduce_axes, keepdims=True)
-    scale = jnp.maximum(amax, _EPS) / INT8_MAX
-    q = jnp.clip(jnp.round(wf / scale), -INT8_MAX, INT8_MAX).astype(jnp.int8)
-    return QuantizedTensor(q=q, scale=scale, axis=axis,
-                           dtype_name=jnp.dtype(w.dtype).name)
+    qmax = FMT_MAX[fmt]
+    scale = jnp.maximum(amax, _EPS) / qmax
+    name = jnp.dtype(w.dtype).name
+    if fmt == "fp8":
+        q = jnp.clip(wf / scale, -qmax, qmax).astype(FP8_DTYPE)
+        return QuantizedTensor(q=q, scale=scale, axis=axis, dtype_name=name)
+    q = jnp.clip(jnp.round(wf / scale), -qmax, qmax).astype(jnp.int8)
+    if fmt == "int4":
+        return QuantizedTensor(q=pack_int4(q, axis=-2), scale=scale,
+                               axis=axis, dtype_name=name, bits=4,
+                               pack_size=w.shape[-2])
+    return QuantizedTensor(q=q, scale=scale, axis=axis, dtype_name=name)
 
 
-def quantize_activation(x: jax.Array, act_scale: jax.Array) -> jax.Array:
-    """On-the-fly symmetric int8 activation quantization (per-tensor)."""
+def to_fp8(x: jax.Array) -> jax.Array:
+    """The one e4m3 cast: clamp to the finite range, then convert.
+
+    Every fp8 ingestion path (weight-only activations, the calibrated
+    activation quantizer, the ``precision="fp8"`` float-GeMM cast) funnels
+    through here so the saturation semantics can never diverge."""
+    return jnp.clip(x, -FP8_MAX, FP8_MAX).astype(FP8_DTYPE)
+
+
+def quantize_activation(x: jax.Array, act_scale: jax.Array,
+                        fmt: str = "int8") -> jax.Array:
+    """On-the-fly symmetric activation quantization (per-tensor scale)."""
     xf = x.astype(jnp.float32) / act_scale.astype(jnp.float32)
-    return jnp.clip(jnp.round(xf), -INT8_MAX, INT8_MAX).astype(jnp.int8)
+    if fmt == "fp8":
+        return to_fp8(xf)
+    qmax = FMT_MAX[fmt]
+    return jnp.clip(jnp.round(xf), -qmax, qmax).astype(jnp.int8)
 
 
 def dequantize(qt: QuantizedTensor) -> jax.Array:
     """Restore the float tensor: the reference path and the fallback."""
-    return (qt.q.astype(jnp.float32) * qt.scale).astype(qt.dtype)
+    q = qt.q
+    if qt.bits == 4:
+        q = unpack_int4(q, qt.pack_size, axis=-2)
+    return (q.astype(jnp.float32) * qt.scale).astype(qt.dtype)
 
 
-def abs_max_scale(amax: float | jax.Array) -> jax.Array:
+def abs_max_scale(amax: float | jax.Array, fmt: str = "int8") -> jax.Array:
     """Activation scale from an observed absolute maximum."""
-    return jnp.maximum(jnp.asarray(amax, jnp.float32), _EPS) / INT8_MAX
+    return jnp.maximum(jnp.asarray(amax, jnp.float32), _EPS) / FMT_MAX[fmt]
 
 
 def is_quantized(tree: Any) -> bool:

@@ -124,11 +124,18 @@ class ServeEngine:
                       smallest sliding window so a chunk never overruns a
                       rolling SWA cache)
       queue_policy  : 'fifo' (arrival order) or 'sjf' (shortest prompt first)
-      quantized     : weight-only int8 -- projection weights are per-channel
-                      quantized at construction (or accepted pre-quantized)
-                      and the step policy serves at precision="int8", so the
-                      GeMV-shaped decode steps stream 1-byte weights through
-                      the quantized kernels
+      quantized     : True / "int8" = weight-only int8, "int4" = packed
+                      int4 (0.5 B/elem weights), "fp8" = e4m3 -- projection
+                      weights are per-channel quantized at construction.
+                      Pre-quantized params (including the calibrated
+                      activation-int8 pytrees from ``quant.quantize_lm``,
+                      whose per-layer scales thread through ``lax.scan``)
+                      are accepted as-is.  Either way the step policy serves
+                      at the matching reduced precision, so decode steps
+                      stream sub-byte weights through the quantized kernels.
+      attn_int8     : route the decode attention (QK^T / PV against the KV
+                      cache) through the int8 flash kernel with per-head
+                      scales -- kernel backends only (xla stays float).
 
     ``generate`` returns outputs in request order; ``last_stats`` holds
     per-request latency/token counts for the most recent call.
@@ -138,20 +145,34 @@ class ServeEngine:
                  max_len: int = 512, prefill_chunk: int = 16,
                  temperature: float = 0.0, seed: int = 0,
                  policy: axon.ExecutionPolicy | None = None,
-                 queue_policy: str = "fifo", quantized: bool = False):
+                 queue_policy: str = "fifo",
+                 quantized: bool | str = False, attn_int8: bool = False):
         if queue_policy not in QUEUE_POLICIES:
             raise ValueError(
                 f"queue_policy must be one of {QUEUE_POLICIES}, "
                 f"got {queue_policy!r}")
         if quantized and not quant.is_quantized(params):
-            params = quant.quantize_lm_weights(params)
-        # quantized=True (or pre-quantized params with no explicit policy)
-        # serves at int8; an explicitly supplied policy is otherwise
-        # respected verbatim (precision="float" = dequantized reference)
+            fmt = "int8" if quantized is True else str(quantized)
+            params = quant.quantize_lm_weights(params, fmt=fmt)
+        # quantized (or pre-quantized params with no explicit policy) serves
+        # at reduced precision; an explicitly supplied policy is otherwise
+        # respected verbatim (precision="float" = dequantized reference).
+        # The precision follows the weights' own storage format -- fp8
+        # payloads serve under "fp8" whether they arrived pre-quantized or
+        # via quantized="fp8"; everything else (int8, packed int4) under
+        # "int8".
         if quant.is_quantized(params) and (quantized or policy is None):
             pol = policy if policy is not None else axon.current_policy()
             if pol.precision == "float":
-                policy = dataclasses.replace(pol, precision="int8")
+                fmts = {l.fmt for l in jax.tree.leaves(
+                    params,
+                    is_leaf=lambda x: isinstance(x, quant.QuantizedTensor))
+                    if isinstance(l, quant.QuantizedTensor)}
+                prec = "fp8" if fmts == {"fp8"} else "int8"
+                policy = dataclasses.replace(pol, precision=prec)
+        if attn_int8:
+            pol = policy if policy is not None else axon.current_policy()
+            policy = dataclasses.replace(pol, attn_int8=True)
         self.params = params
         self.cfg = cfg
         self.batch_slots = batch_slots

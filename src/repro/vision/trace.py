@@ -87,15 +87,16 @@ def lowered_gemms(cfg: VisionConfig) -> list[tuple[str, GemmShape]]:
 def precision_report(cfg: VisionConfig, *,
                      array: tuple[int, int] = (16, 16),
                      feeder_group: int = 16,
-                     precisions: tuple[str, ...] = ("bf16", "int8")) -> dict:
+                     precisions: tuple[str, ...] = ("bf16", "int8", "fp8",
+                                                    "int4")) -> dict:
     """Modeled operand-precision sweep for the Axon orchestration.
 
     Compute cycles are precision-independent (same MAC count); DRAM traffic
     -- and with it DRAM energy and the memory-bound side of the runtime
     roofline -- scales with bytes per operand.  The first precision is the
-    baseline the ``*_vs_*`` ratios compare against (int8 operands halve the
-    bf16 stream: 2x less DRAM energy, and runtime speedup wherever the
-    layer stream is memory-bound)."""
+    baseline the ``*_vs_*`` ratios compare against: int8 and fp8 operands
+    halve the bf16 stream (2x less DRAM energy, runtime speedup wherever
+    the layer stream is memory-bound); packed int4 quarters it."""
     arr = ArrayShape(*array)
     convs = conv_shapes(cfg)
     gemms = [lower_to_gemm(c) for c in convs]

@@ -1,0 +1,721 @@
+"""Sub-byte precision conformance net: int4 / fp8 / int8-attention / golden.
+
+The lock-down suite for everything ``repro.quant`` grew below int8:
+
+  * exact pack/unpack round trips for the nibble-packed int4 payload
+    (odd channel counts, negative values, both channel axes) -- hypothesis
+    fuzz plus pinned examples;
+  * differential tests of every new kernel (int4 GeMM/GEMV, fp8 GeMM, int8
+    flash attention) against the dequantized float reference with
+    scale-derived tolerances -- the ``tests/test_quant.py`` pattern;
+  * the ``QuantizedTensor`` scan invariant: ``lax.scan`` slices of a
+    stacked quantized weight dequantize BIT-EXACTLY to the unstacked
+    per-layer dequant, for int8 and packed int4 (plus per-layer act
+    scales);
+  * the dispatch eligibility predicate (``axon.quant_route``), with
+    routing asserted through registry spies and the mapper cache rather
+    than output values alone;
+  * golden pins on ``paper_report["precision"]`` so energy-model refactors
+    cannot silently move the modeled headline figures;
+  * acceptance: ``ServeEngine`` serving a calibrated-activation int8 LM
+    end to end with per-layer scales threaded through ``lax.scan``.
+"""
+import contextlib
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from _hypothesis_compat import given, settings, st
+
+from repro import axon, quant
+from repro.axon import registry
+from repro.configs import get_config, get_vision_config
+from repro.core.energy_model import operand_bytes
+from repro.core.mapper import mapper_cache_clear, sweep_calls
+from repro.kernels.flash_attention import (flash_attention_fwd,
+                                           int8_flash_attention_fwd)
+from repro.kernels.quant_gemm import fp8_gemm, int4_gemm, int4_gemv
+from repro.models import transformer as T
+from repro.serve.engine import Request, ServeEngine, make_chunk_step
+from repro.vision.trace import paper_report
+
+KEY = jax.random.PRNGKey(0)
+
+
+def _rand(shape, seed, scale=1.0):
+    return jax.random.normal(jax.random.PRNGKey(seed), shape,
+                             jnp.float32) * scale
+
+
+def _int4_tol(qt: quant.QuantizedTensor, K: int) -> dict:
+    """Scale-derived tolerance: both paths sum K products of magnitude
+    <= 7 * s * |a|; only f32 summation rounding separates them."""
+    s_w = float(jnp.max(qt.scale))
+    return dict(rtol=1e-4, atol=max(7.0 * s_w * K * 1e-5, 1e-6))
+
+
+@contextlib.contextmanager
+def _spy(*kinds):
+    """Wrap registry entries to record (kind, lhs dtype/shape) per dispatch."""
+    calls = {k: [] for k in kinds}
+    originals = {k: registry.get(k) for k in kinds}
+
+    def wrap(kind, fn):
+        def wrapped(*args, **kwargs):
+            at = args[0]
+            calls[kind].append((jnp.dtype(at.dtype).name, tuple(at.shape)))
+            return fn(*args, **kwargs)
+        return wrapped
+
+    for k in kinds:
+        registry._REGISTRY[k] = wrap(k, originals[k])
+    try:
+        yield calls
+    finally:
+        for k in kinds:
+            registry._REGISTRY[k] = originals[k]
+
+
+# ---------------------------------------------------------------------------
+# int4 packing: exact round trips
+# ---------------------------------------------------------------------------
+
+
+class TestInt4PackUnpack:
+    @pytest.mark.parametrize("shape,axis", [
+        ((6, 4), 0), ((6, 4), 1), ((7, 5), 0), ((7, 5), 1),   # odd + both axes
+        ((3, 9, 5), 1), ((5, 3), -2), ((4, 7), -1),
+    ])
+    def test_round_trip_exact(self, shape, axis):
+        rng = np.random.default_rng(hash((shape, axis)) % 2**31)
+        q = jnp.asarray(rng.integers(-8, 8, shape), jnp.int8)
+        packed = quant.pack_int4(q, axis=axis)
+        ax = axis if axis >= 0 else len(shape) + axis
+        assert packed.shape[ax] == (shape[ax] + 1) // 2
+        out = quant.unpack_int4(packed, shape[ax], axis=axis)
+        np.testing.assert_array_equal(np.asarray(out), np.asarray(q))
+
+    def test_negative_extremes(self):
+        q = jnp.asarray([[-8, 7], [-1, 0], [1, -7]], jnp.int8)
+        for axis in (0, 1):
+            out = quant.unpack_int4(quant.pack_int4(q, axis=axis),
+                                    q.shape[axis], axis=axis)
+            np.testing.assert_array_equal(np.asarray(out), np.asarray(q))
+
+    @given(m=st.integers(1, 33), n=st.integers(1, 33), axis=st.sampled_from(
+        [0, 1, -1, -2]), seed=st.integers(0, 100))
+    @settings(max_examples=25, deadline=None)
+    def test_round_trip_fuzz(self, m, n, axis, seed):
+        rng = np.random.default_rng(seed)
+        q = jnp.asarray(rng.integers(-8, 8, (m, n)), jnp.int8)
+        ax = axis if axis >= 0 else 2 + axis
+        out = quant.unpack_int4(quant.pack_int4(q, axis=axis),
+                                q.shape[ax], axis=axis)
+        np.testing.assert_array_equal(np.asarray(out), np.asarray(q))
+
+    def test_quantize_weight_int4_layout(self):
+        w = _rand((33, 24), 0, scale=2.0)
+        qt = quant.quantize_weight(w, fmt="int4")
+        assert qt.fmt == "int4" and qt.bits == 4
+        assert qt.q.shape == (17, 24) and qt.shape == (33, 24)
+        assert qt.scale.shape == (1, 24)
+        assert int(jnp.max(jnp.abs(quant.unpack_int4(
+            qt.q, 33).astype(jnp.int32)))) <= 7
+        err = jnp.abs(quant.dequantize(qt) - w)
+        assert bool(jnp.all(err <= qt.scale * 0.5 + 1e-6))
+
+    def test_int4_requires_last_channel_axis(self):
+        with pytest.raises(ValueError):
+            quant.quantize_weight(_rand((8, 8), 1), axis=0, fmt="int4")
+        with pytest.raises(ValueError):
+            quant.quantize_weight(_rand((8,), 2), fmt="int4")
+
+    def test_bad_fmt_rejected(self):
+        with pytest.raises(ValueError):
+            quant.quantize_weight(_rand((4, 4), 3), fmt="int2")
+
+
+# ---------------------------------------------------------------------------
+# kernels, direct (interpret mode), vs the dequantized float reference
+# ---------------------------------------------------------------------------
+
+
+class TestSubbyteKernels:
+    def test_int4_gemm_matches_dequant_reference(self):
+        M, K, N = 17, 33, 29                      # odd K: packed pad nibble
+        a = _rand((M, K), 0)
+        qt = quant.quantize_weight(_rand((K, N), 1, scale=2.0), fmt="int4")
+        got = int4_gemm(a, qt.q, qt.scale.reshape(-1), k_size=K,
+                        block=(8, 16, 16), interpret=True)
+        want = a @ quant.dequantize(qt)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   **_int4_tol(qt, K))
+
+    def test_int4_gemv(self):
+        K, N = 95, 130                            # odd K again
+        x = _rand((2, K), 2)
+        qt = quant.quantize_weight(_rand((K, N), 3), fmt="int4")
+        got = int4_gemv(x, qt.q, qt.scale.reshape(-1), k_size=K,
+                        block_k=32, block_n=64, interpret=True)
+        want = x @ quant.dequantize(qt)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   **_int4_tol(qt, K))
+
+    def test_fp8_gemm_matches_cast_reference(self):
+        M, K, N = 17, 40, 24
+        a = _rand((M, K), 4)
+        qt = quant.quantize_weight(_rand((K, N), 5, scale=3.0), fmt="fp8")
+        af8 = jnp.clip(a, -quant.FP8_MAX, quant.FP8_MAX).astype(
+            quant.FP8_DTYPE)
+        got = fp8_gemm(af8, qt.q, qt.scale.reshape(-1), block=(8, 16, 16),
+                       interpret=True)
+        want = af8.astype(jnp.float32) @ quant.dequantize(qt)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   rtol=1e-4, atol=1e-4)
+
+    def test_fp8_weight_only_float_lhs(self):
+        a = _rand((12, 32), 6)
+        qt = quant.quantize_weight(_rand((32, 16), 7), fmt="fp8")
+        got = fp8_gemm(a, qt.q, qt.scale.reshape(-1), block=(8, 16, 16),
+                       interpret=True)
+        want = a @ quant.dequantize(qt)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   rtol=1e-4, atol=1e-4)
+
+    @given(m=st.integers(1, 24), k=st.integers(1, 48), n=st.integers(1, 32),
+           seed=st.integers(0, 100))
+    @settings(max_examples=12, deadline=None)
+    def test_int4_gemm_fuzz(self, m, k, n, seed):
+        a = _rand((m, k), seed, scale=2.0)
+        qt = quant.quantize_weight(_rand((k, n), seed + 1, scale=3.0),
+                                   fmt="int4")
+        got = int4_gemm(a, qt.q, qt.scale.reshape(-1), k_size=k,
+                        block=(16, 16, 16), interpret=True)
+        want = a @ quant.dequantize(qt)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   **_int4_tol(qt, k))
+
+    @given(m=st.integers(1, 24), k=st.integers(1, 40), n=st.integers(1, 32),
+           seed=st.integers(0, 100))
+    @settings(max_examples=12, deadline=None)
+    def test_fp8_gemm_fuzz(self, m, k, n, seed):
+        a = _rand((m, k), seed, scale=2.0)
+        qt = quant.quantize_weight(_rand((k, n), seed + 1, scale=3.0),
+                                   fmt="fp8")
+        af8 = jnp.clip(a, -quant.FP8_MAX, quant.FP8_MAX).astype(
+            quant.FP8_DTYPE)
+        got = fp8_gemm(af8, qt.q, qt.scale.reshape(-1), block=(16, 16, 16),
+                       interpret=True)
+        want = af8.astype(jnp.float32) @ quant.dequantize(qt)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   rtol=1e-4, atol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# the scan invariant
+# ---------------------------------------------------------------------------
+
+
+class TestScanInvariant:
+    @pytest.mark.parametrize("fmt", ["int8", "int4"])
+    def test_scan_slices_dequantize_bit_exact(self, fmt):
+        """lax.scan over a stacked QuantizedTensor: every sliced layer must
+        dequantize to EXACTLY the rows the unstacked dequant produces."""
+        L, K, N = 3, 33, 24                       # odd K exercises int4 pad
+        w = _rand((L, K, N), 0, scale=2.0)
+        stacked = quant.quantize_weight(w, reduce_axes=(-2,), fmt=fmt)
+        whole = quant.dequantize(stacked)         # (L, K, N)
+
+        def body(carry, qt):
+            return carry, quant.dequantize(qt)
+
+        _, sliced = jax.lax.scan(body, 0, stacked)
+        assert sliced.shape == (L, K, N)
+        np.testing.assert_array_equal(np.asarray(sliced), np.asarray(whole))
+
+    @pytest.mark.parametrize("fmt", ["int8", "int4"])
+    def test_scan_slice_matches_unstacked_quantization(self, fmt):
+        """Stacked quantization with reduce_axes=(-2,) == quantizing each
+        layer alone, through the scan slice."""
+        L, K, N = 4, 16, 8
+        w = _rand((L, K, N), 1, scale=3.0)
+        stacked = quant.quantize_weight(w, reduce_axes=(-2,), fmt=fmt)
+
+        def body(carry, qt):
+            return carry, quant.dequantize(qt)
+
+        _, sliced = jax.lax.scan(body, 0, stacked)
+        for l in range(L):
+            single = quant.dequantize(quant.quantize_weight(w[l], fmt=fmt))
+            np.testing.assert_array_equal(np.asarray(sliced[l]),
+                                          np.asarray(single))
+
+    def test_scan_slices_per_layer_act_scale(self):
+        """A stacked (L, 1, 1) act_scale must arrive in the scan body as the
+        layer's own (1, 1) scalar -- the calibrated-serving invariant."""
+        L, K, N = 3, 16, 8
+        stacked = quant.quantize_weight(_rand((L, K, N), 2),
+                                        reduce_axes=(-2,))
+        scales = jnp.asarray([0.25, 0.5, 1.0], jnp.float32).reshape(L, 1, 1)
+        stacked = dataclasses.replace(stacked, act_scale=scales)
+
+        def body(carry, qt):
+            assert qt.act_scale.shape == (1, 1)
+            return carry, qt.act_scale.reshape(())
+
+        _, got = jax.lax.scan(body, 0, stacked)
+        np.testing.assert_array_equal(np.asarray(got),
+                                      np.asarray(scales.reshape(-1)))
+
+    def test_scan_slice_helper_matches_scan(self):
+        """quant.slice_leading (the calibration driver's slice) == what
+        lax.scan hands the body."""
+        L, K, N = 3, 33, 8
+        stacked = quant.quantize_weight(_rand((L, K, N), 3),
+                                        reduce_axes=(-2,), fmt="int4")
+        for l in range(L):
+            s = quant.slice_leading(stacked, l)
+            assert s.fmt == "int4" and s.shape == (K, N)
+            np.testing.assert_array_equal(np.asarray(s.q),
+                                          np.asarray(stacked.q[l]))
+            np.testing.assert_array_equal(
+                np.asarray(quant.dequantize(s)),
+                np.asarray(quant.dequantize(stacked)[l]))
+
+
+# ---------------------------------------------------------------------------
+# dispatch eligibility predicate + routing introspection
+# ---------------------------------------------------------------------------
+
+
+_PALLAS_INT8 = axon.ExecutionPolicy(backend="pallas", precision="int8")
+
+
+def _with_act_scale(qt, x):
+    amax = float(jnp.abs(x).max())
+    return dataclasses.replace(
+        qt, act_scale=jnp.full((1,) * qt.ndim, max(amax, 1e-12) / 127.0,
+                               jnp.float32))
+
+
+class TestQuantRoute:
+    def test_int8_eligible(self):
+        a = _rand((16, 32), 0)
+        qt = quant.quantize_weight(_rand((32, 24), 1))
+        route, _ = axon.quant_route("mk,kn->mn", a, qt, _PALLAS_INT8)
+        assert route == "quant_gemm"
+
+    def test_int4_and_fp8_routes(self):
+        a = _rand((16, 32), 2)
+        q4 = quant.quantize_weight(_rand((32, 24), 3), fmt="int4")
+        q8f = quant.quantize_weight(_rand((32, 24), 4), fmt="fp8")
+        assert axon.quant_route("mk,kn->mn", a, q4, _PALLAS_INT8)[0] \
+            == "int4_gemm"
+        assert axon.quant_route("mk,kn->mn", a, q8f, _PALLAS_INT8)[0] \
+            == "fp8_gemm"
+
+    def test_float_policy_falls_back(self):
+        a = _rand((16, 32), 5)
+        qt = quant.quantize_weight(_rand((32, 24), 6))
+        route, reason = axon.quant_route(
+            "mk,kn->mn", a, qt, axon.ExecutionPolicy(backend="pallas"))
+        assert route == "dequant" and "float" in reason
+
+    def test_xla_backend_falls_back(self):
+        a = _rand((16, 32), 7)
+        qt = quant.quantize_weight(_rand((32, 24), 8))
+        route, reason = axon.quant_route(
+            "mk,kn->mn", a, qt,
+            axon.ExecutionPolicy(backend="xla", precision="int8"))
+        assert route == "dequant" and "xla" in reason
+
+    def test_shared_batch_falls_back(self):
+        a = _rand((3, 4, 16), 9)
+        qt = quant.quantize_weight(_rand((3, 16, 8), 10), reduce_axes=(-2,))
+        route, reason = axon.quant_route("ecd,edf->ecf", a, qt, _PALLAS_INT8)
+        assert route == "dequant" and "B > 1" in reason
+
+    def test_scale_on_contraction_axis_falls_back(self):
+        qt = quant.quantize_weight(_rand((16, 12), 11), axis=0)
+        a = _rand((16, 16), 12)
+        route, reason = axon.quant_route("mk,kn->mn", a, qt, _PALLAS_INT8)
+        assert route == "dequant" and "n-group" in reason
+
+    def test_int4_non_identity_layout_falls_back(self):
+        """Transposed contraction: the packed payload has no kernel layout
+        (a hand-built (N, K)-layout int4 tensor must never reach the
+        kernel, even with a clean per-channel scale on the n axis)."""
+        a = _rand((16, 32), 13)
+        N, K = 24, 32
+        rng = np.random.default_rng(14)
+        vals = jnp.asarray(rng.integers(-7, 8, (N, K)), jnp.int8)
+        q4 = quant.QuantizedTensor(
+            q=quant.pack_int4(vals, axis=-2),
+            scale=jnp.abs(_rand((N, 1), 14)) + 0.1,
+            axis=-2, bits=4, pack_size=N)
+        route, reason = axon.quant_route("mk,nk->mn", a, q4, _PALLAS_INT8)
+        assert route == "dequant" and "int4" in reason
+        # ... while int8 takes the transposed layout fine
+        q8 = quant.quantize_weight(_rand((24, 32), 15), axis=0)
+        assert axon.quant_route("mk,nk->mn", a, q8, _PALLAS_INT8)[0] \
+            == "quant_gemm"
+
+    def test_integer_activation_falls_back(self):
+        a = jnp.ones((8, 16), jnp.int32)
+        qt = quant.quantize_weight(_rand((16, 8), 16))
+        route, reason = axon.quant_route("mk,kn->mn", a, qt, _PALLAS_INT8)
+        assert route == "dequant" and "non-float" in reason
+
+    # -- routing asserted through the registry, not output values ----------
+
+    def test_eligible_dispatch_invokes_kernel(self):
+        a = _rand((16, 32), 17)
+        qt = _with_act_scale(quant.quantize_weight(_rand((32, 24), 18)), a)
+        with _spy("quant_gemm") as calls:
+            with axon.policy(_PALLAS_INT8):
+                axon.einsum("mk,kn->mn", a, qt)
+        assert len(calls["quant_gemm"]) == 1
+        dtype, shape = calls["quant_gemm"][0]
+        assert dtype == "int8" and shape == (16, 32)   # activation quantized
+
+    def test_weight_only_dispatch_keeps_float_lhs(self):
+        a = _rand((16, 32), 19)
+        qt = quant.quantize_weight(_rand((32, 24), 20))
+        with _spy("quant_gemm") as calls:
+            with axon.policy(_PALLAS_INT8):
+                axon.einsum("mk,kn->mn", a, qt)
+        dtype, _ = calls["quant_gemm"][0]
+        assert dtype == "float32"
+
+    def test_ineligible_dispatch_never_touches_quant_kernels(self):
+        a = _rand((3, 4, 16), 21)
+        qt = quant.quantize_weight(_rand((3, 16, 8), 22), reduce_axes=(-2,))
+        with _spy("quant_gemm", "int4_gemm", "fp8_gemm") as calls:
+            with axon.policy(_PALLAS_INT8):
+                got = axon.einsum("ecd,edf->ecf", a, qt)
+        assert all(not v for v in calls.values())
+        want = jnp.einsum("ecd,edf->ecf", a, quant.dequantize(qt))
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   rtol=1e-4, atol=1e-5)
+
+    def test_int4_dispatch_invokes_int4_kernel(self):
+        a = _rand((16, 32), 23)
+        qt = quant.quantize_weight(_rand((32, 24), 24), fmt="int4")
+        with _spy("int4_gemm", "quant_gemm") as calls:
+            with axon.policy(_PALLAS_INT8):
+                got = axon.einsum("mk,kn->mn", a, qt)
+        assert len(calls["int4_gemm"]) == 1 and not calls["quant_gemm"]
+        np.testing.assert_allclose(
+            np.asarray(got), np.asarray(a @ quant.dequantize(qt)),
+            **_int4_tol(qt, 32))
+
+    def test_int8_gemm_blocks_for_one_byte_traffic(self):
+        """The kernel path asks the mapper for 1-byte blocking: after one
+        int8 dispatch the (shape, bytes=1) decision is cached while the
+        float-path (bytes=4) key is not."""
+        from repro.core.dataflows import GemmShape
+        from repro.core.mapper import select_tpu_blocking
+        a = _rand((16, 64), 25)
+        qt = _with_act_scale(quant.quantize_weight(_rand((64, 48), 26)), a)
+        mapper_cache_clear()
+        with axon.policy(_PALLAS_INT8):
+            axon.einsum("mk,kn->mn", a, qt)
+        n = sweep_calls()
+        assert n >= 1
+        select_tpu_blocking(GemmShape(16, 64, 48), bytes_per_elem=1)
+        assert sweep_calls() == n            # hit: the int8 path cached it
+        select_tpu_blocking(GemmShape(16, 64, 48), bytes_per_elem=4)
+        assert sweep_calls() == n + 1        # the float key was never swept
+
+    def test_tracer_guarded_calibration(self):
+        """Under jit the calibration tap must observe nothing (tracers carry
+        no values) while the dispatch still routes -- introspected, not
+        inferred from outputs."""
+        a = _rand((4, 16), 27)
+        qt = quant.quantize_weight(_rand((16, 8), 28))
+        with quant.calibration() as calib:
+            jax.jit(lambda x, w: axon.einsum(
+                "mk,kn->mn", x, w, policy=_PALLAS_INT8))(a, qt)
+            assert calib.n_sites == 0
+            axon.einsum("mk,kn->mn", a, qt, policy=_PALLAS_INT8)
+            assert calib.n_sites == 1
+
+
+# ---------------------------------------------------------------------------
+# int8 attention
+# ---------------------------------------------------------------------------
+
+
+class TestInt8Attention:
+    @pytest.mark.parametrize("b,h,kvh,sq,skv,dh", [
+        (1, 4, 4, 1, 64, 16),      # pure decode, MHA
+        (2, 8, 2, 4, 48, 16),      # chunked decode, GQA rep=4
+        (1, 4, 1, 16, 33, 16),     # prefill chunk, MQA, ragged kv blocks
+    ])
+    def test_matches_float_flash_on_decode_shapes(self, b, h, kvh, sq, skv,
+                                                  dh):
+        ks = jax.random.split(jax.random.fold_in(KEY, sq * skv), 3)
+        q = jax.random.normal(ks[0], (b, h, sq, dh), jnp.float32)
+        k = jax.random.normal(ks[1], (b, kvh, skv, dh), jnp.float32)
+        v = jax.random.normal(ks[2], (b, kvh, skv, dh), jnp.float32)
+        # decode geometry: queries sit at the END of the kv stream
+        qpos = jnp.arange(skv - sq, skv)
+        mask = jnp.broadcast_to(
+            (jnp.arange(skv)[None, :] <= qpos[:, None])[None], (b, sq, skv))
+        got = int8_flash_attention_fwd(q, k, v, mask=mask, block_q=16,
+                                       block_kv=16, interpret=True)
+        want = flash_attention_fwd(
+            jnp.pad(q, ((0, 0), (0, 0), (skv - sq, 0), (0, 0))), k, v,
+            causal=True, block_q=16, block_kv=16,
+            interpret=True)[:, :, skv - sq:]
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   rtol=0.05, atol=0.05)
+
+    def test_causal_default_matches_explicit_mask(self):
+        ks = jax.random.split(KEY, 3)
+        q = jax.random.normal(ks[0], (1, 2, 8, 16), jnp.float32)
+        k = jax.random.normal(ks[1], (1, 2, 8, 16), jnp.float32)
+        v = jax.random.normal(ks[2], (1, 2, 8, 16), jnp.float32)
+        mask = jnp.broadcast_to(jnp.tril(jnp.ones((8, 8), bool))[None],
+                                (1, 8, 8))
+        a = int8_flash_attention_fwd(q, k, v, causal=True, block_q=8,
+                                     block_kv=8, interpret=True)
+        b = int8_flash_attention_fwd(q, k, v, mask=mask, block_q=8,
+                                     block_kv=8, interpret=True)
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+    def test_cached_attention_int8_route(self):
+        """layers.cached_attention under attn_int8 stays close to the float
+        path on a decode-shaped per-slot cache (ragged lengths)."""
+        from repro.models.layers import cached_attention
+        B, T, H, KvH, S, dh = 2, 1, 4, 2, 32, 16
+        ks = jax.random.split(jax.random.fold_in(KEY, 7), 5)
+        q = jax.random.normal(ks[0], (B, T, H, dh), jnp.float32)
+        k_old = jax.random.normal(ks[1], (B, S, KvH, dh), jnp.float32)
+        v_old = jax.random.normal(ks[2], (B, S, KvH, dh), jnp.float32)
+        k_new = jax.random.normal(ks[3], (B, T, KvH, dh), jnp.float32)
+        v_new = jax.random.normal(ks[4], (B, T, KvH, dh), jnp.float32)
+        start = jnp.asarray([20, 5], jnp.int32)      # ragged per-slot lengths
+        q_pos = start[:, None]
+        k_valid = jnp.ones((B, T), bool)
+        kwargs = dict(q_pos=q_pos, k_valid=k_valid, start=start)
+        ref = cached_attention(q, k_old, v_old, k_new, v_new, **kwargs)
+        with axon.policy(backend="pallas", attn_int8=True):
+            got = cached_attention(q, k_old, v_old, k_new, v_new, **kwargs)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(ref),
+                                   rtol=0.06, atol=0.06)
+
+    def test_stale_cache_entries_do_not_pollute_scales(self):
+        """reset_slots leaves old KV contents in place beyond each slot's
+        ``start``; the int8 path must exclude them from the per-head abs-max
+        or a previous request's outlier coarsens every live token."""
+        from repro.models.layers import cached_attention
+        B, T, H, KvH, S, dh = 2, 1, 4, 2, 32, 16
+        ks = jax.random.split(jax.random.fold_in(KEY, 11), 5)
+        q = jax.random.normal(ks[0], (B, T, H, dh), jnp.float32)
+        k_old = jax.random.normal(ks[1], (B, S, KvH, dh), jnp.float32)
+        v_old = jax.random.normal(ks[2], (B, S, KvH, dh), jnp.float32)
+        k_new = jax.random.normal(ks[3], (B, T, KvH, dh), jnp.float32)
+        v_new = jax.random.normal(ks[4], (B, T, KvH, dh), jnp.float32)
+        start = jnp.asarray([12, 6], jnp.int32)
+        # stale garbage from a previous occupant, 100x the live magnitudes
+        stale = jnp.arange(S)[None, :, None, None] >= start[:, None, None,
+                                                           None]
+        k_old = jnp.where(stale, 100.0, k_old)
+        v_old = jnp.where(stale, -100.0, v_old)
+        kwargs = dict(q_pos=start[:, None], k_valid=jnp.ones((B, T), bool),
+                      start=start)
+        ref = cached_attention(q, k_old, v_old, k_new, v_new, **kwargs)
+        with axon.policy(backend="pallas", attn_int8=True):
+            got = cached_attention(q, k_old, v_old, k_new, v_new, **kwargs)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(ref),
+                                   rtol=0.06, atol=0.06)
+
+    def test_xla_backend_ignores_attn_int8(self):
+        from repro.models.layers import cached_attention
+        B, T, H, S, dh = 1, 1, 2, 8, 16
+        ks = jax.random.split(KEY, 5)
+        args = [jax.random.normal(ks[0], (B, T, H, dh)),
+                jax.random.normal(ks[1], (B, S, H, dh)),
+                jax.random.normal(ks[2], (B, S, H, dh)),
+                jax.random.normal(ks[3], (B, T, H, dh)),
+                jax.random.normal(ks[4], (B, T, H, dh))]
+        kwargs = dict(q_pos=jnp.asarray([[4]]), k_valid=jnp.ones((1, 1), bool),
+                      start=jnp.asarray([4]))
+        ref = cached_attention(*args, **kwargs)
+        with axon.policy(backend="xla", attn_int8=True):
+            got = cached_attention(*args, **kwargs)
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(ref))
+
+
+# ---------------------------------------------------------------------------
+# golden values: the modeled precision figures cannot move silently
+# ---------------------------------------------------------------------------
+
+
+class TestGoldenPrecision:
+    def test_operand_bytes_table(self):
+        assert operand_bytes("bf16") == 2
+        assert operand_bytes("int8") == 1
+        assert operand_bytes("fp8") == 1
+        assert operand_bytes("int4") == 0.5
+        with pytest.raises(ValueError):
+            operand_bytes("int2")
+
+    def test_reduced_resnet50_precision_pinned(self):
+        """Golden pins for paper_report()["precision"] on reduced ResNet50.
+        If an energy-model refactor moves these, it moved the paper
+        figures -- update deliberately or fix the regression."""
+        rep = paper_report(get_vision_config("resnet50", reduced=True))
+        per = rep["precision"]
+        assert set(per) >= {"bf16", "int8", "fp8", "int4", "int8_vs_bf16",
+                            "fp8_vs_bf16", "int4_vs_bf16"}
+        np.testing.assert_allclose(per["bf16"]["operand_bytes"], 48160.0)
+        np.testing.assert_allclose(per["int8"]["operand_bytes"], 24080.0)
+        np.testing.assert_allclose(per["fp8"]["operand_bytes"], 24080.0)
+        np.testing.assert_allclose(per["int4"]["operand_bytes"], 12040.0)
+        np.testing.assert_allclose(per["bf16"]["dram_energy_j"], 5.7792e-06,
+                                   rtol=1e-9)
+        np.testing.assert_allclose(per["int4"]["dram_energy_j"], 1.4448e-06,
+                                   rtol=1e-9)
+        for prec, traffic, energy in [("int8", 0.5, 2.0), ("fp8", 0.5, 2.0),
+                                      ("int4", 0.25, 4.0)]:
+            ratios = per[f"{prec}_vs_bf16"]
+            np.testing.assert_allclose(ratios["traffic_ratio"], traffic)
+            np.testing.assert_allclose(ratios["energy_ratio"], energy)
+            # the reduced model is compute-bound on the paper's 16x16 array:
+            # narrower operands cut energy, not the roofline runtime
+            np.testing.assert_allclose(ratios["throughput_speedup"], 1.0)
+        # runtime invariant under precision in the compute-bound regime
+        np.testing.assert_allclose(per["bf16"]["runtime_s"],
+                                   per["int4"]["runtime_s"])
+
+
+# ---------------------------------------------------------------------------
+# acceptance: calibrated-activation int8 LM serving through lax.scan
+# ---------------------------------------------------------------------------
+
+
+@pytest.fixture(scope="module")
+def lm_ptq():
+    cfg = get_config("yi-9b", reduced=True)
+    params = T.init_params(KEY, cfg)
+    rng = np.random.default_rng(0)
+    batches = [{"tokens": jnp.asarray(
+        rng.integers(2, cfg.vocab, (2, 12)), jnp.int32)} for _ in range(2)]
+    qparams = quant.quantize_lm(params, cfg, batches)
+    return cfg, params, qparams
+
+
+class TestCalibratedLMServing:
+    def test_per_layer_scales_present(self, lm_ptq):
+        _, _, qparams = lm_ptq
+        leaves = [l for l in jax.tree.leaves(
+            qparams, is_leaf=lambda x: isinstance(x, quant.QuantizedTensor))
+            if isinstance(l, quant.QuantizedTensor)]
+        assert leaves and all(l.act_scale is not None for l in leaves)
+        stacked = [l for l in leaves if l.q.ndim == 3]
+        assert stacked, "expected scan-stacked projection weights"
+        for l in stacked:
+            L = l.q.shape[0]
+            assert l.act_scale.shape == (L,) + (1,) * (l.ndim - 1)
+            assert bool(jnp.all(l.act_scale > 0))
+
+    def test_chunk_step_runs_full_int8_inside_scan(self, lm_ptq):
+        """The scan-staged decode step must quantize activations (int8 lhs
+        reaches quant_gemm) -- per-layer scales are used, not just stored."""
+        cfg, _, qparams = lm_ptq
+        caches = T.init_caches(cfg, batch=2, max_len=16, dtype=jnp.float32)
+        toks = jnp.asarray([[5, 6, 7, 8], [9, 3, 2, 4]], jnp.int32)
+        valid = jnp.ones((2, 4), bool)
+        step = make_chunk_step(cfg, policy=_PALLAS_INT8)
+        with _spy("quant_gemm") as calls:
+            # trace (not jit-cached) so registry impls run on tracers
+            jax.make_jaxpr(step)(qparams, caches, toks, valid,
+                                 jax.random.PRNGKey(0))
+        assert any(dtype == "int8" for dtype, _ in calls["quant_gemm"])
+
+    def test_logits_close_to_float(self, lm_ptq):
+        cfg, params, qparams = lm_ptq
+        batch = {"tokens": jnp.asarray([[5, 6, 7, 8, 9, 3]], jnp.int32)}
+        hid_f, _ = T.forward(params, batch, cfg)
+        logits_f = T._head_logits(params, hid_f, cfg)
+        with axon.policy(_PALLAS_INT8):
+            hid_q, _ = jax.jit(
+                lambda p, b: T.forward(p, b, cfg))(qparams, batch)
+            logits_q = T._head_logits(qparams, hid_q, cfg)
+        rel = float(jnp.linalg.norm(logits_q - logits_f)
+                    / jnp.linalg.norm(logits_f))
+        assert rel < 0.2, rel
+
+    def test_serve_engine_end_to_end(self, lm_ptq):
+        cfg, params, qparams = lm_ptq
+        reqs = [Request(prompt=[5, 6, 7], max_new_tokens=4, eos_id=1),
+                Request(prompt=[9, 3], max_new_tokens=3, eos_id=1)]
+        eng_f = ServeEngine(params, cfg, batch_slots=2, max_len=32)
+        out_f = eng_f.generate(reqs)
+        eng_q = ServeEngine(qparams, cfg, batch_slots=2, max_len=32,
+                            policy=axon.ExecutionPolicy(backend="pallas"),
+                            quantized=True)
+        assert eng_q._step is not None
+        out_q = eng_q.generate(reqs)
+        assert [len(o) for o in out_q] == [len(o) for o in out_f]
+        assert eng_q.last_stats["generated_tokens"] == sum(
+            len(o) for o in out_q)
+
+    def test_serve_engine_int4_and_fp8_modes(self):
+        cfg = get_config("yi-9b", reduced=True)
+        params = T.init_params(KEY, cfg)
+        reqs = [Request(prompt=[5, 6], max_new_tokens=2, eos_id=1)]
+        for mode in ("int4", "fp8"):
+            eng = ServeEngine(params, cfg, batch_slots=1, max_len=16,
+                              quantized=mode)
+            assert quant.is_quantized(eng.params)
+            fmts = {l.fmt for l in jax.tree.leaves(
+                eng.params,
+                is_leaf=lambda x: isinstance(x, quant.QuantizedTensor))
+                if isinstance(l, quant.QuantizedTensor)}
+            assert fmts == {mode}
+            out = eng.generate(reqs)
+            assert len(out[0]) == 2
+
+    def test_pre_quantized_fp8_params_serve_at_fp8(self):
+        """Precision follows the weights' storage format: pre-quantized fp8
+        params (no quantized= argument) must flip the policy to "fp8",
+        identical to constructing with quantized="fp8"."""
+        cfg = get_config("yi-9b", reduced=True)
+        params = T.init_params(KEY, cfg)
+        qp = quant.quantize_lm_weights(params, fmt="fp8")
+        eng_pre = ServeEngine(qp, cfg, batch_slots=1, max_len=16)
+        eng_arg = ServeEngine(params, cfg, batch_slots=1, max_len=16,
+                              quantized="fp8")
+        assert eng_pre._step is not None and eng_arg._step is not None
+        # both constructions resolve the same serving precision
+        for eng in (eng_pre, eng_arg):
+            out = eng.generate(
+                [Request(prompt=[5, 6], max_new_tokens=2, eos_id=1)])
+            assert len(out[0]) == 2
+
+    def test_calibration_layer_slices_are_memoized(self):
+        """Repeated batches must reuse one slice per (weight, layer) --
+        calibration memory stays O(params), not O(params x batches)."""
+        stacked = quant.quantize_weight(_rand((3, 16, 8), 40),
+                                        reduce_axes=(-2,))
+        with quant.calibration() as calib:
+            first = [calib.layer_slice(stacked, l) for l in range(3)]
+            second = [calib.layer_slice(stacked, l) for l in range(3)]
+        assert all(a is b for a, b in zip(first, second))
+        assert len(calib._alias) == 3
+
+    def test_serve_engine_attn_int8_decode(self):
+        cfg = get_config("yi-9b", reduced=True)
+        params = T.init_params(KEY, cfg)
+        reqs = [Request(prompt=[5, 6, 7], max_new_tokens=2, eos_id=1)]
+        eng = ServeEngine(params, cfg, batch_slots=1, max_len=16,
+                          policy=axon.ExecutionPolicy(backend="pallas"),
+                          attn_int8=True)
+        out = eng.generate(reqs)
+        assert len(out[0]) == 2
+        assert all(0 <= t < cfg.vocab for t in out[0])
