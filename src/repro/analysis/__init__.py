@@ -1,0 +1,69 @@
+"""``repro.analysis``: static contract analysis gating CI.
+
+Four passes, one CLI (``python -m repro.analysis``):
+
+  * ``contracts``      -- abstract-eval every registered kernel kind over a
+                          representative shape/dtype grid and verify VMEM
+                          budgets, grid/index-map coverage, revisit safety,
+                          divisibility, and accumulation-dtype rules
+                          against the registry's declared contracts (AXC*).
+  * ``retrace``        -- prove the serve/vision engines' ONE-fixed-shape
+                          step promise by enumerating scheduler states
+                          against the declared traced signatures (RTR*).
+  * ``qt_invariants``  -- verify QuantizedTensor layout rules (negative
+                          axes, keepdims scales, scan sliceability) on
+                          representative constructions and call sites
+                          (QTI*).
+  * ``lint``           -- repo-specific AST rules (deprecated imports,
+                          tracer branching, policy discipline) (LNT*).
+
+Everything traces abstractly -- no kernel executes -- so the whole suite
+runs in seconds and the CI gate exits nonzero on any ERROR finding.
+"""
+from __future__ import annotations
+
+import time
+from typing import Callable
+
+from repro.analysis.findings import (Finding, has_errors, render_json,
+                                     render_text)
+
+PASSES: tuple[str, ...] = ("contracts", "retrace", "qt_invariants", "lint")
+
+
+def _pass_runner(name: str) -> Callable[[], list[Finding]]:
+    # imported lazily so `--passes lint` does not pay for kernel tracing
+    if name == "contracts":
+        from repro.analysis import contracts
+        return contracts.run
+    if name == "retrace":
+        from repro.analysis import retrace
+        return retrace.run
+    if name == "qt_invariants":
+        from repro.analysis import qt_invariants
+        return qt_invariants.run
+    if name == "lint":
+        from repro.analysis import lint
+        return lint.run
+    raise ValueError(f"unknown pass {name!r}; have {PASSES}")
+
+
+def run_all(passes: tuple[str, ...] | list[str] = PASSES
+            ) -> tuple[list[Finding], dict[str, int], dict[str, float]]:
+    """Run the requested passes; returns (findings, per-pass finding
+    counts, per-pass wall seconds)."""
+    findings: list[Finding] = []
+    counts: dict[str, int] = {}
+    elapsed: dict[str, float] = {}
+    for name in passes:
+        runner = _pass_runner(name)
+        t0 = time.perf_counter()
+        fs = runner()
+        elapsed[name] = time.perf_counter() - t0
+        counts[name] = len(fs)
+        findings.extend(fs)
+    return findings, counts, elapsed
+
+
+__all__ = ["Finding", "PASSES", "has_errors", "render_json", "render_text",
+           "run_all"]

@@ -1,0 +1,91 @@
+"""CLI for the static analyzer: ``python -m repro.analysis``.
+
+Exits 0 when no ERROR-severity finding is present, 1 otherwise -- the CI
+``analysis`` job runs this as a blocking gate before the test shards.
+
+``--cache PATH`` keys the (deterministic) full-suite result on a hash of
+every ``src/repro`` source file plus the jax version: a warm CI cache skips
+the kernel abstract-eval entirely and replays the stored findings.
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import hashlib
+import json
+import sys
+from pathlib import Path
+
+from repro.analysis import PASSES, run_all
+from repro.analysis.findings import (Finding, has_errors, render_json,
+                                     render_text)
+
+
+def _source_hash() -> str:
+    import jax
+    root = Path(__file__).resolve().parents[1]        # src/repro
+    h = hashlib.sha256()
+    h.update(jax.__version__.encode())
+    for py in sorted(root.rglob("*.py")):
+        h.update(str(py.relative_to(root)).encode())
+        h.update(py.read_bytes())
+    return h.hexdigest()
+
+
+def _cache_load(path: Path, key: str, passes: tuple[str, ...]):
+    try:
+        doc = json.loads(path.read_text())
+    except (OSError, ValueError):
+        return None
+    if doc.get("key") != key or doc.get("passes") != list(passes):
+        return None
+    findings = [Finding(**f) for f in doc["findings"]]
+    return findings, doc["counts"], doc["elapsed"]
+
+
+def _cache_store(path: Path, key: str, passes: tuple[str, ...],
+                 findings: list[Finding], counts, elapsed) -> None:
+    doc = {"key": key, "passes": list(passes),
+           "findings": [dataclasses.asdict(f) for f in findings],
+           "counts": counts, "elapsed": elapsed}
+    path.parent.mkdir(parents=True, exist_ok=True)
+    path.write_text(json.dumps(doc))
+
+
+def main(argv: list[str] | None = None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.analysis",
+        description="static kernel-contract / retrace-hazard analyzer")
+    ap.add_argument("--format", choices=("text", "json"), default="text")
+    ap.add_argument("--out", type=Path, default=None,
+                    help="also write the findings (in --format) to a file")
+    ap.add_argument("--passes", nargs="+", choices=PASSES,
+                    default=list(PASSES))
+    ap.add_argument("--cache", type=Path, default=None,
+                    help="replay/store results keyed on a source hash")
+    args = ap.parse_args(argv)
+
+    passes = tuple(args.passes)
+    cached = None
+    key = None
+    if args.cache is not None:
+        key = _source_hash()
+        cached = _cache_load(args.cache, key, passes)
+    if cached is not None:
+        findings, counts, elapsed = cached
+    else:
+        findings, counts, elapsed = run_all(passes)
+        if args.cache is not None:
+            _cache_store(args.cache, key, passes, findings, counts, elapsed)
+
+    render = render_json if args.format == "json" else render_text
+    text = render(findings, counts, elapsed)
+    print(text)
+    if args.out is not None:
+        args.out.parent.mkdir(parents=True, exist_ok=True)
+        args.out.write_text(text + "\n")
+    return 1 if has_errors(findings) else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

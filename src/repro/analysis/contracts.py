@@ -1,0 +1,482 @@
+"""Kernel contract checker: abstract-eval every registered kind, verify the
+pallas_call it traces to against the declared :class:`~repro.axon.registry.
+KernelMeta` contract and the Pallas/TPU structural rules.
+
+For every kind in ``axon.registry.kinds()`` a driver grid of representative
+shapes/dtypes traces the registered implementation with ``jax.make_jaxpr``
+on ``ShapeDtypeStruct``s -- nothing executes -- and each ``pallas_call``
+equation found in the jaxpr is checked:
+
+  AXC000  kind has no driver coverage (a new registration must add one)
+  AXC001  per-invocation VMEM working set exceeds the tile budget
+  AXC002  grid x index-map coverage leaves an output tile unwritten
+  AXC003  an output index map emits an out-of-bounds tile
+  AXC004  output-revisit hazard: a grid dim the output's index map ignores
+          is not innermost, so revisits are non-consecutive and partial
+          sums are lost on real TPU (interpret mode hides this)
+  AXC005  a dot_general accumulates in a dtype the physics or the declared
+          contract forbids (int8 x int8 -> int32, fp8 -> f32, float -> f32)
+  AXC006  an output array dim is not divisible by its block dim (the repo's
+          kernels pad explicitly; a ragged tail here means masked writes
+          the kernels do not implement)
+  AXC007  a pallas-backed kind ignores ``policy.accum_dtype`` (tracing with
+          an unimplementable accumulation dtype must raise)
+
+Index maps are evaluated concretely over the whole grid product (grids in
+the driver set are small by construction), so coverage/OOB/revisit findings
+are exact, not heuristic.
+"""
+from __future__ import annotations
+
+import dataclasses
+import itertools
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.analysis.findings import Finding, error, warning
+from repro.axon import registry
+from repro.axon.policy import ExecutionPolicy
+from repro.core.dataflows import Dataflow
+from repro.core.hw import VMEM_TILE_BUDGET
+
+PASS = "contracts"
+# full-grid index-map evaluation cap; drivers stay far below this
+MAX_GRID_POINTS = 20_000
+
+
+# ---------------------------------------------------------------------------
+# jaxpr walking
+# ---------------------------------------------------------------------------
+
+
+def _subjaxprs(eqn) -> list:
+    out = []
+    for v in eqn.params.values():
+        if isinstance(v, jax.core.ClosedJaxpr):
+            out.append(v.jaxpr)
+        elif isinstance(v, jax.core.Jaxpr):
+            out.append(v)
+        elif isinstance(v, (tuple, list)):
+            for item in v:
+                if isinstance(item, jax.core.ClosedJaxpr):
+                    out.append(item.jaxpr)
+                elif isinstance(item, jax.core.Jaxpr):
+                    out.append(item)
+    return out
+
+
+def iter_eqns(jaxpr):
+    """All equations in ``jaxpr``, recursing into call/scan/custom-vjp
+    sub-jaxprs (pallas kernel bodies are NOT descended into here -- the
+    checks read them explicitly via ``eqn.params["jaxpr"]``)."""
+    for eqn in jaxpr.eqns:
+        yield eqn
+        if eqn.primitive.name == "pallas_call":
+            continue
+        for sub in _subjaxprs(eqn):
+            yield from iter_eqns(sub)
+
+
+def find_pallas_calls(jaxpr) -> list:
+    return [e for e in iter_eqns(jaxpr) if e.primitive.name == "pallas_call"]
+
+
+# ---------------------------------------------------------------------------
+# pallas_call introspection helpers
+# ---------------------------------------------------------------------------
+
+
+def _block_shape(bm) -> tuple[int, ...]:
+    return tuple(1 if d is None else int(d) for d in bm.block_shape)
+
+
+def _eval_index_map(bm, idx: tuple[int, ...]) -> tuple[int, ...]:
+    cj = bm.index_map_jaxpr
+    out = jax.core.eval_jaxpr(cj.jaxpr, cj.consts, *idx)
+    return tuple(int(v) for v in out)
+
+
+def _grid_points(grid: tuple[int, ...]):
+    return itertools.product(*(range(int(g)) for g in grid))
+
+
+def _vmem_bytes(eqn) -> int:
+    """Working-set estimate: all operand/output blocks double-buffered
+    (Pallas pipelines block DMAs) plus scratch, in bytes."""
+    gm = eqn.params["grid_mapping"]
+    total = 0
+    for bm in gm.block_mappings:
+        shape = _block_shape(bm)
+        itemsize = jnp.dtype(bm.array_shape_dtype.dtype).itemsize
+        n = 1
+        for d in shape:
+            n *= d
+        total += 2 * n * itemsize
+    kernel_jaxpr = eqn.params["jaxpr"]
+    n_blocked = len(gm.block_mappings)
+    for var in kernel_jaxpr.invars[n_blocked:]:          # scratch operands
+        aval = var.aval
+        n = 1
+        for d in aval.shape:
+            n *= d
+        total += n * jnp.dtype(aval.dtype).itemsize
+    return total
+
+
+def _accum_findings(eqn, kind: str, subject: str) -> list[Finding]:
+    """AXC005 on every dot_general inside the kernel body."""
+    out: list[Finding] = []
+    meta = registry.meta(kind)
+    allowed = meta.accum_dtypes
+    kernel_jaxpr = eqn.params["jaxpr"]
+    for keqn in iter_eqns(kernel_jaxpr):
+        if keqn.primitive.name != "dot_general":
+            continue
+        lhs_dt = jnp.dtype(keqn.invars[0].aval.dtype)
+        rhs_dt = jnp.dtype(keqn.invars[1].aval.dtype)
+        acc_dt = jnp.dtype(keqn.outvars[0].aval.dtype)
+        both_int = (jnp.issubdtype(lhs_dt, jnp.integer)
+                    and jnp.issubdtype(rhs_dt, jnp.integer))
+        any_fp8 = any(jnp.dtype(d).itemsize == 1
+                      and jnp.issubdtype(d, jnp.floating)
+                      for d in (lhs_dt, rhs_dt))
+        if both_int and acc_dt != jnp.int32:
+            out.append(error(
+                "AXC005", PASS, subject,
+                f"int x int dot_general ({lhs_dt.name} x {rhs_dt.name}) "
+                f"accumulates in {acc_dt.name}; int8 paths must accumulate "
+                "in int32 (narrower overflows, float drops low bits)"))
+        elif not both_int and acc_dt != jnp.float32:
+            hint = "fp8 operands" if any_fp8 else "float operands"
+            out.append(error(
+                "AXC005", PASS, subject,
+                f"dot_general ({lhs_dt.name} x {rhs_dt.name}) accumulates "
+                f"in {acc_dt.name}; {hint} must accumulate in float32"))
+        if allowed and acc_dt.name not in allowed:
+            out.append(error(
+                "AXC005", PASS, subject,
+                f"dot_general accumulates in {acc_dt.name} but the "
+                f"registered contract for {kind!r} declares accum="
+                f"{meta.accum!r}"))
+    return out
+
+
+def check_pallas_eqn(eqn, kind: str, subject: str) -> list[Finding]:
+    """All structural checks (AXC001-AXC006) on one pallas_call equation."""
+    out: list[Finding] = []
+    gm = eqn.params["grid_mapping"]
+    grid = tuple(int(g) for g in gm.grid)
+
+    # AXC001 -- VMEM working set
+    used = _vmem_bytes(eqn)
+    if used > VMEM_TILE_BUDGET:
+        out.append(error(
+            "AXC001", PASS, subject,
+            f"VMEM working set {used / 2**20:.1f} MiB exceeds the "
+            f"{VMEM_TILE_BUDGET / 2**20:.0f} MiB tile budget "
+            f"(grid={grid})"))
+
+    n_points = 1
+    for g in grid:
+        n_points *= g
+    if n_points > MAX_GRID_POINTS:
+        out.append(warning(
+            "AXC002", PASS, subject,
+            f"grid {grid} has {n_points} points (> {MAX_GRID_POINTS}); "
+            "coverage/revisit checks skipped -- shrink the driver shapes"))
+        out.extend(_accum_findings(eqn, kind, subject))
+        return out
+
+    out_mappings = list(gm.block_mappings_output)
+    for oi, bm in enumerate(out_mappings):
+        block = _block_shape(bm)
+        ashape = tuple(bm.array_shape_dtype.shape)
+        tiles_per_dim = tuple(-(-d // b) for d, b in zip(ashape, block))
+
+        # AXC006 -- divisibility (the kernels pad; ragged outputs would
+        # need masked writes they do not implement)
+        ragged = [f"dim {i}: {d} % {b}" for i, (d, b)
+                  in enumerate(zip(ashape, block)) if d % b]
+        if ragged:
+            out.append(error(
+                "AXC006", PASS, subject,
+                f"output {oi} array shape {ashape} not divisible by block "
+                f"{block} ({'; '.join(ragged)})"))
+
+        seen: set[tuple[int, ...]] = set()
+        influences = [False] * len(grid)
+        prev_by_rest: dict[tuple, dict[int, tuple]] = {}
+        oob_reported = False
+        for point in _grid_points(grid):
+            idx = _eval_index_map(bm, point)
+            seen.add(idx)
+            if not oob_reported and any(
+                    i < 0 or i >= t for i, t in zip(idx, tiles_per_dim)):
+                out.append(error(
+                    "AXC003", PASS, subject,
+                    f"output {oi} index map sends grid point {point} to "
+                    f"tile {idx}, outside the {tiles_per_dim} tile range"))
+                oob_reported = True
+            # influence: does varying grid dim d (others fixed) move idx?
+            for d in range(len(grid)):
+                rest = (d, point[:d] + point[d + 1:])
+                prev = prev_by_rest.setdefault(rest, {})
+                for other_coord, other_idx in prev.items():
+                    if other_idx != idx:
+                        influences[d] = True
+                prev[point[d]] = idx
+                if len(prev) > 2:      # two distinct coords are enough
+                    prev.pop(next(iter(prev)))
+
+        # AXC002 -- coverage
+        want = set(itertools.product(*(range(t) for t in tiles_per_dim)))
+        missing = want - seen
+        if missing:
+            ex = sorted(missing)[:3]
+            out.append(error(
+                "AXC002", PASS, subject,
+                f"output {oi} index map never writes {len(missing)} of "
+                f"{len(want)} tiles (e.g. {ex}); those output blocks are "
+                "garbage"))
+
+        # AXC004 -- revisit hazard
+        ignored = [d for d in range(len(grid))
+                   if not influences[d] and grid[d] > 1]
+        if ignored:
+            last_influencing = max(
+                (d for d in range(len(grid)) if influences[d]), default=-1)
+            bad = [d for d in ignored if d < last_influencing]
+            if bad:
+                out.append(error(
+                    "AXC004", PASS, subject,
+                    f"output {oi} index map ignores grid dim(s) {bad} of "
+                    f"grid {grid} but they are not innermost: revisits to "
+                    "the same output block are non-consecutive, so partial "
+                    "sums are silently lost on real TPU (interpret mode "
+                    "hides this)"))
+
+    out.extend(_accum_findings(eqn, kind, subject))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# driver grid
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class Driver:
+    """One representative invocation of a registered impl.
+
+    ``make(pol)`` returns ``(fn, args)`` such that ``jax.make_jaxpr(fn)
+    (*args)`` traces the registered implementation under ``pol``."""
+
+    kind: str
+    label: str
+    make: Callable[[ExecutionPolicy], tuple[Callable, tuple]]
+
+
+def _sds(shape, dtype) -> jax.ShapeDtypeStruct:
+    return jax.ShapeDtypeStruct(shape, jnp.dtype(dtype))
+
+
+def _f32(*shape):
+    return _sds(shape, jnp.float32)
+
+
+def _i8(*shape):
+    return _sds(shape, jnp.int8)
+
+
+def _gemm_driver(order: Dataflow, M, K, N) -> Driver:
+    def make(pol):
+        pol = dataclasses.replace(pol, block=(128, 128, 128), order=order)
+        fn = lambda a, b: registry.get("gemm")(a, b, pol, jnp.float32)
+        return fn, (_f32(1, M, K), _f32(1, K, N))
+    return Driver("gemm", f"({M},{K})x({K},{N}) f32 order={order.name}", make)
+
+
+def _build_drivers() -> list[Driver]:
+    ds: list[Driver] = []
+    for order in (Dataflow.OS, Dataflow.WS, Dataflow.IS):
+        ds.append(_gemm_driver(order, 192, 320, 160))    # ragged tails
+        ds.append(_gemm_driver(order, 128, 256, 128))    # exact multiples
+
+    def gemv(pol):
+        fn = lambda a, b: registry.get("gemv")(a, b, pol, jnp.float32)
+        return fn, (_f32(1, 4, 768), _f32(1, 768, 1280))
+    ds.append(Driver("gemv", "(4,768)x(768,1280) f32", gemv))
+
+    def zg(pol):
+        pol = dataclasses.replace(pol, block=(128, 128, 128))
+        fn = lambda a, b: registry.get("zero_gate")(a, b, pol, jnp.float32)
+        return fn, (_f32(1, 192, 320), _f32(1, 320, 160))
+    ds.append(Driver("zero_gate", "(192,320)x(320,160) f32", zg))
+
+    for stride in (1, 2):
+        def conv(pol, stride=stride):
+            fn = lambda x, w: registry.get("conv2d")(
+                x, w, pol, (stride, stride), ((1, 1), (1, 1)), 1, jnp.float32)
+            return fn, (_f32(1, 28, 28, 64), _f32(3, 3, 64, 96))
+        ds.append(Driver("conv2d", f"(1,28,28,64)x(3,3,64,96) s{stride}",
+                         conv))
+
+        def dw(pol, stride=stride):
+            fn = lambda x, w: registry.get("dwconv")(
+                x, w, pol, (stride, stride), ((1, 1), (1, 1)), jnp.float32)
+            return fn, (_f32(1, 28, 28, 64), _f32(3, 3, 64))
+        ds.append(Driver("dwconv", f"(1,28,28,64)x(3,3,64) s{stride}", dw))
+
+        def qconv(pol, stride=stride):
+            fn = lambda x, w, s: registry.get("quant_conv2d")(
+                x, w, s, pol, (stride, stride), ((1, 1), (1, 1)),
+                jnp.float32)
+            return fn, (_i8(1, 28, 28, 64), _i8(3, 3, 64, 96), _f32(96))
+        ds.append(Driver("quant_conv2d",
+                         f"int8 (1,28,28,64)x(3,3,64,96) s{stride}", qconv))
+
+    def qg_full(pol):
+        fn = lambda a, b, s: registry.get("quant_gemm")(
+            a, b, s, pol, jnp.float32)
+        return fn, (_i8(192, 320), _i8(320, 160), _f32(160))
+    ds.append(Driver("quant_gemm", "int8 (192,320)x(320,160)", qg_full))
+
+    def qg_wo(pol):
+        fn = lambda a, b, s: registry.get("quant_gemm")(
+            a, b, s, pol, jnp.float32)
+        return fn, (_f32(192, 320), _i8(320, 160), _f32(160))
+    ds.append(Driver("quant_gemm", "weight-only f32x(320,160)", qg_wo))
+
+    def qg_gemv(pol):
+        fn = lambda a, b, s: registry.get("quant_gemm")(
+            a, b, s, pol, jnp.float32)
+        return fn, (_f32(4, 768), _i8(768, 1280), _f32(1280))
+    ds.append(Driver("quant_gemm", "weight-only gemv (4,768)", qg_gemv))
+
+    def i4(pol):
+        fn = lambda a, b, s: registry.get("int4_gemm")(
+            a, b, s, 321, pol, jnp.float32)
+        return fn, (_f32(192, 321), _i8(161, 160), _f32(160))
+    ds.append(Driver("int4_gemm", "odd-K (192,321) packed(161,160)", i4))
+
+    def i4_gemv(pol):
+        fn = lambda a, b, s: registry.get("int4_gemm")(
+            a, b, s, 321, pol, jnp.float32)
+        return fn, (_f32(4, 321), _i8(161, 160), _f32(160))
+    ds.append(Driver("int4_gemm", "odd-K gemv (4,321)", i4_gemv))
+
+    def f8(pol):
+        fn = lambda a, b, s: registry.get("fp8_gemm")(
+            a, b, s, pol, jnp.float32)
+        return fn, (_sds((192, 256), jnp.float8_e4m3fn),
+                    _sds((256, 160), jnp.float8_e4m3fn), _f32(160))
+    ds.append(Driver("fp8_gemm", "e4m3 (192,256)x(256,160)", f8))
+
+    def xe(pol):
+        fn = lambda a, b: registry.get("xla_einsum")("mk,kn->mn", a, b)
+        return fn, (_f32(64, 64), _f32(64, 64))
+    ds.append(Driver("xla_einsum", "mk,kn->mn f32", xe))
+
+    def xc(pol):
+        fn = lambda x, w: registry.get("xla_conv2d")(
+            x, w, stride=(1, 1), padding=((1, 1), (1, 1)), groups=1,
+            out_dtype=jnp.float32)
+        return fn, (_f32(1, 16, 16, 32), _f32(3, 3, 32, 32))
+    ds.append(Driver("xla_conv2d", "(1,16,16,32)x(3,3,32,32)", xc))
+
+    def xd(pol):
+        fn = lambda x, w: registry.get("xla_dwconv")(
+            x, w, stride=(1, 1), padding=((1, 1), (1, 1)),
+            out_dtype=jnp.float32)
+        return fn, (_f32(1, 16, 16, 32), _f32(3, 3, 32))
+    ds.append(Driver("xla_dwconv", "(1,16,16,32)x(3,3,32)", xd))
+
+    return ds
+
+
+DRIVERS = _build_drivers()
+
+
+# ---------------------------------------------------------------------------
+# the pass
+# ---------------------------------------------------------------------------
+
+
+def _trace_policy() -> ExecutionPolicy:
+    # force_interpret=True keeps tracing host-independent: the jaxpr still
+    # records the full grid_mapping either way
+    return ExecutionPolicy(backend="pallas", force_interpret=True)
+
+
+def check_driver(driver: Driver) -> list[Finding]:
+    subject = f"{driver.kind}[{driver.label}]"
+    fn, args = driver.make(_trace_policy())
+    try:
+        jaxpr = jax.make_jaxpr(fn)(*args)
+    except Exception as e:                       # noqa: BLE001
+        return [error("AXC000", PASS, subject,
+                      f"driver failed to trace: {type(e).__name__}: {e}")]
+    calls = find_pallas_calls(jaxpr.jaxpr)
+    meta = registry.meta(driver.kind)
+    if meta.backend == "xla":
+        if calls:
+            return [error(
+                "AXC000", PASS, subject,
+                f"kind is declared backend='xla' but traces to "
+                f"{len(calls)} pallas_call(s)")]
+        return []
+    if not calls:
+        return [error("AXC000", PASS, subject,
+                      "pallas-backed kind traced to zero pallas_calls")]
+    out: list[Finding] = []
+    for eqn in calls:
+        out.extend(check_pallas_eqn(eqn, driver.kind, subject))
+    return out
+
+
+def _probe_accum_policy(kind: str) -> list[Finding]:
+    """AXC007: tracing with accum_dtype=bfloat16 must raise
+    NotImplementedError on every pallas-backed kind."""
+    drivers = [d for d in DRIVERS if d.kind == kind]
+    if not drivers:
+        return []
+    driver = drivers[0]
+    pol = dataclasses.replace(_trace_policy(), accum_dtype=jnp.bfloat16)
+    fn, args = driver.make(pol)
+    try:
+        jax.make_jaxpr(fn)(*args)
+    except NotImplementedError:
+        return []
+    except Exception as e:                       # noqa: BLE001
+        return [error(
+            "AXC007", PASS, f"{kind}[{driver.label}]",
+            f"accum_dtype=bfloat16 probe raised {type(e).__name__} "
+            "instead of NotImplementedError")]
+    return [error(
+        "AXC007", PASS, f"{kind}[{driver.label}]",
+        "impl traced successfully under policy accum_dtype=bfloat16; the "
+        "kernels only implement float32/int32 accumulation, so the policy "
+        "knob is being silently ignored")]
+
+
+def run(kinds: list[str] | None = None) -> list[Finding]:
+    """Run the contract checker over the live registry (or a subset)."""
+    all_kinds = registry.kinds() if kinds is None else kinds
+    findings: list[Finding] = []
+    covered = {d.kind for d in DRIVERS}
+    for kind in all_kinds:
+        if kind not in covered:
+            findings.append(error(
+                "AXC000", PASS, kind,
+                "registered kind has no contract-checker driver; add one "
+                "to repro.analysis.contracts.DRIVERS"))
+    for driver in DRIVERS:
+        if driver.kind not in all_kinds:
+            continue
+        findings.extend(check_driver(driver))
+    for kind in all_kinds:
+        if kind in covered and registry.meta(kind).backend == "pallas":
+            findings.extend(_probe_accum_policy(kind))
+    return findings

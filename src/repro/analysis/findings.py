@@ -1,0 +1,106 @@
+"""Structured findings: the one record type every analysis pass emits.
+
+A :class:`Finding` pins a rule ID (``AXC*`` contracts, ``RTR*`` retrace,
+``QTI*`` qt-invariants, ``LNT*`` lint), a severity, the subject it fired on
+(a kernel kind + shape, an engine, a file:line), and a human message.  The
+CLI renders a list of findings as text or JSON and exits nonzero iff any
+ERROR-severity finding is present.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+from typing import Any, Iterable
+
+SEVERITIES = ("ERROR", "WARNING", "INFO")
+
+
+@dataclasses.dataclass(frozen=True)
+class Finding:
+    """One analysis result.
+
+    ``rule``     : stable rule ID (e.g. ``"AXC004"``) -- tests and CI
+                   grep on these, never on message text.
+    ``severity`` : ``"ERROR"`` (gates CI), ``"WARNING"``, or ``"INFO"``.
+    ``pass_name``: which pass produced it (``contracts`` / ``retrace`` /
+                   ``qt_invariants`` / ``lint``).
+    ``subject``  : what it fired on -- ``"gemm[(192,320)x(320,160) f32
+                   order=WS]"``, ``"ServeEngine"``, a dotted module name.
+    ``message``  : human-readable description of the violation.
+    ``path`` / ``line``: source location when the pass is AST-based.
+    """
+
+    rule: str
+    severity: str
+    pass_name: str
+    subject: str
+    message: str
+    path: str | None = None
+    line: int | None = None
+
+    def __post_init__(self) -> None:
+        if self.severity not in SEVERITIES:
+            raise ValueError(
+                f"severity must be one of {SEVERITIES}, got {self.severity!r}")
+
+    def to_dict(self) -> dict[str, Any]:
+        d = dataclasses.asdict(self)
+        return {k: v for k, v in d.items() if v is not None}
+
+    def render(self) -> str:
+        loc = f"{self.path}:{self.line}: " if self.path else ""
+        return (f"{self.severity:7s} {self.rule} [{self.pass_name}] "
+                f"{loc}{self.subject}: {self.message}")
+
+
+def error(rule: str, pass_name: str, subject: str, message: str,
+          **kw) -> Finding:
+    return Finding(rule, "ERROR", pass_name, subject, message, **kw)
+
+
+def warning(rule: str, pass_name: str, subject: str, message: str,
+            **kw) -> Finding:
+    return Finding(rule, "WARNING", pass_name, subject, message, **kw)
+
+
+def info(rule: str, pass_name: str, subject: str, message: str,
+         **kw) -> Finding:
+    return Finding(rule, "INFO", pass_name, subject, message, **kw)
+
+
+def has_errors(findings: Iterable[Finding]) -> bool:
+    return any(f.severity == "ERROR" for f in findings)
+
+
+def render_text(findings: list[Finding],
+                counts: dict[str, int] | None = None,
+                elapsed: dict[str, float] | None = None) -> str:
+    lines = [f.render() for f in findings]
+    n_err = sum(f.severity == "ERROR" for f in findings)
+    n_warn = sum(f.severity == "WARNING" for f in findings)
+    summary = (f"repro.analysis: {len(findings)} finding(s) "
+               f"({n_err} error, {n_warn} warning)")
+    if counts:
+        per = ", ".join(f"{k}={v}" for k, v in sorted(counts.items()))
+        summary += f" [{per}]"
+    if elapsed:
+        per = ", ".join(f"{k}={v:.1f}s" for k, v in sorted(elapsed.items()))
+        summary += f" ({per})"
+    lines.append(summary)
+    return "\n".join(lines)
+
+
+def render_json(findings: list[Finding],
+                counts: dict[str, int] | None = None,
+                elapsed: dict[str, float] | None = None) -> str:
+    doc: dict[str, Any] = {
+        "findings": [f.to_dict() for f in findings],
+        "errors": sum(f.severity == "ERROR" for f in findings),
+        "warnings": sum(f.severity == "WARNING" for f in findings),
+    }
+    if counts is not None:
+        doc["per_pass_findings"] = counts
+    if elapsed is not None:
+        doc["per_pass_seconds"] = {k: round(v, 3)
+                                   for k, v in elapsed.items()}
+    return json.dumps(doc, indent=2, sort_keys=True)

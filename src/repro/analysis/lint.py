@@ -1,0 +1,324 @@
+"""Repo-specific AST lint: the rules that keep the kernel/dispatch
+architecture honest.
+
+Runs over every module under ``src/repro`` (tests and benchmarks are out of
+scope -- they deliberately poke deprecated and interpret-mode paths):
+
+  LNT001  import of the deprecated ``repro.kernels.ops`` shim layer --
+          in-repo code must call ``repro.axon`` instead
+  LNT002  Python-level ``if``/``while`` on a ``pl.program_id`` value inside
+          a Pallas kernel body (trace-time branching on a tracer;
+          ``pl.when`` is the sanctioned conditional).  Static attribute
+          tests (``ref.dtype`` / ``.shape`` / ``.ndim``) are fine.
+  LNT003  host-side API inside a Pallas kernel body: ``np.*``,
+          ``jax.jit`` / ``vmap`` / ``grad`` / ``pmap`` / ``device_put``,
+          ``jax.random.*`` -- these trace outside the kernel or crash at
+          lowering, never what a kernel body means
+  LNT004  a registered kernel kind declares no VJP marker (``vjp="custom"``
+          / ``"native"`` / ``"no_vjp"`` with a reason)
+  LNT005  literal ``interpret=True`` outside policy.py -- interpret mode is
+          the execution policy's decision, never hard-coded
+  LNT006  ``jnp.einsum`` in ``models/`` or ``vision/`` -- contractions in
+          model code must go through ``axon.einsum`` so policy dispatch
+          (backend, precision, quantized routing) applies
+  LNT007  a contraction-kernel module imported outside ``repro.axon`` /
+          ``repro.kernels`` -- the registry is the only sanctioned route
+  LNT008  a ``pl.pallas_call`` whose ``interpret=`` is missing or a
+          literal -- it must thread a policy-derived variable
+
+Every rule reports ``path:line`` so findings are clickable.
+"""
+from __future__ import annotations
+
+import ast
+from pathlib import Path
+
+from repro.analysis.findings import Finding, error
+
+PASS = "lint"
+
+# contraction-kernel modules only the axon dispatch layer may import
+# (reference helpers like kernels.ref and the attention kernel that
+# models/layers.py wires in by design are NOT restricted)
+_KERNEL_MODULES = ("axon_gemm", "gemv", "im2col_conv", "dwconv",
+                   "quant_gemm", "zero_gate_gemm")
+_KERNEL_IMPORTERS_OK = ("repro.axon", "repro.kernels")
+_HOST_JAX_ATTRS = ("jit", "vmap", "pmap", "grad", "value_and_grad",
+                   "device_put", "make_jaxpr", "eval_shape")
+
+
+def _modname(path: Path, root: Path) -> str:
+    rel = path.resolve().relative_to(root.resolve().parent)
+    parts = list(rel.with_suffix("").parts)
+    if parts[-1] == "__init__":
+        parts = parts[:-1]
+    return ".".join(parts)
+
+
+def _dotted(node: ast.AST) -> str | None:
+    """'pl.pallas_call' for Attribute chains, 'name' for Names."""
+    parts: list[str] = []
+    while isinstance(node, ast.Attribute):
+        parts.append(node.attr)
+        node = node.value
+    if isinstance(node, ast.Name):
+        parts.append(node.id)
+        return ".".join(reversed(parts))
+    return None
+
+
+# ---------------------------------------------------------------------------
+# kernel-body discovery
+# ---------------------------------------------------------------------------
+
+
+def _pallas_call_sites(tree: ast.Module) -> list[ast.Call]:
+    return [node for node in ast.walk(tree)
+            if isinstance(node, ast.Call)
+            and isinstance(node.func, ast.Attribute)
+            and node.func.attr == "pallas_call"]
+
+
+def _kernel_fn_names(tree: ast.Module) -> set[str]:
+    """Names of functions passed (possibly via functools.partial) as the
+    kernel argument of a pallas_call."""
+    names: set[str] = set()
+    for call in _pallas_call_sites(tree):
+        if not call.args:
+            continue
+        arg = call.args[0]
+        if isinstance(arg, ast.Name):
+            names.add(arg.id)
+        elif isinstance(arg, ast.Call) and arg.args:
+            fn_name = _dotted(arg.func)
+            if fn_name in ("functools.partial", "partial") \
+                    and isinstance(arg.args[0], ast.Name):
+                names.add(arg.args[0].id)
+    return names
+
+
+def _kernel_fn_defs(tree: ast.Module) -> list[ast.FunctionDef]:
+    names = _kernel_fn_names(tree)
+    return [node for node in ast.walk(tree)
+            if isinstance(node, ast.FunctionDef) and node.name in names]
+
+
+# ---------------------------------------------------------------------------
+# the rules
+# ---------------------------------------------------------------------------
+
+
+def _lnt001_ops_import(path: str, tree: ast.Module,
+                       modname: str) -> list[Finding]:
+    if modname.startswith("repro.kernels.ops"):
+        return []
+    out = []
+    for node in ast.walk(tree):
+        hit = None
+        if isinstance(node, ast.Import):
+            for alias in node.names:
+                if alias.name.startswith("repro.kernels.ops"):
+                    hit = alias.name
+        elif isinstance(node, ast.ImportFrom) and node.module:
+            if node.module.startswith("repro.kernels.ops"):
+                hit = node.module
+            elif node.module == "repro.kernels" \
+                    and any(a.name == "ops" for a in node.names):
+                hit = "repro.kernels.ops"
+        if hit:
+            out.append(error(
+                "LNT001", PASS, modname,
+                f"imports deprecated shim {hit}; call repro.axon instead",
+                path=path, line=node.lineno))
+    return out
+
+
+def _program_id_names(fn: ast.FunctionDef) -> set[str]:
+    names: set[str] = set()
+    for node in ast.walk(fn):
+        if isinstance(node, ast.Assign) and isinstance(node.value, ast.Call):
+            callee = _dotted(node.value.func) or ""
+            if callee.endswith("program_id"):
+                for tgt in node.targets:
+                    if isinstance(tgt, ast.Name):
+                        names.add(tgt.id)
+    return names
+
+
+def _lnt002_tracer_branch(path: str, tree: ast.Module,
+                          modname: str) -> list[Finding]:
+    out = []
+    for fn in _kernel_fn_defs(tree):
+        pid_names = _program_id_names(fn)
+        for node in ast.walk(fn):
+            if not isinstance(node, (ast.If, ast.While, ast.IfExp)):
+                continue
+            for sub in ast.walk(node.test):
+                is_pid = (isinstance(sub, ast.Name)
+                          and sub.id in pid_names)
+                is_call = (isinstance(sub, ast.Call)
+                           and (_dotted(sub.func) or "").endswith(
+                               "program_id"))
+                if is_pid or is_call:
+                    out.append(error(
+                        "LNT002", PASS, f"{modname}.{fn.name}",
+                        "Python-level branch on a pl.program_id value "
+                        "inside a kernel body; use pl.when (tracers have "
+                        "no truth value at lowering)",
+                        path=path, line=node.lineno))
+                    break
+    return out
+
+
+def _lnt003_host_ops(path: str, tree: ast.Module,
+                     modname: str) -> list[Finding]:
+    out = []
+    for fn in _kernel_fn_defs(tree):
+        for node in ast.walk(fn):
+            if not isinstance(node, ast.Call):
+                continue
+            callee = _dotted(node.func)
+            if callee is None:
+                continue
+            bad = (callee.startswith("np.")
+                   or callee.startswith("numpy.")
+                   or callee.startswith("jax.random.")
+                   or (callee.startswith("jax.")
+                       and callee.split(".")[1] in _HOST_JAX_ATTRS))
+            if bad:
+                out.append(error(
+                    "LNT003", PASS, f"{modname}.{fn.name}",
+                    f"host-side call {callee} inside a Pallas kernel body",
+                    path=path, line=node.lineno))
+    return out
+
+
+def _lnt004_vjp_markers() -> list[Finding]:
+    from repro.axon import registry
+    out = []
+    for kind in registry.kinds():
+        meta = registry.meta(kind)
+        if meta.vjp is None:
+            out.append(error(
+                "LNT004", PASS, kind,
+                "registered kind declares no VJP marker; register with "
+                'vjp="custom" / "native", or vjp="no_vjp" plus a '
+                "vjp_reason"))
+    return out
+
+
+def _lnt005_interpret_literal(path: str, tree: ast.Module,
+                              modname: str) -> list[Finding]:
+    if modname == "repro.axon.policy":
+        return []
+    out = []
+    for node in ast.walk(tree):
+        if not isinstance(node, ast.Call):
+            continue
+        for kw in node.keywords:
+            if (kw.arg == "interpret"
+                    and isinstance(kw.value, ast.Constant)
+                    and kw.value.value is True):
+                out.append(error(
+                    "LNT005", PASS, modname,
+                    "literal interpret=True; interpret mode is the "
+                    "execution policy's call (ExecutionPolicy.interpret())",
+                    path=path, line=node.lineno))
+    return out
+
+
+def _lnt006_raw_einsum(path: str, tree: ast.Module,
+                       modname: str) -> list[Finding]:
+    if not (modname.startswith("repro.models")
+            or modname.startswith("repro.vision")):
+        return []
+    out = []
+    for node in ast.walk(tree):
+        if (isinstance(node, ast.Call)
+                and _dotted(node.func) in ("jnp.einsum", "numpy.einsum",
+                                           "np.einsum", "jax.numpy.einsum")):
+            out.append(error(
+                "LNT006", PASS, modname,
+                "raw jnp.einsum in model code bypasses policy dispatch "
+                "(backend/precision/quantized routing); use axon.einsum",
+                path=path, line=node.lineno))
+    return out
+
+
+def _lnt007_kernel_imports(path: str, tree: ast.Module,
+                           modname: str) -> list[Finding]:
+    if any(modname == ok or modname.startswith(ok + ".")
+           for ok in _KERNEL_IMPORTERS_OK):
+        return []
+    out = []
+    for node in ast.walk(tree):
+        hits: list[str] = []
+        if isinstance(node, ast.Import):
+            hits = [a.name for a in node.names
+                    if a.name.startswith("repro.kernels.")
+                    and a.name.split(".")[2] in _KERNEL_MODULES]
+        elif isinstance(node, ast.ImportFrom) and node.module:
+            parts = node.module.split(".")
+            if (node.module.startswith("repro.kernels.")
+                    and parts[2] in _KERNEL_MODULES):
+                hits = [node.module]
+            elif node.module == "repro.kernels":
+                hits = [f"repro.kernels.{a.name}" for a in node.names
+                        if a.name in _KERNEL_MODULES]
+        for hit in hits:
+            out.append(error(
+                "LNT007", PASS, modname,
+                f"imports contraction kernel {hit} directly; dispatch "
+                "through repro.axon (the registry is the only sanctioned "
+                "route)", path=path, line=node.lineno))
+    return out
+
+
+def _lnt008_pallas_interpret_kwarg(path: str, tree: ast.Module,
+                                   modname: str) -> list[Finding]:
+    out = []
+    for call in _pallas_call_sites(tree):
+        kw = next((k for k in call.keywords if k.arg == "interpret"), None)
+        if kw is None:
+            out.append(error(
+                "LNT008", PASS, modname,
+                "pl.pallas_call without an interpret= kwarg; thread the "
+                "policy-derived flag so the kernel runs everywhere",
+                path=path, line=call.lineno))
+        elif isinstance(kw.value, ast.Constant):
+            out.append(error(
+                "LNT008", PASS, modname,
+                f"pl.pallas_call with literal interpret={kw.value.value}; "
+                "thread a policy-derived variable instead",
+                path=path, line=call.lineno))
+    return out
+
+
+_FILE_RULES = (_lnt001_ops_import, _lnt002_tracer_branch, _lnt003_host_ops,
+               _lnt005_interpret_literal, _lnt006_raw_einsum,
+               _lnt007_kernel_imports, _lnt008_pallas_interpret_kwarg)
+
+
+def check_file(path: str, tree: ast.Module, modname: str) -> list[Finding]:
+    """All file-scoped lint rules on one parsed module."""
+    out: list[Finding] = []
+    for rule in _FILE_RULES:
+        out.extend(rule(path, tree, modname))
+    return out
+
+
+def run(root: Path | None = None) -> list[Finding]:
+    """Run the lint pass over ``src/repro`` (or a fixture tree)."""
+    if root is None:
+        root = Path(__file__).resolve().parents[1]     # src/repro
+    out: list[Finding] = []
+    for py in sorted(root.rglob("*.py")):
+        try:
+            tree = ast.parse(py.read_text(encoding="utf-8"))
+        except SyntaxError as e:
+            out.append(error("LNT001", PASS, str(py),
+                             f"unparseable source: {e}", path=str(py)))
+            continue
+        out.extend(check_file(str(py), tree, _modname(py, root)))
+    out.extend(_lnt004_vjp_markers())
+    return out

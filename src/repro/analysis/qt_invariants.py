@@ -1,0 +1,225 @@
+"""Pytree invariant checker for :class:`repro.quant.QuantizedTensor`.
+
+The container's layout rules -- negative channel axis, keepdims scale
+shapes, int4 nibble-packing along ``-2``, broadcast-trivial ``act_scale``
+trailing dims -- are exactly what lets a scan-stacked ``(L, ...)`` weight
+survive ``lax.scan``'s leading-axis slicing with no special cases.  This
+pass verifies them three ways:
+
+  * **representative constructions** (QTI001-QTI004): build every storage
+    format (int8 / int4 / fp8; plain, scan-stacked, calibrated) through the
+    public constructors and run ``QuantizedTensor.layout_errors()`` on each:
+
+      QTI001  non-negative channel axis (or positive-axis construction)
+      QTI002  scale is not keepdims-broadcastable against the logical shape
+      QTI003  int4 packing violation (pack axis, pack_size, channel axis)
+      QTI004  act_scale trailing dims are not all 1
+
+  * **scan sliceability** (QTI005): under ``eval_shape`` (nothing runs),
+    slice a stacked tensor two ways -- ``slice_leading`` (the repo's
+    oracle) and a real ``lax.scan`` over the xs pytree -- and require the
+    per-layer structures to match exactly.
+
+  * **AST scan** (QTI006): every in-repo call site of
+    ``QuantizedTensor(...)`` / ``quantize_weight(...)`` with a literal
+    ``axis=`` argument must pass it negative.
+"""
+from __future__ import annotations
+
+import ast
+import dataclasses
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.analysis.findings import Finding, error
+from repro.quant import qtensor as qt
+
+PASS = "qt_invariants"
+
+_RULE_BY_KEYWORD = (
+    ("channel axis", "QTI001"),
+    ("scale ndim", "QTI002"),
+    ("scale dim", "QTI002"),
+    ("int4", "QTI003"),
+    ("packed axis", "QTI003"),
+    ("pack_size", "QTI003"),
+    ("bits=4", "QTI003"),
+    ("act_scale", "QTI004"),
+)
+
+
+def _rule_for(err: str) -> str:
+    for key, rule in _RULE_BY_KEYWORD:
+        if key in err:
+            return rule
+    return "QTI002"
+
+
+def check_tensor(t: qt.QuantizedTensor, subject: str) -> list[Finding]:
+    """QTI001-QTI004 on one constructed tensor."""
+    return [error(_rule_for(e), PASS, subject, e)
+            for e in t.layout_errors()]
+
+
+# ---------------------------------------------------------------------------
+# representative constructions
+# ---------------------------------------------------------------------------
+
+
+def _representatives() -> list[tuple[str, qt.QuantizedTensor]]:
+    rng = np.random.default_rng(0)
+    w2 = jnp.asarray(rng.standard_normal((96, 64)).astype(np.float32))
+    w2_odd = jnp.asarray(rng.standard_normal((33, 64)).astype(np.float32))
+    w4 = jnp.asarray(
+        rng.standard_normal((3, 3, 16, 32)).astype(np.float32))
+    stacked = jnp.asarray(
+        rng.standard_normal((4, 96, 64)).astype(np.float32))
+    reps: list[tuple[str, qt.QuantizedTensor]] = []
+    for fmt in ("int8", "int4", "fp8"):
+        reps.append((f"quantize_weight (96,64) {fmt}",
+                     qt.quantize_weight(w2, fmt=fmt)))
+        reps.append((f"quantize_weight odd-K (33,64) {fmt}",
+                     qt.quantize_weight(w2_odd, fmt=fmt)))
+        reps.append((f"quantize_weight stacked (4,96,64) {fmt}",
+                     qt.quantize_weight(stacked, reduce_axes=(-2,),
+                                        fmt=fmt)))
+    reps.append(("quantize_weight conv (3,3,16,32) int8",
+                 qt.quantize_weight(w4, fmt="int8")))
+    # calibrated: per-tensor and per-layer (scan-stacked) activation scales
+    base = qt.quantize_weight(w2, fmt="int8")
+    reps.append(("calibrated per-tensor act_scale", dataclasses.replace(
+        base, act_scale=jnp.asarray(0.5, jnp.float32).reshape(()))))
+    st = qt.quantize_weight(stacked, reduce_axes=(-2,), fmt="int8")
+    reps.append(("calibrated per-layer act_scale", dataclasses.replace(
+        st, act_scale=jnp.full((4, 1, 1), 0.5, jnp.float32))))
+    return reps
+
+
+def _check_constructions() -> list[Finding]:
+    out: list[Finding] = []
+    for label, t in _representatives():
+        out.extend(check_tensor(t, label))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# scan sliceability (QTI005)
+# ---------------------------------------------------------------------------
+
+
+def _scan_slice_structs(stacked: qt.QuantizedTensor):
+    """Per-layer structure exactly as ``lax.scan`` slices it: trace a scan
+    over the xs pytree with ``make_jaxpr`` (abstract -- nothing executes)
+    and capture the sliced pytree the body receives."""
+    captured: list = []
+
+    def body(carry, layer):
+        captured.append(layer)
+        return carry, carry
+
+    jax.make_jaxpr(
+        lambda s: jax.lax.scan(body, jnp.int32(0), s)[0])(stacked)
+    return captured[0]
+
+
+def _struct_of(t) -> list[tuple]:
+    leaves, treedef = jax.tree_util.tree_flatten(
+        t, is_leaf=lambda x: x is None)
+    return [(str(treedef))] + [
+        None if l is None else (tuple(l.shape), jnp.dtype(l.dtype).name)
+        for l in leaves]
+
+
+def _check_scan_sliceability() -> list[Finding]:
+    out: list[Finding] = []
+    rng = np.random.default_rng(1)
+    stacked_w = jnp.asarray(
+        rng.standard_normal((4, 96, 64)).astype(np.float32))
+    for fmt in ("int8", "int4", "fp8"):
+        subject = f"scan-stacked (4,96,64) {fmt}"
+        st = qt.quantize_weight(stacked_w, reduce_axes=(-2,), fmt=fmt)
+        if fmt == "int8":
+            st = dataclasses.replace(
+                st, act_scale=jnp.full((4, 1, 1), 0.5, jnp.float32))
+        try:
+            scanned = _scan_slice_structs(st)
+        except Exception as e:               # noqa: BLE001
+            out.append(error(
+                "QTI005", PASS, subject,
+                f"lax.scan cannot slice the stacked tensor: "
+                f"{type(e).__name__}: {e}"))
+            continue
+        oracle = qt.slice_leading(st, 0)
+        if _struct_of(scanned) != _struct_of(oracle):
+            out.append(error(
+                "QTI005", PASS, subject,
+                f"lax.scan per-layer slice {_struct_of(scanned)} != "
+                f"slice_leading oracle {_struct_of(oracle)}"))
+            continue
+        out.extend(check_tensor(oracle, subject + " (sliced)"))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# AST scan of construction sites (QTI006)
+# ---------------------------------------------------------------------------
+
+_CONSTRUCTORS = ("QuantizedTensor", "quantize_weight")
+
+
+def _literal_int(node: ast.AST) -> int | None:
+    if isinstance(node, ast.Constant) and isinstance(node.value, int):
+        return node.value
+    if (isinstance(node, ast.UnaryOp) and isinstance(node.op, ast.USub)
+            and isinstance(node.operand, ast.Constant)
+            and isinstance(node.operand.value, int)):
+        return -node.operand.value
+    return None
+
+
+def check_source(path: str, tree: ast.Module) -> list[Finding]:
+    """QTI006 on one parsed source file."""
+    out: list[Finding] = []
+    for node in ast.walk(tree):
+        if not isinstance(node, ast.Call):
+            continue
+        fn = node.func
+        name = fn.id if isinstance(fn, ast.Name) else (
+            fn.attr if isinstance(fn, ast.Attribute) else None)
+        if name not in _CONSTRUCTORS:
+            continue
+        for kw in node.keywords:
+            if kw.arg != "axis":
+                continue
+            val = _literal_int(kw.value)
+            if val is not None and val >= 0:
+                out.append(error(
+                    "QTI006", PASS, name,
+                    f"construction passes literal axis={val}; channel "
+                    "axes must be negative so the tensor survives "
+                    "leading-axis slicing", path=path, line=node.lineno))
+    return out
+
+
+def _check_sources(root: Path | None = None) -> list[Finding]:
+    if root is None:
+        root = Path(__file__).resolve().parents[1]     # src/repro
+    out: list[Finding] = []
+    for py in sorted(root.rglob("*.py")):
+        try:
+            tree = ast.parse(py.read_text(encoding="utf-8"))
+        except SyntaxError as e:
+            out.append(error("QTI006", PASS, str(py),
+                             f"unparseable source: {e}"))
+            continue
+        out.extend(check_source(str(py), tree))
+    return out
+
+
+def run(root: Path | None = None) -> list[Finding]:
+    """Run the QuantizedTensor invariant checker."""
+    return (_check_constructions() + _check_scan_sliceability()
+            + _check_sources(root))

@@ -1,0 +1,200 @@
+"""Retrace-hazard detector: prove the engines' ONE-fixed-shape promise.
+
+Both engines jit exactly one step and promise a closed set of traced
+signatures -- ``ServeEngine`` feeds token width ``prefill_chunk`` while any
+slot prefilling and 1 for pure decode; ``VisionEngine`` always feeds
+``batch_slots`` lanes.  A third signature sneaking in recompiles mid-serve,
+which shows up as a multi-second latency spike the tests never catch
+(they run warm).  This pass proves the promise two ways:
+
+  * **state enumeration** -- the signature-deciding hooks
+    (``serve.engine.step_width``, ``vision.engine.step_batch``) are pure
+    functions of scheduler state, so enumerating every slot-state multiset
+    (resp. admission count) and checking the produced signature against
+    ``declared_step_widths`` / ``declared_step_batches`` is an exhaustive
+    proof over a superset of the reachable states:
+
+      RTR001  a reachable scheduler state produces an undeclared signature
+      RTR002  a declared signature no state produces (dead declaration)
+
+  * **AST discipline** -- the proof is only sound while the engines keep
+    routing their shape decisions through the hooks:
+
+      RTR003  ServeEngine.generate decides the token width without calling
+              step_width
+      RTR004  jax.jit called inside a serve loop (generate / infer / _wave)
+              instead of once at construction
+      RTR005  VisionEngine.infer decides the lane padding without calling
+              step_batch
+"""
+from __future__ import annotations
+
+import ast
+import inspect
+import itertools
+
+from repro.analysis.findings import Finding, error, warning
+
+PASS = "retrace"
+# enumeration sizes: slot-state multisets are symmetric in slot order, so a
+# handful of slots and chunk sizes covers every (any-prefill?, any-decode?)
+# combination the hooks can distinguish
+ENUM_SLOTS = 4
+ENUM_PREFILL_CHUNKS = (1, 2, 16)
+ENUM_BATCH_SLOTS = (1, 4, 8)
+
+
+# ---------------------------------------------------------------------------
+# state enumeration
+# ---------------------------------------------------------------------------
+
+
+def _check_serve_widths() -> list[Finding]:
+    from repro.serve import engine as se
+    out: list[Finding] = []
+    for chunk in ENUM_PREFILL_CHUNKS:
+        declared = set(se.declared_step_widths(chunk))
+        produced: set[int] = set()
+        for n_slots in range(1, ENUM_SLOTS + 1):
+            for states in itertools.combinations_with_replacement(
+                    se.SLOT_STATES, n_slots):
+                w = se.step_width(list(states), chunk)
+                produced.add(w)
+                if w not in declared:
+                    out.append(error(
+                        "RTR001", PASS, "ServeEngine",
+                        f"slot states {states} with prefill_chunk={chunk} "
+                        f"produce token width {w}, outside the declared "
+                        f"set {sorted(declared)} -- this state would "
+                        "retrace the chunk step mid-serve"))
+        for w in declared - produced:
+            out.append(warning(
+                "RTR002", PASS, "ServeEngine",
+                f"declared token width {w} (prefill_chunk={chunk}) is "
+                "produced by no enumerated slot state; dead declaration"))
+    return out
+
+
+def _check_vision_batches() -> list[Finding]:
+    from repro.vision import engine as ve
+    out: list[Finding] = []
+    for slots in ENUM_BATCH_SLOTS:
+        declared = set(ve.declared_step_batches(slots))
+        produced: set[int] = set()
+        for n_admitted in range(slots + 1):
+            b = ve.step_batch(n_admitted, slots)
+            produced.add(b)
+            if b not in declared:
+                out.append(error(
+                    "RTR001", PASS, "VisionEngine",
+                    f"admitting {n_admitted} of {slots} lanes produces "
+                    f"batch dim {b}, outside the declared set "
+                    f"{sorted(declared)} -- this admission count would "
+                    "retrace the infer step mid-serve"))
+        for b in declared - produced:
+            out.append(warning(
+                "RTR002", PASS, "VisionEngine",
+                f"declared batch dim {b} (batch_slots={slots}) is produced "
+                "by no admission count; dead declaration"))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# AST discipline
+# ---------------------------------------------------------------------------
+
+
+def _calls_name(tree: ast.AST, name: str) -> bool:
+    for node in ast.walk(tree):
+        if isinstance(node, ast.Call):
+            fn = node.func
+            if isinstance(fn, ast.Name) and fn.id == name:
+                return True
+            if isinstance(fn, ast.Attribute) and fn.attr == name:
+                return True
+    return False
+
+
+def _jit_calls(tree: ast.AST) -> list[int]:
+    lines = []
+    for node in ast.walk(tree):
+        if (isinstance(node, ast.Call)
+                and isinstance(node.func, ast.Attribute)
+                and node.func.attr == "jit"
+                and isinstance(node.func.value, ast.Name)
+                and node.func.value.id == "jax"):
+            lines.append(node.lineno)
+    return lines
+
+
+def _method(cls_node: ast.ClassDef, name: str) -> ast.FunctionDef | None:
+    for node in cls_node.body:
+        if isinstance(node, ast.FunctionDef) and node.name == name:
+            return node
+    return None
+
+
+def _module_ast(mod) -> tuple[ast.Module, str]:
+    path = inspect.getsourcefile(mod)
+    with open(path, encoding="utf-8") as f:
+        return ast.parse(f.read()), path
+
+
+def _check_serve_ast() -> list[Finding]:
+    from repro.serve import engine as se
+    tree, path = _module_ast(se)
+    out: list[Finding] = []
+    for node in ast.walk(tree):
+        if not (isinstance(node, ast.ClassDef)
+                and node.name == "ServeEngine"):
+            continue
+        gen = _method(node, "generate")
+        if gen is None:
+            continue
+        if not _calls_name(gen, "step_width"):
+            out.append(error(
+                "RTR003", PASS, "ServeEngine.generate",
+                "token width is decided without calling step_width(); the "
+                "retrace proof only covers widths routed through the hook",
+                path=path, line=gen.lineno))
+        for meth_name in ("generate", "_wave"):
+            meth = _method(node, meth_name)
+            if meth is None:
+                continue
+            for line in _jit_calls(meth):
+                out.append(error(
+                    "RTR004", PASS, f"ServeEngine.{meth_name}",
+                    "jax.jit inside the serve loop: steps must be jitted "
+                    "once at construction", path=path, line=line))
+    return out
+
+
+def _check_vision_ast() -> list[Finding]:
+    from repro.vision import engine as ve
+    tree, path = _module_ast(ve)
+    out: list[Finding] = []
+    for node in ast.walk(tree):
+        if not (isinstance(node, ast.ClassDef)
+                and node.name == "VisionEngine"):
+            continue
+        inf = _method(node, "infer")
+        if inf is None:
+            continue
+        if not _calls_name(inf, "step_batch"):
+            out.append(error(
+                "RTR005", PASS, "VisionEngine.infer",
+                "lane padding is decided without calling step_batch(); the "
+                "retrace proof only covers batch dims routed through the "
+                "hook", path=path, line=inf.lineno))
+        for line in _jit_calls(inf):
+            out.append(error(
+                "RTR004", PASS, "VisionEngine.infer",
+                "jax.jit inside the serve loop: steps must be jitted once "
+                "at construction", path=path, line=line))
+    return out
+
+
+def run() -> list[Finding]:
+    """Run the retrace-hazard detector over both engines."""
+    return (_check_serve_widths() + _check_vision_batches()
+            + _check_serve_ast() + _check_vision_ast())

@@ -261,7 +261,7 @@ def _mapped_blocking(pol: ExecutionPolicy, M: int, K: int, N: int,
             order if order is not None else sel.loop_order)
 
 
-@registry.register("gemm")
+@registry.register("gemm", accum="float32", vjp="custom")
 def _gemm_impl(at, bt, pol: ExecutionPolicy, out_dtype):
     B, M, K = at.shape
     N = bt.shape[2]
@@ -281,7 +281,7 @@ def _check_accum_dtype(pol: ExecutionPolicy) -> None:
             f"policy accum_dtype={pol.accum_dtype} is not implemented")
 
 
-@registry.register("gemv")
+@registry.register("gemv", accum="float32", vjp="custom")
 def _gemv_impl(at, bt, pol: ExecutionPolicy, out_dtype):
     # at: (1, M, K) with M <= 8 -- the M rows are the kernel's small batch
     _, _, K = at.shape
@@ -295,7 +295,7 @@ def _gemv_impl(at, bt, pol: ExecutionPolicy, out_dtype):
     return mv(at[0], bt[0])[None]
 
 
-@registry.register("zero_gate")
+@registry.register("zero_gate", accum="float32", vjp="custom")
 def _zero_gate_impl(at, bt, pol: ExecutionPolicy, out_dtype):
     _, M, K = at.shape
     N = bt.shape[2]
@@ -306,7 +306,7 @@ def _zero_gate_impl(at, bt, pol: ExecutionPolicy, out_dtype):
     return zg(at[0], bt[0])[None]
 
 
-@registry.register("xla_einsum")
+@registry.register("xla_einsum", accum="native", vjp="native", backend="xla")
 def _xla_einsum(spec, *operands, precision=None, preferred_element_type=None):
     return jnp.einsum(spec, *operands, precision=precision,
                       preferred_element_type=preferred_element_type)
@@ -357,7 +357,8 @@ def _fp8_gemm_callable(block: tuple[int, int, int], interpret: bool,
         interpret=interpret))
 
 
-@registry.register("quant_gemm")
+@registry.register("quant_gemm", accum="int32|float32", vjp="no_vjp",
+                   vjp_reason="inference-only: PTQ weights are frozen")
 def _quant_gemm_impl(at, bt, scale, pol: ExecutionPolicy, out_dtype):
     """(M, K) x (K, N) int8 weight GeMM with fused dequant epilogue.
 
@@ -365,6 +366,7 @@ def _quant_gemm_impl(at, bt, scale, pol: ExecutionPolicy, out_dtype):
     Small-M float activations (decode steps) ride the streaming GEMV."""
     M, K = at.shape
     N = bt.shape[1]
+    _check_accum_dtype(pol)
     if at.dtype != jnp.int8 and M <= 8:
         if pol.block is not None:
             bk, bn = pol.block[1], pol.block[2]
@@ -381,7 +383,8 @@ def _quant_gemm_impl(at, bt, scale, pol: ExecutionPolicy, out_dtype):
     return mm(at, bt, scale)
 
 
-@registry.register("int4_gemm")
+@registry.register("int4_gemm", accum="float32", vjp="no_vjp",
+                   vjp_reason="inference-only: PTQ weights are frozen")
 def _int4_gemm_impl(at, bt, scale, k_size, pol: ExecutionPolicy, out_dtype):
     """(M, K) float x nibble-packed (K/2, N) int4 weight, weight-only.
 
@@ -389,6 +392,7 @@ def _int4_gemm_impl(at, bt, scale, k_size, pol: ExecutionPolicy, out_dtype):
     mapper blocks for 1-byte weight traffic (conservative for 0.5 B)."""
     M = at.shape[0]
     N = bt.shape[1]
+    _check_accum_dtype(pol)
     if M <= 8:
         if pol.block is not None:
             bk, bn = pol.block[1], pol.block[2]
@@ -403,11 +407,13 @@ def _int4_gemm_impl(at, bt, scale, k_size, pol: ExecutionPolicy, out_dtype):
     return mm(at, bt, scale)
 
 
-@registry.register("fp8_gemm")
+@registry.register("fp8_gemm", accum="float32", vjp="no_vjp",
+                   vjp_reason="inference-only: PTQ weights are frozen")
 def _fp8_gemm_impl(at, bt, scale, pol: ExecutionPolicy, out_dtype):
     """(M, K) x (K, N) e4m3 GeMM, f32 accumulation, scale-cast epilogue."""
     M, K = at.shape
     N = bt.shape[1]
+    _check_accum_dtype(pol)
     block, _ = _mapped_blocking(pol, M, K, N, 1)
     mm = _fp8_gemm_callable(block, pol.interpret(),
                             jnp.dtype(out_dtype).name)
@@ -422,10 +428,12 @@ def _quant_conv_callable(*, stride, padding, out_dtype, interpret,
         out_dtype=jnp.dtype(out_dtype), interpret=interpret, **block_kwargs))
 
 
-@registry.register("quant_conv2d")
+@registry.register("quant_conv2d", accum="int32", vjp="no_vjp",
+                   vjp_reason="inference-only: PTQ weights are frozen")
 def _quant_conv2d_impl(xq, wq, scale, pol: ExecutionPolicy, stride, padding,
                        out_dtype, block_rows=8, block_cout=128,
                        block_cin=512):
+    _check_accum_dtype(pol)
     conv = _quant_conv_callable(
         stride=stride, padding=padding, out_dtype=jnp.dtype(out_dtype),
         block_rows=block_rows, block_cout=block_cout, block_cin=block_cin,
@@ -581,9 +589,10 @@ def _conv_callable(fn, ref_fn, *, stride, padding, out_dtype, **block_kwargs):
     return jax.jit(conv)
 
 
-@registry.register("conv2d")
+@registry.register("conv2d", accum="float32", vjp="custom")
 def _conv2d_impl(x, w, pol: ExecutionPolicy, stride, padding, groups,
                  out_dtype, block_rows=8, block_cout=128, block_cin=512):
+    _check_accum_dtype(pol)
     conv = _conv_callable(
         im2col_conv, ref.conv2d_ref, stride=stride, padding=padding,
         block_rows=block_rows, block_cout=block_cout, block_cin=block_cin,
@@ -604,15 +613,16 @@ def _conv2d_impl(x, w, pol: ExecutionPolicy, stride, padding, groups,
         N, outg.shape[2], outg.shape[3], cout)
 
 
-@registry.register("xla_conv2d")
+@registry.register("xla_conv2d", accum="native", vjp="native", backend="xla")
 def _xla_conv2d(x, w, *, stride, padding, groups, out_dtype):
     return ref.conv2d_ref(x, w, stride=stride, padding=padding, groups=groups,
                           out_dtype=out_dtype)
 
 
-@registry.register("dwconv")
+@registry.register("dwconv", accum="float32", vjp="custom")
 def _dwconv_impl(x, w, pol: ExecutionPolicy, stride, padding, out_dtype,
                  block_rows=8, block_c=128):
+    _check_accum_dtype(pol)
     conv = _conv_callable(
         dwconv, ref.dwconv_ref, stride=stride, padding=padding,
         block_rows=block_rows, block_c=block_c,
@@ -621,7 +631,7 @@ def _dwconv_impl(x, w, pol: ExecutionPolicy, stride, padding, out_dtype,
     return conv(x, w)
 
 
-@registry.register("xla_dwconv")
+@registry.register("xla_dwconv", accum="native", vjp="native", backend="xla")
 def _xla_dwconv(x, w, *, stride, padding, out_dtype):
     return ref.dwconv_ref(x, w, stride=stride, padding=padding,
                           out_dtype=out_dtype)

@@ -4,19 +4,92 @@ The dispatcher (``repro.axon.dispatch``) never imports kernels directly -- it
 looks them up here, so swapping a kernel (a new Mosaic GeMM, a GPU Triton
 backend, a quantized path) is a one-line registration instead of a sweep over
 every call site.
+
+Each registration also carries a :class:`KernelMeta` record -- the declared
+contract the static analyzer (``repro.analysis``) checks against what the
+kernel actually traces to: the accumulation dtype(s) the implementation is
+allowed to use, whether it defines a custom VJP (or an explicit ``no_vjp``
+marker with a stated reason), and which backend family it lowers through.
+Runtime dispatch ignores the metadata entirely; it exists so contracts are
+*declared* in exactly one place and verified mechanically.
 """
 from __future__ import annotations
 
+import dataclasses
 from typing import Callable
 
+# accumulation-dtype contracts a kind may declare; "native" = XLA chooses
+ACCUM_CONTRACTS = ("float32", "int32", "int32|float32", "native")
+# VJP markers: "custom" = jax.custom_vjp defined; "no_vjp" = deliberately
+# forward-only (reason required); "native" = XLA autodiff applies as-is
+VJP_MARKERS = ("custom", "no_vjp", "native")
+BACKEND_FAMILIES = ("pallas", "xla")
+
+
+@dataclasses.dataclass(frozen=True)
+class KernelMeta:
+    """Declared contract for one registered kernel kind.
+
+    ``accum``      : accumulation dtype(s) the kernel may use --
+                     ``"float32"``, ``"int32"``, ``"int32|float32"`` (the
+                     int8 path accumulates int32 when a calibrated
+                     activation scale routes int8 x int8, float32 in
+                     weight-only mode), or ``"native"`` (XLA backend,
+                     accumulation left to the compiler).
+    ``vjp``        : ``"custom"`` (jax.custom_vjp defined), ``"no_vjp"``
+                     (forward-only by design -- ``vjp_reason`` required),
+                     or ``"native"`` (plain XLA autodiff).
+    ``vjp_reason`` : why a ``no_vjp`` kind is forward-only.
+    ``backend``    : ``"pallas"`` or ``"xla"`` lowering family.
+    """
+
+    kind: str
+    accum: str = "float32"
+    vjp: str | None = None
+    vjp_reason: str | None = None
+    backend: str = "pallas"
+
+    def __post_init__(self) -> None:
+        if self.accum not in ACCUM_CONTRACTS:
+            raise ValueError(
+                f"{self.kind}: accum must be one of {ACCUM_CONTRACTS}, "
+                f"got {self.accum!r}")
+        if self.vjp is not None and self.vjp not in VJP_MARKERS:
+            raise ValueError(
+                f"{self.kind}: vjp must be one of {VJP_MARKERS} or None, "
+                f"got {self.vjp!r}")
+        if self.vjp == "no_vjp" and not self.vjp_reason:
+            raise ValueError(
+                f"{self.kind}: no_vjp marker requires a vjp_reason")
+        if self.backend not in BACKEND_FAMILIES:
+            raise ValueError(
+                f"{self.kind}: backend must be one of {BACKEND_FAMILIES}, "
+                f"got {self.backend!r}")
+
+    @property
+    def accum_dtypes(self) -> tuple[str, ...]:
+        """The concrete dtype names this contract permits (empty for
+        ``native`` -- no constraint)."""
+        if self.accum == "native":
+            return ()
+        return tuple(self.accum.split("|"))
+
+
 _REGISTRY: dict[str, Callable] = {}
+_META: dict[str, KernelMeta] = {}
 
 
-def register(kind: str) -> Callable[[Callable], Callable]:
-    """Decorator: ``@register("gemm")`` binds an implementation to a kind."""
+def register(kind: str, *, accum: str = "float32", vjp: str | None = None,
+             vjp_reason: str | None = None,
+             backend: str = "pallas") -> Callable[[Callable], Callable]:
+    """Decorator: ``@register("gemm", accum="float32", vjp="custom")``
+    binds an implementation (and its declared contract) to a kind."""
+    m = KernelMeta(kind=kind, accum=accum, vjp=vjp, vjp_reason=vjp_reason,
+                   backend=backend)
 
     def deco(fn: Callable) -> Callable:
         _REGISTRY[kind] = fn
+        _META[kind] = m
         return fn
 
     return deco
@@ -29,6 +102,21 @@ def get(kind: str) -> Callable:
         raise KeyError(
             f"no kernel registered for {kind!r}; have {sorted(_REGISTRY)}"
         ) from None
+
+
+def meta(kind: str) -> KernelMeta:
+    """Declared contract for ``kind`` (KeyError for unknown kinds)."""
+    try:
+        return _META[kind]
+    except KeyError:
+        raise KeyError(
+            f"no metadata registered for {kind!r}; have {sorted(_META)}"
+        ) from None
+
+
+def metas() -> dict[str, KernelMeta]:
+    """All declared contracts, keyed by kind (a copy)."""
+    return dict(_META)
 
 
 def kinds() -> list[str]:

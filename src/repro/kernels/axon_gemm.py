@@ -5,10 +5,19 @@ The paper's dataflow taxonomy (§2.1, §4) maps onto a blocked TPU GeMM as
 
   OS: grid (M, N, K), K innermost -- the fp32 accumulator block is resident
       (output stationary); A and B blocks stream.
-  WS: grid (N, K, M), M innermost -- the B (weight) block is resident; the
-      output block is revisited across K (partial sums spill to HBM), which
-      is exactly the WS partial-sum-movement cost the paper describes.
-  IS: grid (M, K, N), N innermost -- the A (input) block is resident.
+  WS: grid (N, K, M), M innermost -- the B (weight) block is resident; each
+      K slab writes its own fp32 partial-sum plane to HBM (reduced outside
+      the kernel), which is exactly the WS partial-sum-movement cost the
+      paper describes.
+  IS: grid (M, K, N), N innermost -- the A (input) block is resident; same
+      per-slab partial-sum layout as WS.
+
+The WS/IS output is (nk, M, N): Pallas only guarantees an output block's
+revisits happen on *consecutive* grid steps when every grid dimension its
+index map ignores is innermost, and the WS/IS orders put the K dimension in
+the middle by design -- so instead of revisiting one (M, N) accumulator
+across non-adjacent steps (silently losing partial sums on real TPU), every
+(i, l, j) step owns a distinct block and the K-reduction is a plain XLA sum.
 
 Axon's *fill-latency* insight maps to the pipeline prologue: Pallas
 double-buffers block DMAs, so compute starts after one block fetch -- the
@@ -44,17 +53,11 @@ def _os_kernel(a_ref, b_ref, o_ref, acc_ref, *, nk: int):
         o_ref[...] = acc_ref[...].astype(o_ref.dtype)
 
 
-def _streaming_kernel(a_ref, b_ref, o_ref, *, k_axis: int):
-    """WS/IS body: accumulate partial sums directly in the (revisited) output."""
-    k = pl.program_id(k_axis)
-
-    @pl.when(k == 0)
-    def _init():
-        o_ref[...] = jnp.zeros_like(o_ref)
-
-    o_ref[...] += jnp.dot(
+def _streaming_kernel(a_ref, b_ref, o_ref):
+    """WS/IS body: write this K slab's partial product to its own plane."""
+    o_ref[...] = jnp.dot(
         a_ref[...], b_ref[...], preferred_element_type=jnp.float32
-    ).astype(o_ref.dtype)
+    )[None]
 
 
 def _pad_to(x: jax.Array, multiples: tuple[int, ...]) -> jax.Array:
@@ -102,33 +105,33 @@ def axon_gemm(
             interpret=interpret,
         )(a_p, b_p)
     elif order is Dataflow.WS:
-        # B-block resident across the innermost M sweep; fp32 output
-        # accumulation in HBM (cast at the end by the caller-visible slice).
+        # B-block resident across the innermost M sweep; each K slab owns a
+        # distinct fp32 partial plane (see module docstring), reduced here.
         grid = (nn, nk, nm)
         out = pl.pallas_call(
-            functools.partial(_streaming_kernel, k_axis=1),
+            _streaming_kernel,
             grid=grid,
             in_specs=[
                 pl.BlockSpec((bm, bk), lambda j, l, i: (i, l)),
                 pl.BlockSpec((bk, bn), lambda j, l, i: (l, j)),
             ],
-            out_specs=pl.BlockSpec((bm, bn), lambda j, l, i: (i, j)),
-            out_shape=jax.ShapeDtypeStruct((Mp, Np), jnp.float32),
+            out_specs=pl.BlockSpec((1, bm, bn), lambda j, l, i: (l, i, j)),
+            out_shape=jax.ShapeDtypeStruct((nk, Mp, Np), jnp.float32),
             interpret=interpret,
-        )(a_p, b_p).astype(out_dtype)
+        )(a_p, b_p).sum(axis=0).astype(out_dtype)
     elif order is Dataflow.IS:
         grid = (nm, nk, nn)
         out = pl.pallas_call(
-            functools.partial(_streaming_kernel, k_axis=1),
+            _streaming_kernel,
             grid=grid,
             in_specs=[
                 pl.BlockSpec((bm, bk), lambda i, l, j: (i, l)),
                 pl.BlockSpec((bk, bn), lambda i, l, j: (l, j)),
             ],
-            out_specs=pl.BlockSpec((bm, bn), lambda i, l, j: (i, j)),
-            out_shape=jax.ShapeDtypeStruct((Mp, Np), jnp.float32),
+            out_specs=pl.BlockSpec((1, bm, bn), lambda i, l, j: (l, i, j)),
+            out_shape=jax.ShapeDtypeStruct((nk, Mp, Np), jnp.float32),
             interpret=interpret,
-        )(a_p, b_p).astype(out_dtype)
+        )(a_p, b_p).sum(axis=0).astype(out_dtype)
     else:
         raise ValueError(order)
 

@@ -16,6 +16,12 @@ from repro.axon.policy import ExecutionPolicy
 from repro.core.dataflows import Dataflow
 from repro.kernels.zero_gate_gemm import block_mask  # re-export (unchanged)
 
+# importing the shim layer at all is deprecated (each entry point warns
+# again at call time); the AST lint rule LNT001 blocks in-repo imports
+warnings.warn(
+    "repro.kernels.ops is deprecated; use the repro.axon operator API",
+    DeprecationWarning, stacklevel=2)
+
 
 def _warn(name: str, repl: str) -> None:
     warnings.warn(

@@ -152,6 +152,61 @@ class QuantizedTensor:
             return "fp8"
         return "int8"
 
+    def layout_errors(self) -> list[str]:
+        """Structural violations of the layout rules (empty = conformant).
+
+        The rules (negative channel axis, keepdims scales, int4 packing
+        along ``-2``, broadcast-trivial ``act_scale`` trailing dims) are
+        exactly what makes the container survive ``lax.scan`` slicing --
+        see the module docstring.  The static analyzer
+        (``repro.analysis.qt_invariants``) calls this on every
+        representative construction."""
+        errs: list[str] = []
+        if self.axis >= 0:
+            errs.append(
+                f"channel axis {self.axis} must be stored negative so it "
+                "survives leading-axis slicing (lax.scan)")
+        elif not -self.q.ndim <= self.axis:
+            errs.append(
+                f"channel axis {self.axis} out of range for ndim "
+                f"{self.q.ndim}")
+        logical = self.shape
+        if self.scale.ndim != len(logical):
+            errs.append(
+                f"scale ndim {self.scale.ndim} != logical ndim "
+                f"{len(logical)} (keepdims layout required)")
+        else:
+            for d, (sd, ld) in enumerate(zip(self.scale.shape, logical)):
+                if sd not in (1, ld):
+                    errs.append(
+                        f"scale dim {d} is {sd}, broadcastable against "
+                        f"neither 1 nor logical {ld}")
+        if self.bits == 4:
+            if self.pack_size is None:
+                errs.append("bits=4 requires pack_size (logical -2 length)")
+            elif self.q.ndim < 2:
+                errs.append("bits=4 requires ndim >= 2 (packing along -2)")
+            elif self.q.shape[-2] != -(-self.pack_size // 2):
+                errs.append(
+                    f"packed axis -2 is {self.q.shape[-2]}, expected "
+                    f"ceil({self.pack_size} / 2) = "
+                    f"{-(-self.pack_size // 2)}")
+            if self.axis != -1:
+                errs.append(
+                    f"int4 requires channel axis -1 (packing owns -2), "
+                    f"got {self.axis}")
+        elif self.pack_size is not None:
+            errs.append(f"pack_size={self.pack_size} is only valid on "
+                        "bits=4 tensors")
+        if self.act_scale is not None and self.act_scale.ndim > 0:
+            trailing = self.act_scale.shape[1:]
+            if any(d != 1 for d in trailing):
+                errs.append(
+                    f"act_scale shape {tuple(self.act_scale.shape)} must "
+                    "be per-tensor (size 1) or (L, 1, ..., 1) so scan "
+                    "slices a per-layer scalar")
+        return errs
+
     # -- pytree protocol ----------------------------------------------------
     def tree_flatten(self):
         return (self.q, self.scale, self.act_scale), (

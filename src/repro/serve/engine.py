@@ -38,6 +38,30 @@ from repro.models import transformer as T
 
 QUEUE_POLICIES = ("fifo", "sjf")
 
+# every state a ServeEngine slot can be in (the _Slot state machine);
+# the retrace analyzer enumerates token widths over multisets of these
+SLOT_STATES = ("free", "prefill", "decode")
+
+
+def step_width(states, prefill_chunk: int) -> int:
+    """Token width the continuous engine feeds for one step, as a pure
+    function of the slot states.
+
+    This is THE place the step signature is decided: the jitted chunk step
+    is traced at ``(B, prefill_chunk)`` while any slot is prefilling and
+    ``(B, 1)`` for pure decode, and nothing else -- the static analyzer
+    (``repro.analysis.retrace``) enumerates every slot-state multiset
+    against :func:`declared_step_widths` to prove no scheduler state can
+    sneak a third trace in mid-serve."""
+    return prefill_chunk if any(s == "prefill" for s in states) else 1
+
+
+def declared_step_widths(prefill_chunk: int) -> tuple[int, ...]:
+    """The complete set of token widths the chunk step is traced at."""
+    if prefill_chunk == 1:
+        return (1,)
+    return (prefill_chunk, 1)
+
 
 def make_serve_step(cfg: ModelConfig, *, temperature: float = 0.0,
                     policy: axon.ExecutionPolicy | None = None):
@@ -189,6 +213,10 @@ class ServeEngine:
         self._reset = jax.jit(T.reset_slots, donate_argnums=(0,))
         self.last_stats: dict[str, Any] | None = None
 
+    def declared_step_widths(self) -> tuple[int, ...]:
+        """Token widths this engine's chunk step will ever be traced at."""
+        return declared_step_widths(self.prefill_chunk)
+
     # ------------------------------------------------------------- schedule
 
     def _validate(self, requests):
@@ -236,8 +264,7 @@ class ServeEngine:
         while pending or any(s.state != "free" for s in slots):
             caches = self._admit(slots, pending, requests, caches,
                                  time.perf_counter() - t0)
-            C = (self.prefill_chunk
-                 if any(s.state == "prefill" for s in slots) else 1)
+            C = step_width([s.state for s in slots], self.prefill_chunk)
             tokens = np.zeros((B, C), np.int32)
             valid = np.zeros((B, C), bool)
             fed = [0] * B

@@ -44,6 +44,24 @@ from repro.vision.models import VisionConfig
 QUEUE_POLICIES = ("fifo",)
 
 
+def step_batch(n_admitted: int, batch_slots: int) -> int:
+    """Batch dimension the vision engine feeds for one step, as a pure
+    function of how many lanes were admitted.
+
+    Always ``batch_slots``: partial batches are zero-padded, never fed at
+    their own size -- that is the ONE-fixed-shape promise that keeps the
+    jitted step from recompiling mid-serve.  The static analyzer
+    (``repro.analysis.retrace``) enumerates every admission count against
+    :func:`declared_step_batches` to prove it."""
+    del n_admitted
+    return batch_slots
+
+
+def declared_step_batches(batch_slots: int) -> tuple[int, ...]:
+    """The complete set of batch dims the infer step is traced at."""
+    return (batch_slots,)
+
+
 def make_infer_step(cfg: VisionConfig,
                     policy: axon.ExecutionPolicy | None = None):
     """(params, images (B, H, W, C)) -> model outputs, policy pinned at
@@ -89,6 +107,10 @@ class VisionEngine:
         self.policy = pol
         self._step = jax.jit(make_infer_step(cfg, policy=pol))
         self.last_stats: dict[str, Any] | None = None
+
+    def declared_step_batches(self) -> tuple[int, ...]:
+        """Batch dims this engine's infer step will ever be traced at."""
+        return declared_step_batches(self.batch_slots)
 
     def _validate(self, requests: list[ImageRequest]) -> None:
         want = (*self.cfg.input_hw, self.cfg.in_channels)
@@ -154,8 +176,9 @@ class VisionEngine:
             for ridx in lanes:
                 lane_imgs.append(self._admit_image(requests[ridx].image))
                 queue_delay[ridx] = now - requests[ridx].arrival_s
-            if len(lane_imgs) < B:             # pad empty lanes on device
-                lane_imgs.extend([self._zero_lane()] * (B - len(lane_imgs)))
+            nB = step_batch(len(lane_imgs), B)
+            if len(lane_imgs) < nB:            # pad empty lanes on device
+                lane_imgs.extend([self._zero_lane()] * (nB - len(lane_imgs)))
             out = self._step(self.params, jnp.stack(lane_imgs))
             out = jax.block_until_ready(out)
             done = time.perf_counter() - t0

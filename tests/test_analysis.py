@@ -1,0 +1,482 @@
+"""Tests for ``repro.analysis``: golden known-bad fixtures (each must be
+caught with the right rule ID), the live-repo-is-clean meta-test, and the
+pinned regressions for what the analyzer originally flagged (quant impls
+bypassing the accum-dtype policy check; the WS/IS output-revisit hazard)."""
+from __future__ import annotations
+
+import ast
+import dataclasses
+import functools
+import importlib
+import warnings
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax.experimental import pallas as pl
+
+from repro.analysis import contracts, lint, qt_invariants, retrace, run_all
+from repro.analysis.findings import Finding, has_errors, render_json
+from repro.axon import registry
+from repro.axon.policy import ExecutionPolicy
+from repro.core.dataflows import Dataflow
+from repro.kernels.axon_gemm import axon_gemm
+from repro.quant import qtensor as qt
+
+
+def rules(findings: list[Finding]) -> set[str]:
+    return {f.rule for f in findings}
+
+
+def _pallas_eqn(fn, *args):
+    jaxpr = jax.make_jaxpr(fn)(*args)
+    calls = contracts.find_pallas_calls(jaxpr.jaxpr)
+    assert calls, "fixture did not trace to a pallas_call"
+    return calls[0]
+
+
+def _f32(*shape):
+    return jax.ShapeDtypeStruct(shape, jnp.float32)
+
+
+def _i8(*shape):
+    return jax.ShapeDtypeStruct(shape, jnp.int8)
+
+
+# ---------------------------------------------------------------------------
+# contracts: golden bad kernels
+# ---------------------------------------------------------------------------
+
+
+class TestContractFixtures:
+    def test_f32_accum_on_int8_operands_is_axc005(self):
+        """An int8 x int8 kernel accumulating in f32 drops low bits."""
+        def bad(a, b):
+            def body(a_ref, b_ref, o_ref):
+                o_ref[...] = jnp.dot(
+                    a_ref[...].astype(jnp.int8), b_ref[...],
+                    preferred_element_type=jnp.float32)
+            return pl.pallas_call(
+                body, grid=(1,),
+                in_specs=[pl.BlockSpec((64, 64), lambda i: (0, 0)),
+                          pl.BlockSpec((64, 64), lambda i: (0, 0))],
+                out_specs=pl.BlockSpec((64, 64), lambda i: (0, 0)),
+                out_shape=jax.ShapeDtypeStruct((64, 64), jnp.float32),
+                interpret=True)(a, b)
+        eqn = _pallas_eqn(bad, _i8(64, 64), _i8(64, 64))
+        fs = contracts.check_pallas_eqn(eqn, "quant_gemm", "fixture")
+        assert "AXC005" in rules(fs)
+        assert all(f.severity == "ERROR" for f in fs)
+
+    def test_index_map_skipping_a_tile_is_axc002(self):
+        """Index map collapses two grid rows onto one tile: a tile is
+        never written."""
+        def bad(a):
+            def body(a_ref, o_ref):
+                o_ref[...] = a_ref[...]
+            return pl.pallas_call(
+                body, grid=(4,),
+                in_specs=[pl.BlockSpec((32, 64), lambda i: (i, 0))],
+                out_specs=pl.BlockSpec((32, 64), lambda i: (i // 2, 0)),
+                out_shape=jax.ShapeDtypeStruct((128, 64), jnp.float32),
+                interpret=True)(a)
+        eqn = _pallas_eqn(bad, _f32(128, 64))
+        fs = contracts.check_pallas_eqn(eqn, "gemm", "fixture")
+        assert "AXC002" in rules(fs)
+
+    def test_out_of_bounds_tile_is_axc003(self):
+        def bad(a):
+            def body(a_ref, o_ref):
+                o_ref[...] = a_ref[...]
+            return pl.pallas_call(
+                body, grid=(2,),
+                in_specs=[pl.BlockSpec((32, 64), lambda i: (i, 0))],
+                out_specs=pl.BlockSpec((32, 64), lambda i: (i + 1, 0)),
+                out_shape=jax.ShapeDtypeStruct((64, 64), jnp.float32),
+                interpret=True)(a)
+        eqn = _pallas_eqn(bad, _f32(64, 64))
+        fs = contracts.check_pallas_eqn(eqn, "gemm", "fixture")
+        assert "AXC003" in rules(fs)
+
+    def test_nonconsecutive_output_revisit_is_axc004(self):
+        """The pre-fix WS loop order: the K grid dim is ignored by the
+        output index map but sits in the middle of the grid."""
+        def bad(a, b):
+            def body(a_ref, b_ref, o_ref):
+                k = pl.program_id(1)
+
+                @pl.when(k == 0)
+                def _init():
+                    o_ref[...] = jnp.zeros_like(o_ref)
+                o_ref[...] += jnp.dot(a_ref[...], b_ref[...],
+                                      preferred_element_type=jnp.float32)
+            return pl.pallas_call(
+                body, grid=(2, 2, 2),
+                in_specs=[pl.BlockSpec((64, 64), lambda j, l, i: (i, l)),
+                          pl.BlockSpec((64, 64), lambda j, l, i: (l, j))],
+                out_specs=pl.BlockSpec((64, 64), lambda j, l, i: (i, j)),
+                out_shape=jax.ShapeDtypeStruct((128, 128), jnp.float32),
+                interpret=True)(a, b)
+        eqn = _pallas_eqn(bad, _f32(128, 128), _f32(128, 128))
+        fs = contracts.check_pallas_eqn(eqn, "gemm", "fixture")
+        assert "AXC004" in rules(fs)
+
+    def test_trailing_ignored_grid_dim_is_clean(self):
+        """The OS order ignores nothing mid-grid: K innermost is legal."""
+        def good(a, b):
+            def body(a_ref, b_ref, o_ref):
+                k = pl.program_id(2)
+
+                @pl.when(k == 0)
+                def _init():
+                    o_ref[...] = jnp.zeros_like(o_ref)
+                o_ref[...] += jnp.dot(a_ref[...], b_ref[...],
+                                      preferred_element_type=jnp.float32)
+            return pl.pallas_call(
+                body, grid=(2, 2, 2),
+                in_specs=[pl.BlockSpec((64, 64), lambda i, j, l: (i, l)),
+                          pl.BlockSpec((64, 64), lambda i, j, l: (l, j))],
+                out_specs=pl.BlockSpec((64, 64), lambda i, j, l: (i, j)),
+                out_shape=jax.ShapeDtypeStruct((128, 128), jnp.float32),
+                interpret=True)(a, b)
+        eqn = _pallas_eqn(good, _f32(128, 128), _f32(128, 128))
+        fs = contracts.check_pallas_eqn(eqn, "gemm", "fixture")
+        assert not fs
+
+    def test_vmem_blowout_is_axc001(self):
+        def bad(a):
+            def body(a_ref, o_ref):
+                o_ref[...] = a_ref[...]
+            return pl.pallas_call(
+                body, grid=(1,),
+                in_specs=[pl.BlockSpec((2048, 2048), lambda i: (0, 0))],
+                out_specs=pl.BlockSpec((2048, 2048), lambda i: (0, 0)),
+                out_shape=jax.ShapeDtypeStruct((2048, 2048), jnp.float32),
+                interpret=True)(a)
+        eqn = _pallas_eqn(bad, _f32(2048, 2048))
+        fs = contracts.check_pallas_eqn(eqn, "gemm", "fixture")
+        assert "AXC001" in rules(fs)
+
+    def test_ragged_output_block_is_axc006(self):
+        def bad(a):
+            def body(a_ref, o_ref):
+                o_ref[...] = a_ref[...]
+            return pl.pallas_call(
+                body, grid=(2,),
+                in_specs=[pl.BlockSpec((48, 64), lambda i: (i, 0))],
+                out_specs=pl.BlockSpec((48, 64), lambda i: (i, 0)),
+                out_shape=jax.ShapeDtypeStruct((80, 64), jnp.float32),
+                interpret=True)(a)
+        eqn = _pallas_eqn(bad, _f32(80, 64))
+        fs = contracts.check_pallas_eqn(eqn, "gemm", "fixture")
+        assert "AXC006" in rules(fs)
+
+    def test_unknown_kind_lacking_driver_is_axc000(self):
+        fs = contracts.run(kinds=["gemm", "definitely_not_registered"])
+        assert any(f.rule == "AXC000"
+                   and f.subject == "definitely_not_registered"
+                   for f in fs)
+
+
+# ---------------------------------------------------------------------------
+# retrace: a two-signature engine sneaking a third
+# ---------------------------------------------------------------------------
+
+
+class TestRetraceFixtures:
+    def test_third_width_is_rtr001(self, monkeypatch):
+        from repro.serve import engine as se
+
+        def sneaky(states, prefill_chunk):
+            # half-chunk "optimization" for a single prefilling slot: a
+            # third traced signature
+            n_pre = sum(s == "prefill" for s in states)
+            if n_pre == 1 and prefill_chunk > 2:
+                return prefill_chunk // 2
+            return prefill_chunk if n_pre else 1
+
+        monkeypatch.setattr(se, "step_width", sneaky)
+        fs = retrace.run()
+        assert any(f.rule == "RTR001" and f.subject == "ServeEngine"
+                   for f in fs)
+
+    def test_vision_partial_batch_is_rtr001(self, monkeypatch):
+        from repro.vision import engine as ve
+        monkeypatch.setattr(
+            ve, "step_batch",
+            lambda n_admitted, batch_slots: max(n_admitted, 1))
+        fs = retrace.run()
+        assert any(f.rule == "RTR001" and f.subject == "VisionEngine"
+                   for f in fs)
+
+    def test_dead_declaration_is_rtr002(self, monkeypatch):
+        from repro.serve import engine as se
+        monkeypatch.setattr(se, "declared_step_widths",
+                            lambda chunk: (chunk, 1, 7))
+        fs = retrace.run()
+        assert any(f.rule == "RTR002" for f in fs)
+
+    def test_live_engines_are_clean(self):
+        assert retrace.run() == []
+
+    def test_step_width_contract(self):
+        from repro.serve.engine import declared_step_widths, step_width
+        assert step_width(["prefill", "decode", "free"], 16) == 16
+        assert step_width(["decode", "decode"], 16) == 1
+        assert step_width([], 16) == 1
+        assert declared_step_widths(16) == (16, 1)
+        assert declared_step_widths(1) == (1,)
+
+    def test_vision_step_batch_contract(self):
+        from repro.vision.engine import declared_step_batches, step_batch
+        assert all(step_batch(n, 8) == 8 for n in range(9))
+        assert declared_step_batches(8) == (8,)
+
+
+# ---------------------------------------------------------------------------
+# qt invariants
+# ---------------------------------------------------------------------------
+
+
+class TestQtInvariantFixtures:
+    def test_positive_channel_axis_is_qti001(self):
+        good = qt.quantize_weight(jnp.ones((8, 16)), fmt="int8")
+        bad = dataclasses.replace(good, axis=1)
+        fs = qt_invariants.check_tensor(bad, "fixture")
+        assert "QTI001" in rules(fs)
+
+    def test_non_keepdims_scale_is_qti002(self):
+        good = qt.quantize_weight(jnp.ones((8, 16)), fmt="int8")
+        bad = dataclasses.replace(good, scale=good.scale.reshape(-1))
+        fs = qt_invariants.check_tensor(bad, "fixture")
+        assert "QTI002" in rules(fs)
+
+    def test_wrong_pack_axis_length_is_qti003(self):
+        good = qt.quantize_weight(jnp.ones((8, 16)), fmt="int4")
+        bad = dataclasses.replace(good, pack_size=9)
+        fs = qt_invariants.check_tensor(bad, "fixture")
+        assert "QTI003" in rules(fs)
+
+    def test_ragged_act_scale_is_qti004(self):
+        good = qt.quantize_weight(jnp.ones((4, 8, 16)),
+                                  reduce_axes=(-2,), fmt="int8")
+        bad = dataclasses.replace(
+            good, act_scale=jnp.ones((4, 8, 1), jnp.float32))
+        fs = qt_invariants.check_tensor(bad, "fixture")
+        assert "QTI004" in rules(fs)
+
+    def test_positive_axis_literal_in_source_is_qti006(self):
+        src = "w = quantize_weight(x, axis=3)\n"
+        fs = qt_invariants.check_source("fixture.py", ast.parse(src))
+        assert rules(fs) == {"QTI006"}
+        assert fs[0].line == 1
+
+    def test_negative_axis_literal_is_clean(self):
+        src = "w = quantize_weight(x, axis=-1)\n"
+        assert qt_invariants.check_source("f.py", ast.parse(src)) == []
+
+    def test_layout_errors_clean_on_all_formats(self):
+        for fmt in ("int8", "int4", "fp8"):
+            t = qt.quantize_weight(jnp.ones((33, 16)), fmt=fmt)
+            assert t.layout_errors() == [], fmt
+
+
+# ---------------------------------------------------------------------------
+# lint
+# ---------------------------------------------------------------------------
+
+
+def _lint(src: str, modname: str = "repro.kernels.fixture") -> list[Finding]:
+    return lint.check_file("fixture.py", ast.parse(src), modname)
+
+
+class TestLintFixtures:
+    def test_ops_import_is_lnt001(self):
+        for src in ("from repro.kernels import ops\n",
+                    "import repro.kernels.ops\n",
+                    "from repro.kernels.ops import gemm\n"):
+            assert "LNT001" in rules(_lint(src)), src
+
+    def test_tracer_branch_is_lnt002(self):
+        src = (
+            "def _k(a_ref, o_ref):\n"
+            "    i = pl.program_id(0)\n"
+            "    if i == 0:\n"
+            "        o_ref[...] = a_ref[...]\n"
+            "out = pl.pallas_call(_k, interpret=flag)(a)\n")
+        assert "LNT002" in rules(_lint(src))
+
+    def test_static_dtype_branch_is_clean(self):
+        src = (
+            "def _k(a_ref, o_ref):\n"
+            "    if a_ref.dtype == jnp.int32:\n"
+            "        o_ref[...] = a_ref[...]\n"
+            "out = pl.pallas_call(_k, interpret=flag)(a)\n")
+        assert "LNT002" not in rules(_lint(src))
+
+    def test_host_np_in_kernel_is_lnt003(self):
+        src = (
+            "def _k(a_ref, o_ref):\n"
+            "    o_ref[...] = np.zeros((8, 8))\n"
+            "out = pl.pallas_call(_k, interpret=flag)(a)\n")
+        assert "LNT003" in rules(_lint(src))
+
+    def test_jit_in_kernel_is_lnt003(self):
+        src = (
+            "def _k(a_ref, o_ref):\n"
+            "    o_ref[...] = jax.jit(lambda x: x)(a_ref[...])\n"
+            "out = pl.pallas_call(_k, interpret=flag)(a)\n")
+        assert "LNT003" in rules(_lint(src))
+
+    def test_missing_vjp_marker_is_lnt004(self):
+        @registry.register("_lint_fixture_kind")
+        def impl():                                    # pragma: no cover
+            pass
+        try:
+            fs = lint._lnt004_vjp_markers()
+            assert any(f.rule == "LNT004"
+                       and f.subject == "_lint_fixture_kind" for f in fs)
+        finally:
+            registry._REGISTRY.pop("_lint_fixture_kind")
+            registry._META.pop("_lint_fixture_kind")
+
+    def test_interpret_literal_is_lnt005(self):
+        src = "out = pl.pallas_call(_k, interpret=True)(a)\n"
+        fs = _lint(src)
+        assert "LNT005" in rules(fs)
+
+    def test_raw_einsum_in_models_is_lnt006(self):
+        src = "y = jnp.einsum('mk,kn->mn', a, b)\n"
+        assert "LNT006" in rules(_lint(src, "repro.models.layers"))
+        assert "LNT006" in rules(_lint(src, "repro.vision.blocks"))
+        # dispatch itself legitimately calls jnp.einsum
+        assert "LNT006" not in rules(_lint(src, "repro.axon.dispatch"))
+
+    def test_kernel_import_outside_axon_is_lnt007(self):
+        src = "from repro.kernels.axon_gemm import axon_gemm\n"
+        assert "LNT007" in rules(_lint(src, "repro.models.layers"))
+        assert "LNT007" not in rules(_lint(src, "repro.axon.dispatch"))
+        # the attention kernel is wired into models by design: unrestricted
+        ok = "from repro.kernels.flash_attention import f\n"
+        assert "LNT007" not in rules(_lint(ok, "repro.models.layers"))
+
+    def test_pallas_call_without_interpret_is_lnt008(self):
+        src = "out = pl.pallas_call(_k, grid=(1,))(a)\n"
+        assert "LNT008" in rules(_lint(src))
+
+
+# ---------------------------------------------------------------------------
+# meta: the live repo is clean, end to end
+# ---------------------------------------------------------------------------
+
+
+class TestLiveRepoClean:
+    def test_run_all_no_findings(self):
+        findings, counts, elapsed = run_all()
+        assert [f.render() for f in findings] == []
+        assert set(counts) == {"contracts", "retrace", "qt_invariants",
+                               "lint"}
+        assert not has_errors(findings)
+        # render paths stay exercised even when clean
+        assert "findings" in render_json(findings, counts, elapsed)
+
+    def test_registry_metadata_complete(self):
+        for kind in registry.kinds():
+            meta = registry.meta(kind)
+            assert meta.vjp is not None, kind
+            assert meta.accum in registry.ACCUM_CONTRACTS, kind
+
+
+# ---------------------------------------------------------------------------
+# pinned regressions for what the analyzer flagged on the seed
+# ---------------------------------------------------------------------------
+
+
+class TestAccumDtypePolicyRegression:
+    """Every pallas-backed impl must refuse a non-f32 policy accum dtype
+    (the quant/conv paths silently ignored it before the analyzer)."""
+
+    BAD = ExecutionPolicy(backend="pallas", force_interpret=True,
+                          accum_dtype=jnp.bfloat16)
+
+    def _expect_raise(self, fn, *args):
+        with pytest.raises(NotImplementedError, match="accumulate"):
+            jax.make_jaxpr(fn)(*args)
+
+    def test_quant_gemm_checks_policy(self):
+        self._expect_raise(
+            lambda a, b, s: registry.get("quant_gemm")(
+                a, b, s, self.BAD, jnp.float32),
+            _i8(64, 64), _i8(64, 64), _f32(64))
+
+    def test_int4_gemm_checks_policy(self):
+        self._expect_raise(
+            lambda a, b, s: registry.get("int4_gemm")(
+                a, b, s, 64, self.BAD, jnp.float32),
+            _f32(64, 64), _i8(32, 64), _f32(64))
+
+    def test_fp8_gemm_checks_policy(self):
+        self._expect_raise(
+            lambda a, b, s: registry.get("fp8_gemm")(
+                a, b, s, self.BAD, jnp.float32),
+            jax.ShapeDtypeStruct((64, 64), jnp.float8_e4m3fn),
+            jax.ShapeDtypeStruct((64, 64), jnp.float8_e4m3fn), _f32(64))
+
+    def test_quant_conv2d_checks_policy(self):
+        self._expect_raise(
+            lambda x, w, s: registry.get("quant_conv2d")(
+                x, w, s, self.BAD, (1, 1), ((1, 1), (1, 1)), jnp.float32),
+            _i8(1, 8, 8, 16), _i8(3, 3, 16, 16), _f32(16))
+
+    def test_conv2d_checks_policy(self):
+        self._expect_raise(
+            lambda x, w: registry.get("conv2d")(
+                x, w, self.BAD, (1, 1), ((1, 1), (1, 1)), 1, jnp.float32),
+            _f32(1, 8, 8, 16), _f32(3, 3, 16, 16))
+
+    def test_dwconv_checks_policy(self):
+        self._expect_raise(
+            lambda x, w: registry.get("dwconv")(
+                x, w, self.BAD, (1, 1), ((1, 1), (1, 1)), jnp.float32),
+            _f32(1, 8, 8, 16), _f32(3, 3, 16))
+
+
+class TestStreamingOrderRegression:
+    """WS/IS used to accumulate into a revisited output block with the K
+    grid dim mid-grid -- non-consecutive revisits lose partial sums on real
+    TPU.  Pin both the numerics (multi-K-slab grids) and the structural
+    fix (per-slab partial planes: AXC004-clean)."""
+
+    @pytest.mark.parametrize("order", [Dataflow.WS, Dataflow.IS])
+    def test_multi_k_slab_numerics(self, order):
+        rng = np.random.default_rng(0)
+        a = rng.standard_normal((96, 200)).astype(np.float32)
+        b = rng.standard_normal((200, 80)).astype(np.float32)
+        out = np.asarray(axon_gemm(
+            jnp.asarray(a), jnp.asarray(b), block=(64, 64, 64),
+            order=order, interpret=True))
+        np.testing.assert_allclose(out, a @ b, rtol=2e-5, atol=2e-4)
+
+    @pytest.mark.parametrize("order", [Dataflow.WS, Dataflow.IS])
+    def test_streaming_orders_are_revisit_clean(self, order):
+        def fn(a, b):
+            return axon_gemm(a, b, block=(64, 64, 64), order=order,
+                             interpret=True)
+        eqn = _pallas_eqn(fn, _f32(192, 192), _f32(192, 192))
+        fs = contracts.check_pallas_eqn(eqn, "gemm", f"ws-is-{order}")
+        assert "AXC004" not in rules(fs)
+        assert not [f for f in fs if f.severity == "ERROR"]
+
+
+class TestOpsModuleDeprecation:
+    def test_importing_ops_warns(self):
+        with warnings.catch_warnings():
+            warnings.simplefilter("ignore", DeprecationWarning)
+            import repro.kernels.ops as ops_mod
+        with pytest.warns(DeprecationWarning, match="repro.axon"):
+            importlib.reload(ops_mod)
+
+    def test_no_in_repo_module_imports_ops(self):
+        fs = [f for f in lint.run() if f.rule == "LNT001"]
+        assert fs == []
