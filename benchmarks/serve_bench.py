@@ -1,17 +1,25 @@
-"""Mixed-length serving benchmark: wave vs continuous batching.
+"""Mixed-length serving benchmark: wave vs continuous vs paged batching.
 
 Runs the same interleaved short/long workload (the shape that triggers wave
-batching's head-of-line blocking) through ``WaveServeEngine`` and the
-continuous ``ServeEngine``, and emits ``BENCH_serve.json``:
+batching's head-of-line blocking) through ``WaveServeEngine``, the
+continuous ``ServeEngine``, and its paged-cache variants, and emits
+``BENCH_serve.json``:
 
   {"workload": {...},
-   "wave":       {"tokens_per_s", "wall_s", "p50_latency_s", "p99_latency_s"},
-   "continuous": {... + "steps"},
-   "speedup_tokens_per_s": ...}
+   "wave":        {"tokens_per_s", "wall_s", "p50/p99_latency_s"},
+   "continuous":  {... + "steps", "cache_bytes_per_slot"},
+   "paged":       {... + "pool" occupancy/prefix stats},
+   "paged_int8":  {...},
+   "paged_repeat": {...},    # same prompts again: prefix-cache hits
+   "speedup_tokens_per_s": ...,
+   "cache_reduction_int8_vs_dense_f32": ...}
 
 Latency is per-request completion time from benchmark start (all requests
 arrive at t=0).  For the wave engine, every request in a wave completes when
-its wave does, so latency is measured per wave group.
+its wave does, so latency is measured per wave group.  The paged rows share
+the continuous engine's scheduler -- any throughput delta is pure cache
+data movement -- and ``paged_repeat`` replays the identical prompt set so
+the prefix index converts prefill steps into page sharing.
 
 Usage:
   PYTHONPATH=src python benchmarks/serve_bench.py [--smoke] [--out PATH]
@@ -70,15 +78,24 @@ def run_continuous(engine: ServeEngine, reqs) -> dict:
     engine.generate(reqs)
     st = engine.last_stats
     lat = np.array([r["latency_s"] for r in st["requests"]])
-    return {
+    ttft = np.array([r["ttft_s"] for r in st["requests"]])
+    out = {
         "tokens": st["generated_tokens"],
         "wall_s": round(st["wall_s"], 4),
         "tokens_per_s": round(st["tokens_per_s"], 2),
+        "prefill_tokens_per_s": round(st["prefill_tokens_per_s"], 2),
         "p50_latency_s": round(float(np.percentile(lat, 50)), 4),
         "p99_latency_s": round(float(np.percentile(lat, 99)), 4),
+        "p99_ttft_s": round(float(np.percentile(ttft, 99)), 4),
         "steps": st["steps"],
         "prefill_chunk": engine.prefill_chunk,
+        "cache_bytes_per_slot": st["cache_bytes_per_slot"],
     }
+    if engine.pool is not None:
+        out["pool"] = engine.pool.stats()
+        out["prefix_hits"] = st["prefix_hits"]
+        out["prefix_hit_tokens"] = st["prefix_hit_tokens"]
+    return out
 
 
 def main() -> None:
@@ -89,6 +106,8 @@ def main() -> None:
     ap.add_argument("--requests", type=int, default=16)
     ap.add_argument("--slots", type=int, default=4)
     ap.add_argument("--prefill-chunk", type=int, default=16)
+    ap.add_argument("--page-size", type=int, default=4,
+                    help="tokens per KV-cache page for the paged rows")
     ap.add_argument("--out", default="benchmarks/results/BENCH_serve.json")
     args = ap.parse_args()
 
@@ -103,21 +122,60 @@ def main() -> None:
     reqs = build_workload(cfg, n_requests=n_req, short_len=short_len,
                           long_len=long_len, short_new=short_new,
                           long_new=long_new)
-    max_len = long_len + long_new + 1
+    # both cache layouts address the same token capacity: a page pool can
+    # only hold whole pages, so round max_len up to a page multiple
+    page_size = args.page_size
+    max_len = -(-(long_len + long_new + 1) // page_size) * page_size
 
     wave_engine = WaveServeEngine(params, cfg, batch_slots=args.slots,
                                   max_len=max_len)
     cont_engine = ServeEngine(params, cfg, batch_slots=args.slots,
                               max_len=max_len,
-                              prefill_chunk=args.prefill_chunk)
-    # warm both engines' jit caches (all step shapes) so compile time is
-    # excluded from the comparison
+                              prefill_chunk=args.prefill_chunk,
+                              cache_dtype="float32")
+    # memory/throughput rows: dense-equivalent pool, prefix index off (the
+    # apples-to-apples cache-bytes comparison)
+    paged_engine = ServeEngine(params, cfg, batch_slots=args.slots,
+                               max_len=max_len,
+                               prefill_chunk=args.prefill_chunk,
+                               paged=True, page_size=page_size,
+                               prefix_cache=False)
+    int8_engine = ServeEngine(params, cfg, batch_slots=args.slots,
+                              max_len=max_len,
+                              prefill_chunk=args.prefill_chunk,
+                              paged=True, page_size=page_size,
+                              cache_fmt="int8", prefix_cache=False)
+    # prefix row: 2x pool headroom so registered pages survive admission
+    # pressure instead of being evicted before they can ever hit
+    pps = -(-max_len // page_size)
+    prefix_engine = ServeEngine(params, cfg, batch_slots=args.slots,
+                                max_len=max_len,
+                                prefill_chunk=args.prefill_chunk,
+                                paged=True, page_size=page_size,
+                                cache_fmt="int8",
+                                pool_pages=2 * args.slots * pps)
+    # warm every engine's jit cache (all step shapes) so compile time is
+    # excluded from the comparison; the prefix engine warms on a disjoint
+    # prompt set so the measured runs start with a cold prefix index
     warm = reqs[: min(args.slots + 1, len(reqs))]
+    warm_paged = build_workload(cfg, n_requests=len(warm),
+                                short_len=short_len, long_len=long_len,
+                                short_new=short_new, long_new=long_new,
+                                seed=99)
     run_wave(wave_engine, warm)
     run_continuous(cont_engine, warm)
+    run_continuous(paged_engine, warm)
+    run_continuous(int8_engine, warm)
+    run_continuous(prefix_engine, warm_paged)
 
     wave = run_wave(wave_engine, reqs)
     cont = run_continuous(cont_engine, reqs)
+    paged = run_continuous(paged_engine, reqs)
+    paged_int8 = run_continuous(int8_engine, reqs)
+    # cold pass populates the prefix index, then the same prompts again:
+    # the index hands their pages back and prefill steps disappear
+    run_continuous(prefix_engine, reqs)
+    paged_repeat = run_continuous(prefix_engine, reqs)
     result = {
         "arch": cfg.name,
         "workload": {
@@ -128,8 +186,14 @@ def main() -> None:
         },
         "wave": wave,
         "continuous": cont,
+        "paged": paged,
+        "paged_int8": paged_int8,
+        "paged_repeat": paged_repeat,
         "speedup_tokens_per_s": round(
             cont["tokens_per_s"] / wave["tokens_per_s"], 3),
+        "cache_reduction_int8_vs_dense_f32": round(
+            cont["cache_bytes_per_slot"]
+            / paged_int8["cache_bytes_per_slot"], 2),
     }
     os.makedirs(os.path.dirname(args.out) or ".", exist_ok=True)
     with open(args.out, "w") as f:
@@ -138,7 +202,10 @@ def main() -> None:
     print(f"\nwrote {args.out}; continuous is "
           f"{result['speedup_tokens_per_s']:.2f}x wave tokens/s "
           f"(p99 latency {wave['p99_latency_s']:.2f}s -> "
-          f"{cont['p99_latency_s']:.2f}s)")
+          f"{cont['p99_latency_s']:.2f}s); int8 pages hold "
+          f"{result['cache_reduction_int8_vs_dense_f32']:.1f}x less cache "
+          f"per slot; repeat wave hit {paged_repeat.get('prefix_hits', 0)} "
+          f"prefixes ({paged_repeat.get('prefix_hit_tokens', 0)} tokens)")
 
 
 if __name__ == "__main__":

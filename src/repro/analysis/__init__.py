@@ -16,6 +16,12 @@ Four passes, one CLI (``python -m repro.analysis``):
                           (QTI*).
   * ``lint``           -- repo-specific AST rules (deprecated imports,
                           tracer branching, policy discipline) (LNT*).
+  * ``pagetable``      -- model-check the paged KV-cache allocator
+                          (``repro.serve.kvcache.PagePool``) through
+                          scripted admission/release/prefix/eviction
+                          scenarios: no page aliased by two writable
+                          slots, freed pages never referenced, refcounts
+                          consistent (PGT*).
 
 Everything traces abstractly -- no kernel executes -- so the whole suite
 runs in seconds and the CI gate exits nonzero on any ERROR finding.
@@ -28,7 +34,8 @@ from typing import Callable
 from repro.analysis.findings import (Finding, has_errors, render_json,
                                      render_text)
 
-PASSES: tuple[str, ...] = ("contracts", "retrace", "qt_invariants", "lint")
+PASSES: tuple[str, ...] = ("contracts", "retrace", "qt_invariants", "lint",
+                           "pagetable")
 
 
 def _pass_runner(name: str) -> Callable[[], list[Finding]]:
@@ -45,6 +52,9 @@ def _pass_runner(name: str) -> Callable[[], list[Finding]]:
     if name == "lint":
         from repro.analysis import lint
         return lint.run
+    if name == "pagetable":
+        from repro.analysis import pagetable
+        return pagetable.run
     raise ValueError(f"unknown pass {name!r}; have {PASSES}")
 
 

@@ -1,0 +1,197 @@
+"""Page-table invariant checker: model-check the serving page allocator.
+
+The paged KV cache (``repro.serve.kvcache``) splits responsibility: device
+pools hold the bytes, a host-side :class:`PagePool` decides which physical
+page backs which (slot, logical page).  A bug in that allocator corrupts
+cache contents *silently* -- a page aliased into two writable regions makes
+one request's decode read another's keys, which no shape check and no
+single-request test can see.  This pass drives the real allocator through
+scripted admission / release / prefix-reuse / eviction / exhaustion
+scenarios and audits ``PagePool.invariant_errors`` after every transition:
+
+  PGT001  a page aliased into a writable region (two writable slots, or
+          writable while frozen in the prefix index)
+  PGT002  a freed page still referenced
+  PGT003  refcounts inconsistent with the reference graph
+  PGT004  free-list corruption (duplicate or leaked page)
+  PGT005  a scripted scenario deviated from the allocator's contract
+          (prefix sharing, eviction under pressure, exhaustion recovery)
+
+Everything runs host-side on a few dozen pages -- no device memory, no
+tracing -- so the pass adds milliseconds to the analysis gate.
+"""
+from __future__ import annotations
+
+import random
+
+from repro.analysis.findings import Finding, error
+
+PASS = "pagetable"
+PAGE_SIZE = 4
+
+
+def _pool(n_pages: int):
+    from repro.serve.kvcache import PagePool
+    return PagePool(n_pages, PAGE_SIZE)
+
+
+def _audit(pool, ctx: str, out: list[Finding]) -> None:
+    for code, msg in pool.invariant_errors():
+        out.append(error(code, PASS, "PagePool", f"after {ctx}: {msg}"))
+
+
+def _deviation(out: list[Finding], ctx: str, msg: str) -> None:
+    out.append(error("PGT005", PASS, "PagePool", f"{ctx}: {msg}"))
+
+
+def _prompt(seed: int, n: int) -> tuple[int, ...]:
+    return tuple(seed * 100 + i for i in range(n))
+
+
+# ---------------------------------------------------------------------------
+# scenarios
+# ---------------------------------------------------------------------------
+
+
+def _scenario_churn() -> list[Finding]:
+    """Admit/release cycles with no prefix sharing: pages must round-trip
+    back to the free list with zero refcounts."""
+    out: list[Finding] = []
+    pool = _pool(16)
+    for round_ in range(3):
+        for slot in range(4):
+            pool.admit(slot, _prompt(slot, 5), 5 + slot, prefix=False)
+            _audit(pool, f"churn admit r{round_} s{slot}", out)
+        for slot in range(4):
+            pool.release(slot)
+            _audit(pool, f"churn release r{round_} s{slot}", out)
+    if pool.free_pages != pool.n_pages:
+        _deviation(out, "churn",
+                   f"{pool.n_pages - pool.free_pages} pages never returned "
+                   "to the free list after all slots released")
+    return out
+
+
+def _scenario_prefix_reuse() -> list[Finding]:
+    """A released prompt's full pages must be shared (frozen) on the next
+    admission of the same prompt, with writes isolated to fresh pages."""
+    out: list[Finding] = []
+    pool = _pool(16)
+    prompt = _prompt(7, 2 * PAGE_SIZE)            # exactly two full pages
+    pages0, shared0 = pool.admit(0, prompt, len(prompt) + 4)
+    if shared0 != 0:
+        _deviation(out, "prefix", "cold admission reported shared tokens")
+    _audit(pool, "prefix cold admit", out)
+    pool.release(0, prompt=prompt)
+    _audit(pool, "prefix register+release", out)
+
+    pages1, shared1 = pool.admit(1, prompt, len(prompt) + 4)
+    _audit(pool, "prefix warm admit", out)
+    # the last prompt token is always re-fed, so at most one full page of
+    # the two registers as shareable here
+    if shared1 != PAGE_SIZE:
+        _deviation(out, "prefix",
+                   f"warm admission shared {shared1} tokens, expected "
+                   f"{PAGE_SIZE} (longest full-page prefix short of the "
+                   "last prompt token)")
+    elif pages1[0] != pages0[0]:
+        _deviation(out, "prefix",
+                   "warm admission did not reuse the registered page")
+    # a concurrent admission of the same prompt shares the same frozen page
+    pages2, shared2 = pool.admit(2, prompt, len(prompt) + 4)
+    _audit(pool, "prefix concurrent admit", out)
+    if shared2 and pages2[0] != pages1[0]:
+        _deviation(out, "prefix",
+                   "two live slots sharing one prefix got different pages")
+    pool.release(1, prompt=prompt)
+    pool.release(2, prompt=prompt)
+    _audit(pool, "prefix all released", out)
+    return out
+
+
+def _scenario_eviction() -> list[Finding]:
+    """Under pool pressure the LRU prefix entries must be evicted -- and
+    only entries, never a live slot's pages."""
+    out: list[Finding] = []
+    pool = _pool(8)
+    # fill the index: 3 distinct 1-page prompts, registered then released
+    for i in range(3):
+        prompt = _prompt(i, PAGE_SIZE)
+        pool.admit(0, prompt, len(prompt) + 1)
+        pool.release(0, prompt=prompt)
+        _audit(pool, f"eviction seed {i}", out)
+    # demand more pages than remain free: evictions must make room
+    free_before = pool.free_pages
+    pages, _ = pool.admit(1, _prompt(9, 4), free_before * PAGE_SIZE
+                          + PAGE_SIZE)
+    _audit(pool, "eviction pressure admit", out)
+    if pool.evictions == 0:
+        _deviation(out, "eviction",
+                   "admission beyond the free-page count succeeded without "
+                   "evicting any prefix entry")
+    pool.release(1)
+    _audit(pool, "eviction release", out)
+    return out
+
+
+def _scenario_exhaustion() -> list[Finding]:
+    """True exhaustion (live slots own everything) must raise -- and leave
+    the allocator exactly as it was."""
+    out: list[Finding] = []
+    pool = _pool(4)
+    pool.admit(0, _prompt(1, 4), 4 * PAGE_SIZE)   # slot 0 takes every page
+    _audit(pool, "exhaustion full admit", out)
+    rc_before = pool.refcount.copy()
+    try:
+        pool.admit(1, _prompt(2, 4), PAGE_SIZE)
+    except RuntimeError:
+        pass
+    else:
+        _deviation(out, "exhaustion",
+                   "admission succeeded with every page owned by a live "
+                   "slot")
+    _audit(pool, "exhaustion failed admit", out)
+    if (pool.refcount != rc_before).any():
+        _deviation(out, "exhaustion",
+                   "a failed admission changed page refcounts")
+    pool.release(0)
+    _audit(pool, "exhaustion release", out)
+    return out
+
+
+def _scenario_fuzz() -> list[Finding]:
+    """Deterministic random churn over an oversubscribed pool: admissions,
+    prefix reuse, releases, and pressure-driven evictions interleaved."""
+    out: list[Finding] = []
+    pool = _pool(12)
+    rng = random.Random(0)
+    prompts = [_prompt(i, rng.randrange(1, 3 * PAGE_SIZE)) for i in range(6)]
+    live: dict[int, tuple[int, ...]] = {}
+    for step in range(200):
+        slot = rng.randrange(4)
+        if slot in live:
+            prompt = live.pop(slot)
+            # half the releases register the prompt's pages for reuse
+            pool.release(slot, prompt=prompt if rng.random() < 0.5 else None)
+        else:
+            prompt = rng.choice(prompts)
+            need = len(prompt) + rng.randrange(1, 8)
+            try:
+                pool.admit(slot, prompt, need)
+                live[slot] = prompt
+            except RuntimeError:
+                pass                       # oversubscribed: acceptable
+        if pool.invariant_errors():
+            _audit(pool, f"fuzz step {step}", out)
+            break                          # first corruption is enough
+    for slot in sorted(live):
+        pool.release(slot, prompt=live[slot])
+    _audit(pool, "fuzz drain", out)
+    return out
+
+
+def run() -> list[Finding]:
+    """Model-check the page allocator through every scripted scenario."""
+    return (_scenario_churn() + _scenario_prefix_reuse()
+            + _scenario_eviction() + _scenario_exhaustion()
+            + _scenario_fuzz())

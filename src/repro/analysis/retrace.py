@@ -26,6 +26,9 @@ which shows up as a multi-second latency spike the tests never catch
               instead of once at construction
       RTR005  VisionEngine.infer decides the lane padding without calling
               step_batch
+      RTR006  the paged-cache page table passed into the step as a keyword
+              (it must ride the caches pytree: a table baked in at trace
+              time would retrace the chunk step on every admission)
 """
 from __future__ import annotations
 
@@ -140,10 +143,31 @@ def _module_ast(mod) -> tuple[ast.Module, str]:
         return ast.parse(f.read()), path
 
 
+def _page_table_kwargs(tree: ast.AST) -> list[int]:
+    lines = []
+    for node in ast.walk(tree):
+        if isinstance(node, ast.Call):
+            for kw in node.keywords:
+                if kw.arg == "page_table":
+                    lines.append(node.lineno)
+    return lines
+
+
 def _check_serve_ast() -> list[Finding]:
     from repro.serve import engine as se
     tree, path = _module_ast(se)
     out: list[Finding] = []
+    # the page table is dynamic per-admission state: inside serve/engine.py
+    # it must only ever reach the jitted step THROUGH the caches pytree --
+    # any `page_table=` keyword here means a concrete table was captured at
+    # trace time, and every admission would retrace the step
+    for line in _page_table_kwargs(tree):
+        out.append(error(
+            "RTR006", PASS, "serve.engine",
+            "page_table passed as a keyword; the paged step must take the "
+            "table through the caches pytree (see models.transformer."
+            "init_caches) or every admission retraces",
+            path=path, line=line))
     for node in ast.walk(tree):
         if not (isinstance(node, ast.ClassDef)
                 and node.name == "ServeEngine"):

@@ -18,6 +18,7 @@ import jax.numpy as jnp
 from repro import axon
 from repro.kernels.flash_attention import int8_flash_attention_fwd
 from repro.parallel.sharding import constrain, constrain_priority
+from repro.serve import kvcache as KV
 
 Params = dict[str, Any]
 
@@ -294,6 +295,8 @@ def attention_fwd(
     cache: Params | None = None,   # cached: {"k","v","len"} (len per slot)
     exact_causal: bool = False,
     valid: jax.Array | None = None,  # (B, S) live-token mask (cached path)
+    page_table: jax.Array | None = None,  # (B, pages) paged-cache table
+    paged=None,                    # kvcache.PagedCacheConfig (static)
 ) -> tuple[jax.Array, Params | None]:
     B, S, D = x.shape
     h, kv, dh = cfg.n_heads, cfg.n_kv, cfg.d_head
@@ -315,6 +318,32 @@ def attention_fwd(
     if cache is None:
         out = flash_attention(q, k, v, causal=True, window=window,
                               exact_causal=exact_causal)
+    elif paged is not None and "k_pages" in cache:
+        # paged path: the slot's logical KV sequence lives in pool pages
+        # addressed through ``page_table``; reads gather (and dequantize)
+        # a contiguous per-slot view, writes scatter (and quantize) this
+        # chunk's rows through the same table.  A rolling SWA buffer spans
+        # ``seq_pages(window)`` whole pages -- the modulo runs over the
+        # page-aligned span so page arithmetic stays uniform; the masks in
+        # cached_attention bound visibility to the true window either way.
+        pos0 = cache["len"]                                   # (B,)
+        n_buf = paged.seq_pages(window)
+        size = n_buf * paged.page_size
+        v_mask = valid if valid is not None else jnp.ones((B, S), bool)
+        k_old = KV.read_seq(cache, "k", page_table, n_buf, dtype=paged.dtype)
+        v_old = KV.read_seq(cache, "v", page_table, n_buf, dtype=paged.dtype)
+        k_in = k.astype(paged.dtype)
+        v_in = v.astype(paged.dtype)
+        out = cached_attention(q, k_old, v_old, k_in, v_in,
+                               q_pos=positions, k_valid=v_mask, start=pos0,
+                               window=window)
+        idx = positions % size if window else positions       # (B, S) logical
+        new_cache = dict(cache)
+        new_cache.update(KV.write_seq(cache, "k", page_table, k_in, idx,
+                                      v_mask, paged.fmt))
+        new_cache.update(KV.write_seq(cache, "v", page_table, v_in, idx,
+                                      v_mask, paged.fmt))
+        new_cache["len"] = pos0 + v_mask.sum(-1).astype(pos0.dtype)
     else:
         # slot-cached path: decode (S=1) or a teacher-forced prefill chunk.
         # ``len`` is per-slot; writes for padded tokens are dropped so

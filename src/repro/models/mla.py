@@ -23,6 +23,7 @@ from repro.models.layers import (
     rmsnorm,
 )
 from repro.parallel.sharding import constrain
+from repro.serve import kvcache as KV
 
 
 def init_mla(key, cfg, dtype=jnp.float32) -> Params:
@@ -63,7 +64,9 @@ def _project_qkv_latent(p: Params, x: jax.Array, cfg, positions):
 def mla_fwd(p: Params, x: jax.Array, cfg, *, positions,
             exact_causal: bool = False,
             cache: Params | None = None,
-            valid: jax.Array | None = None) -> tuple[jax.Array, Params | None]:
+            valid: jax.Array | None = None,
+            page_table: jax.Array | None = None,
+            paged=None) -> tuple[jax.Array, Params | None]:
     B, S, D = x.shape
     h = cfg.n_heads
     dn, dr, dv = cfg.nope_head, cfg.rope_head, cfg.v_head
@@ -86,14 +89,33 @@ def mla_fwd(p: Params, x: jax.Array, cfg, *, positions,
         # padded tokens' writes dropped (mode="drop"), so inactive serving
         # lanes cannot pollute live ones.  ``positions`` is (B, S) absolute.
         pos0 = cache["len"]                                   # (B,)
-        S_c = cache["c"].shape[1]
         v_mask = valid if valid is not None else jnp.ones((B, S), bool)
-        wpos = jnp.where(v_mask, positions, S_c)              # OOB -> dropped
-        b_idx = jnp.arange(B)[:, None]
-        c_cache = cache["c"].at[b_idx, wpos].set(
-            c.astype(cache["c"].dtype), mode="drop")
-        pe_cache = cache["k_pe"].at[b_idx, wpos].set(
-            k_pe[:, :, 0].astype(cache["k_pe"].dtype), mode="drop")
+        if paged is not None and "c_pages" in cache:
+            # paged latent cache: scatter (quantize) this chunk's rows
+            # FIRST -- absorbed attention reads the post-write cache (the
+            # ``j <= positions`` mask includes self) -- then gather the
+            # per-slot contiguous view back through the page table.
+            n_buf = paged.seq_pages(0)                        # MLA: no SWA
+            S_c = n_buf * paged.page_size
+            paged_cache = dict(cache)
+            paged_cache.update(KV.write_seq(cache, "c", page_table, c,
+                                            positions, v_mask, paged.fmt))
+            paged_cache.update(KV.write_seq(cache, "k_pe", page_table,
+                                            k_pe[:, :, 0], positions, v_mask,
+                                            paged.fmt))
+            c_cache = KV.read_seq(paged_cache, "c", page_table, n_buf,
+                                  dtype=paged.dtype)
+            pe_cache = KV.read_seq(paged_cache, "k_pe", page_table, n_buf,
+                                   dtype=paged.dtype)
+        else:
+            paged_cache = None
+            S_c = cache["c"].shape[1]
+            wpos = jnp.where(v_mask, positions, S_c)          # OOB -> dropped
+            b_idx = jnp.arange(B)[:, None]
+            c_cache = cache["c"].at[b_idx, wpos].set(
+                c.astype(cache["c"].dtype), mode="drop")
+            pe_cache = cache["k_pe"].at[b_idx, wpos].set(
+                k_pe[:, :, 0].astype(cache["k_pe"].dtype), mode="drop")
         w_kv = p["kv_b"].reshape(kvl, h, dn + dv)
         w_k, w_v = w_kv[..., :dn], w_kv[..., dn:]
         # fold k_nope projection into q:  (B,S,h,dn) x (kvl,h,dn) -> (B,S,h,kvl)
@@ -116,8 +138,11 @@ def mla_fwd(p: Params, x: jax.Array, cfg, *, positions,
         out = axon.einsum("bthc,chv->bthv", ctx.astype(w_v.dtype), w_v,
                          preferred_element_type=jnp.float32)
         out = out.astype(x.dtype)
-        new_cache = {"c": c_cache, "k_pe": pe_cache,
-                     "len": pos0 + v_mask.sum(-1).astype(pos0.dtype)}
+        new_len = pos0 + v_mask.sum(-1).astype(pos0.dtype)
+        if paged_cache is not None:
+            new_cache = {**paged_cache, "len": new_len}
+        else:
+            new_cache = {"c": c_cache, "k_pe": pe_cache, "len": new_len}
 
     out = out.reshape(B, S, h * dv)
     out = axon.einsum("bse,ed->bsd", out, p["wo"])

@@ -29,6 +29,7 @@ from repro.models import mla as MLA
 from repro.models import moe as MOE
 from repro.models import ssm as SSM
 from repro.parallel.sharding import constrain
+from repro.serve import kvcache as KV
 
 Params = dict[str, Any]
 
@@ -70,18 +71,21 @@ def init_shared_attn(key, cfg: ModelConfig) -> Params:
     }
 
 
-def _attn_apply(p, h, cfg, stage, positions, cache, exact_causal, valid=None):
+def _attn_apply(p, h, cfg, stage, positions, cache, exact_causal, valid=None,
+                page_table=None, paged=None):
     if stage.attn == "mla":
         return MLA.mla_fwd(p, h, cfg, positions=positions,
                            exact_causal=exact_causal, cache=cache,
-                           valid=valid)
+                           valid=valid, page_table=page_table, paged=paged)
     return L.attention_fwd(p, h, cfg, positions=positions,
                            window=stage.window, cache=cache,
-                           exact_causal=exact_causal, valid=valid)
+                           exact_causal=exact_causal, valid=valid,
+                           page_table=page_table, paged=paged)
 
 
 def block_fwd(p: Params, x: jax.Array, cfg: ModelConfig, stage: StageCfg, *,
-              positions, cache=None, exact_causal=False, valid=None):
+              positions, cache=None, exact_causal=False, valid=None,
+              page_table=None, paged=None):
     """-> (x, new_cache, aux_loss).
 
     With ``cache`` the block consumes S >= 1 teacher-forced tokens per slot
@@ -94,7 +98,8 @@ def block_fwd(p: Params, x: jax.Array, cfg: ModelConfig, stage: StageCfg, *,
         h = L.rmsnorm(p["ln1"], x)
         a, new_attn_cache = _attn_apply(p["attn"], h, cfg, stage, positions,
                                         None if cache is None else cache["attn"],
-                                        exact_causal, valid)
+                                        exact_causal, valid,
+                                        page_table, paged)
         x = x + a
         h = L.rmsnorm(p["ln2"], x)
         if stage.block == "moe":
@@ -195,7 +200,7 @@ def stage_fwd(p: Params, x, cfg: ModelConfig, stage: StageCfg, *,
 
 
 def stage_decode(p: Params, x, caches, cfg: ModelConfig, stage: StageCfg, *,
-                 positions, valid=None):
+                 positions, valid=None, page_table=None, paged=None):
     every = stage.shared_attn_every
     shared_cache = caches.get("shared") if every else None
 
@@ -212,7 +217,8 @@ def stage_decode(p: Params, x, caches, cfg: ModelConfig, stage: StageCfg, *,
                                  lambda a: a, (h, sc))
         h, new_cache, _ = block_fwd(layer_p, h, cfg, stage,
                                     positions=positions, cache=cache,
-                                    valid=valid)
+                                    valid=valid, page_table=page_table,
+                                    paged=paged)
         return (h, sc), new_cache
 
     (x, shared_cache), new_layer_caches = jax.lax.scan(
@@ -225,9 +231,22 @@ def stage_decode(p: Params, x, caches, cfg: ModelConfig, stage: StageCfg, *,
 
 
 def init_stage_caches(cfg: ModelConfig, stage: StageCfg, batch: int,
-                      max_len: int, dtype=jnp.bfloat16) -> Params:
+                      max_len: int, dtype=jnp.bfloat16,
+                      paged: KV.PagedCacheConfig | None = None) -> Params:
     def one_layer():
         if stage.block in ("dense", "moe"):
+            if paged is not None:
+                if stage.attn == "mla":
+                    feats = {"c": (cfg.kv_lora,), "k_pe": (cfg.rope_head,)}
+                    # the latent stays at the cache dtype: MLA's cache IS
+                    # the compression (kv_lora + rope_head per token), and
+                    # int8 error in c re-expands through the up-projection
+                    # into every head's K and V (see init_paged_seq_cache)
+                    return {"attn": KV.init_paged_seq_cache(
+                        feats, batch, paged, float_names=frozenset({"c"}))}
+                feats = {"k": (cfg.n_kv, cfg.d_head),
+                         "v": (cfg.n_kv, cfg.d_head)}
+                return {"attn": KV.init_paged_seq_cache(feats, batch, paged)}
             if stage.attn == "mla":
                 return {"attn": MLA.init_mla_cache(cfg, batch, max_len, dtype)}
             return {"attn": L.init_attention_cache(
@@ -371,12 +390,20 @@ def loss_fn(params: Params, batch: dict, cfg: ModelConfig
 
 
 def init_caches(cfg: ModelConfig, batch: int, max_len: int,
-                dtype=jnp.bfloat16) -> Params:
-    return {
+                dtype=jnp.bfloat16,
+                paged: KV.PagedCacheConfig | None = None) -> Params:
+    caches = {
         "pos": jnp.zeros((batch,), jnp.int32),   # per-slot position counters
-        "stages": [init_stage_caches(cfg, s, batch, max_len, dtype)
+        "stages": [init_stage_caches(cfg, s, batch, max_len, dtype, paged)
                    for s in cfg.stages],
     }
+    if paged is not None:
+        # slot -> physical page table, owned by the host-side PagePool
+        # mirror; rides the caches pytree so it is always a step ARGUMENT
+        # (a captured table would retrace the step on every admission)
+        caches[KV.PAGE_TABLE_KEY] = jnp.zeros(
+            (batch, paged.pages_per_slot), jnp.int32)
+    return caches
 
 
 def _head_logits(params: Params, x: jax.Array, cfg: ModelConfig) -> jax.Array:
@@ -387,7 +414,9 @@ def _head_logits(params: Params, x: jax.Array, cfg: ModelConfig) -> jax.Array:
 
 
 def decode_step(params: Params, caches: Params, batch: dict,
-                cfg: ModelConfig) -> tuple[jax.Array, Params]:
+                cfg: ModelConfig,
+                paged: KV.PagedCacheConfig | None = None
+                ) -> tuple[jax.Array, Params]:
     """One-token decode: batch['tokens'] (B, 1) (or 'embeds' (B, 1, D))."""
     if cfg.frontend == "audio":
         x = batch["embeds"].astype(cfg.cdtype)
@@ -395,19 +424,22 @@ def decode_step(params: Params, caches: Params, batch: dict,
         x = jnp.take(params["embed"], batch["tokens"], axis=0).astype(cfg.cdtype)
     x = constrain(x, "batch", None, None)
     positions = caches["pos"][:, None]                  # (B, 1) per slot
+    page_table = caches.get(KV.PAGE_TABLE_KEY)
     new_stage_caches = []
     for p_s, s, c_s in zip(params["stages"], cfg.stages, caches["stages"]):
-        x, nc = stage_decode(p_s, x, c_s, cfg, s, positions=positions)
+        x, nc = stage_decode(p_s, x, c_s, cfg, s, positions=positions,
+                             page_table=page_table, paged=paged)
         new_stage_caches.append(nc)
     x = L.rmsnorm(params["final_norm"], x)
-    return _head_logits(params, x, cfg), {
-        "pos": caches["pos"] + 1,
-        "stages": new_stage_caches,
-    }
+    new_caches = {"pos": caches["pos"] + 1, "stages": new_stage_caches}
+    if page_table is not None:
+        new_caches[KV.PAGE_TABLE_KEY] = page_table
+    return _head_logits(params, x, cfg), new_caches
 
 
 def prefill_step(params: Params, caches: Params, batch: dict,
-                 valid: jax.Array, cfg: ModelConfig
+                 valid: jax.Array, cfg: ModelConfig,
+                 paged: KV.PagedCacheConfig | None = None
                  ) -> tuple[jax.Array, Params]:
     """Teacher-forced chunk step: batch['tokens'] (B, C) (or 'embeds'
     (B, C, D)); ``valid`` (B, C) marks each slot's live tokens and must be a
@@ -435,16 +467,20 @@ def prefill_step(params: Params, caches: Params, batch: dict,
     valid = valid.astype(bool)
     C = x.shape[1]
     positions = caches["pos"][:, None] + jnp.arange(C)[None, :]   # (B, C)
+    page_table = caches.get(KV.PAGE_TABLE_KEY)
     new_stage_caches = []
     for p_s, s, c_s in zip(params["stages"], cfg.stages, caches["stages"]):
         x, nc = stage_decode(p_s, x, c_s, cfg, s, positions=positions,
-                             valid=valid)
+                             valid=valid, page_table=page_table, paged=paged)
         new_stage_caches.append(nc)
     x = L.rmsnorm(params["final_norm"], x)
-    return _head_logits(params, x, cfg), {
+    new_caches = {
         "pos": caches["pos"] + valid.sum(-1).astype(jnp.int32),
         "stages": new_stage_caches,
     }
+    if page_table is not None:
+        new_caches[KV.PAGE_TABLE_KEY] = page_table
+    return _head_logits(params, x, cfg), new_caches
 
 
 # attention-content leaves reset_slots leaves in place: with the slot's
@@ -455,7 +491,8 @@ def prefill_step(params: Params, caches: Params, batch: dict,
 _STALE_OK = ("k", "v", "c", "k_pe")
 
 
-def reset_slots(caches: Params, mask: jax.Array) -> Params:
+def reset_slots(caches: Params, mask: jax.Array,
+                lens: jax.Array | None = None) -> Params:
     """Clear per-slot cache state where ``mask`` (B,) is True.
 
     Zeroes position counters and SSM/conv state along the slot (batch) axis
@@ -463,15 +500,28 @@ def reset_slots(caches: Params, mask: jax.Array) -> Params:
     freed slot can be re-admitted without leaking the previous request's
     state.  KV/latent contents are NOT rewritten (O(layers * batch) instead
     of a full cache sweep per admission): stale entries are masked out by
-    the zeroed counters until overwritten."""
+    the zeroed counters until overwritten.
+
+    Paged-cache leaves are left untouched entirely: the pool tensors have
+    no slot axis (a freed slot's pages return to the host-side allocator)
+    and the page table is rewritten by the engine's host mirror.  With
+    ``lens`` (B,) given, reset slots' position counters start there instead
+    of 0 -- the prefix-cache hit path, where shared pages already hold the
+    slot's first ``lens[b]`` tokens."""
     def _clear(path, leaf):
         names = [getattr(k, "key", None) for k in path]
         name = next((n for n in reversed(names) if isinstance(n, str)), None)
+        if name == KV.PAGE_TABLE_KEY or (
+                isinstance(name, str)
+                and name.endswith(KV.PAGED_LEAF_SUFFIXES)):
+            return leaf
         if name in _STALE_OK:
             return leaf
         axis = 1 if "layers" in names else 0
-        m = mask.reshape((1,) * axis + (-1,)
-                         + (1,) * (leaf.ndim - axis - 1))
+        shape = (1,) * axis + (-1,) + (1,) * (leaf.ndim - axis - 1)
+        m = mask.reshape(shape)
+        if lens is not None and name in ("pos", "len"):
+            return jnp.where(m, lens.reshape(shape).astype(leaf.dtype), leaf)
         return jnp.where(m, jnp.zeros((), leaf.dtype), leaf)
 
     return jax.tree_util.tree_map_with_path(_clear, caches)

@@ -1,1 +1,6 @@
-"""Serving: cached decode step + batched engine."""
+"""Serving: cached decode step + batched engine + paged KV-cache pool."""
+from repro.serve.kvcache import (PagedCacheConfig, PagePool, pytree_bytes,
+                                 summarize_pytree, supports_prefix_reuse)
+
+__all__ = ["PagePool", "PagedCacheConfig", "pytree_bytes",
+           "summarize_pytree", "supports_prefix_reuse"]

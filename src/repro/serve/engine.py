@@ -35,6 +35,7 @@ import numpy as np
 from repro import axon, quant
 from repro.configs.base import ModelConfig
 from repro.models import transformer as T
+from repro.serve import kvcache as KV
 
 QUEUE_POLICIES = ("fifo", "sjf")
 
@@ -88,7 +89,8 @@ def make_serve_step(cfg: ModelConfig, *, temperature: float = 0.0,
 
 
 def make_chunk_step(cfg: ModelConfig, *, temperature: float = 0.0,
-                    policy: axon.ExecutionPolicy | None = None):
+                    policy: axon.ExecutionPolicy | None = None,
+                    paged: KV.PagedCacheConfig | None = None):
     """The continuous engine's unified step.
 
     (params, caches, tokens (B, C), valid (B, C), rng) ->
@@ -98,13 +100,18 @@ def make_chunk_step(cfg: ModelConfig, *, temperature: float = 0.0,
     position -- for a slot finishing its prompt that is its first generated
     token; for a decoding slot it is the next one.  Slots with no valid
     tokens are untouched (their sampled token is garbage the engine ignores).
+
+    With ``paged`` the caches pytree holds pool tensors plus the device
+    page table (still ONE fixed-shape step: the table is an argument, so
+    admissions rewrite it without retracing).
     """
     pol = policy if policy is not None else axon.current_policy()
 
     def chunk_step(params, caches, tokens, valid, rng):
         with axon.policy(pol):
             logits, caches = T.prefill_step(params, caches,
-                                            {"tokens": tokens}, valid, cfg)
+                                            {"tokens": tokens}, valid, cfg,
+                                            paged=paged)
             last = jnp.maximum(valid.sum(-1) - 1, 0)
             sel = jnp.take_along_axis(
                 logits, last[:, None, None], axis=1)[:, 0]      # (B, vocab)
@@ -161,8 +168,34 @@ class ServeEngine:
                       cache) through the int8 flash kernel with per-head
                       scales -- kernel backends only (xla stays float).
 
+    Cache knobs:
+      cache_dtype   : KV-cache storage dtype.  None defaults to the model's
+                      activation dtype (``cfg.cdtype``), or bfloat16 when
+                      serving under a reduced-precision policy (quantized
+                      weights / attn_int8) -- the cache no longer silently
+                      doubles to f32 bytes for quantized serving.
+      paged         : store the cache in a shared fixed-size page pool with
+                      a slot->page table instead of a dense per-slot
+                      ``max_len`` buffer (``repro.serve.kvcache``).
+      page_size     : tokens per page (paged only).
+      pool_pages    : physical pages in the pool; None sizes it dense-
+                      equivalent (``batch_slots * ceil(max_len/page_size)``)
+                      -- undersize it to oversubscribe slots against real
+                      usage.
+      cache_fmt     : None = float payload at ``cache_dtype``; "int8"/"fp8"
+                      = quantize-on-write pages (per-token-per-head scales,
+                      ~4x below a dense f32 cache) with dequant-on-read.
+      prefix_cache  : hash completed prompts and share their full pages
+                      with later requests (copy-on-write by construction),
+                      skipping prefill for the shared tokens.  Auto-
+                      disabled for architectures whose sequence state is
+                      not fully paged (SWA / SSM / hybrid / embedding
+                      frontends).
+
     ``generate`` returns outputs in request order; ``last_stats`` holds
-    per-request latency/token counts for the most recent call.
+    per-request latency/token counts for the most recent call, with queue
+    wait (``queue_s``), time-to-first-token measured from admission
+    (``ttft_s``), and decode vs prefill throughput reported separately.
     """
 
     def __init__(self, params, cfg: ModelConfig, *, batch_slots: int = 8,
@@ -170,11 +203,17 @@ class ServeEngine:
                  temperature: float = 0.0, seed: int = 0,
                  policy: axon.ExecutionPolicy | None = None,
                  queue_policy: str = "fifo",
-                 quantized: bool | str = False, attn_int8: bool = False):
+                 quantized: bool | str = False, attn_int8: bool = False,
+                 cache_dtype=None, paged: bool = False, page_size: int = 16,
+                 pool_pages: int | None = None, cache_fmt: str | None = None,
+                 prefix_cache: bool = True):
         if queue_policy not in QUEUE_POLICIES:
             raise ValueError(
                 f"queue_policy must be one of {QUEUE_POLICIES}, "
                 f"got {queue_policy!r}")
+        if cache_fmt is not None and not paged:
+            raise ValueError("cache_fmt (quantized cache pages) requires "
+                             "paged=True; dense caches take cache_dtype")
         if quantized and not quant.is_quantized(params):
             fmt = "int8" if quantized is True else str(quantized)
             params = quant.quantize_lm_weights(params, fmt=fmt)
@@ -205,10 +244,43 @@ class ServeEngine:
         self.prefill_chunk = max(1, min([prefill_chunk, *windows]))
         self.queue_policy = queue_policy
         self.rng = jax.random.PRNGKey(seed)
+        # cache storage dtype: the activation dtype by default; reduced-
+        # precision serving (quantized weights / int8 attention) drops to
+        # bf16 -- the attention path already re-quantizes or accumulates in
+        # fp32, so f32 cache bytes bought nothing
+        pol_now = policy if policy is not None else axon.current_policy()
+        reduced = pol_now.precision != "float" or pol_now.attn_int8
+        if cache_dtype is None:
+            cache_dtype = jnp.bfloat16 if reduced else cfg.cdtype
+        self.cache_dtype = jnp.dtype(cache_dtype)
+        self.paged: KV.PagedCacheConfig | None = None
+        self.pool: KV.PagePool | None = None
+        if paged:
+            pps = -(-max_len // int(page_size))
+            n_pool = int(pool_pages) if pool_pages is not None \
+                else batch_slots * pps
+            self.paged = KV.PagedCacheConfig(
+                page_size=int(page_size), pages_per_slot=pps,
+                pool_pages=n_pool,
+                fmt=None if cache_fmt in (None, "float") else cache_fmt,
+                dtype_name=self.cache_dtype.name)
+            self.pool = KV.PagePool(n_pool, int(page_size))
+            self.prefix_cache = bool(prefix_cache) \
+                and KV.supports_prefix_reuse(cfg)
+            # host mirror of the device page table; rewritten at admission
+            self._pt_host = np.zeros((batch_slots, pps), np.int32)
+            # pools + prefix contents persist ACROSS generate() calls --
+            # that is the whole point of the prefix index
+            self._caches = T.init_caches(cfg, batch=batch_slots,
+                                         max_len=max_len,
+                                         dtype=self.cache_dtype,
+                                         paged=self.paged)
+        else:
+            self.prefix_cache = False
         # donate the caches operand: the scatter updates and slot resets run
         # in place instead of copying the whole KV pytree every step
         self._step = jax.jit(make_chunk_step(cfg, temperature=temperature,
-                                             policy=policy),
+                                             policy=policy, paged=self.paged),
                              donate_argnums=(1,))
         self._reset = jax.jit(T.reset_slots, donate_argnums=(0,))
         self.last_stats: dict[str, Any] | None = None
@@ -231,19 +303,48 @@ class ServeEngine:
                     f"max_len={self.max_len}")
 
     def _admit(self, slots, pending, requests, caches, now):
-        """Backfill free slots from the pending queue (resets their cache)."""
+        """Backfill free slots from the pending queue (resets their cache).
+
+        Paged engines additionally consult the page pool: admission takes
+        pages (sharing any registered prompt prefix), rewrites the slot's
+        row of the host page-table mirror, and starts the slot's position
+        counters at the shared token count so prefill skips straight past
+        the tokens the shared pages already hold."""
         reset = np.zeros((self.batch_slots,), bool)
+        lens = np.zeros((self.batch_slots,), np.int32)
         for b in range(self.batch_slots):
             if slots[b].state != "free" or not pending:
                 continue
             idx = pending.popleft()
             req = requests[idx]
+            shared = 0
+            if self.pool is not None:
+                need = len(req.prompt) + req.max_new_tokens
+                try:
+                    pages, shared = self.pool.admit(
+                        b, tuple(req.prompt), need, prefix=self.prefix_cache)
+                except RuntimeError:
+                    # pool pressure: requeue and retry when a slot frees --
+                    # unless nothing is running, in which case the request
+                    # can never fit and the exhaustion is fatal
+                    if all(s.state == "free" for s in slots):
+                        raise
+                    pending.appendleft(idx)
+                    break
+                self._pt_host[b, :] = 0
+                self._pt_host[b, : len(pages)] = pages
             slots[b] = _Slot(state="prefill", req_idx=idx, req=req,
                              prompt=np.asarray(req.prompt, np.int32),
-                             t_admit=now)
+                             fed=shared, t_admit=now)
+            lens[b] = shared
             reset[b] = True
         if reset.any():
-            caches = self._reset(caches, jnp.asarray(reset))
+            if self.pool is not None:
+                caches[KV.PAGE_TABLE_KEY] = jnp.asarray(self._pt_host)
+                caches = self._reset(caches, jnp.asarray(reset),
+                                     jnp.asarray(lens))
+            else:
+                caches = self._reset(caches, jnp.asarray(reset))
         return caches
 
     def generate(self, requests: list[Request]) -> list[list[int]]:
@@ -257,9 +358,14 @@ class ServeEngine:
         slots = [_Slot() for _ in range(B)]
         outputs: list[list[int] | None] = [None] * len(requests)
         per_req: list[dict | None] = [None] * len(requests)
-        caches = T.init_caches(self.cfg, batch=B, max_len=self.max_len,
-                               dtype=jnp.float32)
+        if self.pool is not None:
+            caches = self._caches      # pool + prefix pages persist per call
+            hits0, hit_tok0 = self.pool.hits, self.pool.hit_tokens
+        else:
+            caches = T.init_caches(self.cfg, batch=B, max_len=self.max_len,
+                                   dtype=self.cache_dtype)
         steps = 0
+        n_prefill = 0
 
         while pending or any(s.state != "free" for s in slots):
             caches = self._admit(slots, pending, requests, caches,
@@ -283,6 +389,7 @@ class ServeEngine:
                                      sub)
             nxt = np.asarray(nxt)
             steps += 1
+            n_prefill += sum(fed)
             now = time.perf_counter() - t0
             for b, s in enumerate(slots):
                 if s.state == "prefill":
@@ -300,10 +407,24 @@ class ServeEngine:
                     s.last_tok = tok
                 s.state = "decode"
                 if mnew == 0 or tok == s.req.eos_id or len(s.out) >= mnew:
+                    if self.pool is not None:
+                        # freed pages return to the pool; with prefix
+                        # caching the full prompt pages freeze into the
+                        # index first so later requests can share them
+                        self.pool.release(
+                            b, prompt=tuple(s.req.prompt)
+                            if self.prefix_cache else None)
+                        self._pt_host[b, :] = 0
                     outputs[s.req_idx] = s.out
                     per_req[s.req_idx] = {
                         "prompt_len": len(s.prompt),
                         "new_tokens": len(s.out),
+                        # queue wait vs compute, reported separately: all
+                        # requests arrive at t=0, so t_admit IS the queue
+                        # wait and ttft is measured from admission
+                        "queue_s": s.t_admit,
+                        "ttft_s": s.t_first - s.t_admit,
+                        "decode_s": now - s.t_first,
                         "admit_s": s.t_admit,
                         "first_token_s": s.t_first,
                         "done_s": now,
@@ -319,7 +440,19 @@ class ServeEngine:
             "wall_s": wall,
             "generated_tokens": n_tok,
             "tokens_per_s": n_tok / wall if wall > 0 else 0.0,
+            # prompt tokens teacher-forced this call, reported apart from
+            # generation throughput so mixed workloads stop under-reporting
+            "prefill_tokens": n_prefill,
+            "prefill_tokens_per_s": n_prefill / wall if wall > 0 else 0.0,
+            "cache_bytes": KV.pytree_bytes(caches),
+            "cache_bytes_per_slot": KV.pytree_bytes(caches) // B,
         }
+        if self.pool is not None:
+            self._caches = caches
+            self.last_stats["pool"] = self.pool.stats()
+            self.last_stats["prefix_hits"] = self.pool.hits - hits0
+            self.last_stats["prefix_hit_tokens"] = \
+                self.pool.hit_tokens - hit_tok0
         return outputs
 
 
@@ -335,11 +468,14 @@ class WaveServeEngine:
 
     def __init__(self, params, cfg: ModelConfig, *, batch_slots: int = 8,
                  max_len: int = 512, temperature: float = 0.0, seed: int = 0,
-                 policy: axon.ExecutionPolicy | None = None):
+                 policy: axon.ExecutionPolicy | None = None,
+                 cache_dtype=None):
         self.params = params
         self.cfg = cfg
         self.batch_slots = batch_slots
         self.max_len = max_len
+        self.cache_dtype = jnp.dtype(cfg.cdtype if cache_dtype is None
+                                     else cache_dtype)
         self.rng = jax.random.PRNGKey(seed)
         self._step = jax.jit(make_serve_step(cfg, temperature=temperature,
                                              policy=policy))
@@ -353,7 +489,7 @@ class WaveServeEngine:
     def _wave(self, reqs: list[Request]) -> list[list[int]]:
         B = len(reqs)
         caches = T.init_caches(self.cfg, batch=B, max_len=self.max_len,
-                               dtype=jnp.float32)
+                               dtype=self.cache_dtype)
         prompt_len = max(len(r.prompt) for r in reqs)
         # left-pad prompts with EOS so all slots stay aligned
         prompts = np.full((B, prompt_len), reqs[0].eos_id, np.int32)

@@ -1,0 +1,500 @@
+"""Paged, quantized KV-cache subsystem.
+
+The dense serving caches give every slot its own ``max_len`` buffer in the
+cache dtype -- at session scale the single biggest memory-traffic sink, and
+exactly the operand-reuse story the paper makes for im2col: stop re-paying
+DRAM for state you already hold.  This module replaces slot-dense storage
+with a **fixed-size page pool** plus a slot->page table, and optionally
+stores the payload **quantized** (int8 or fp8 e4m3, per-token-per-head
+scales -- the negative-axis/keepdims layout discipline of
+``repro.quant.QuantizedTensor`` carried over to streaming cache writes):
+
+  * the physical allocation is ``pool_pages x page_size`` tokens per cache
+    tensor, shared by every slot; a slot consumes only the pages its request
+    actually needs (``ceil((prompt + max_new) / page_size)``), so thousands
+    of mostly-short sessions stop paying for ``max_len`` each;
+  * payloads are int8/fp8 at 1 B/elem plus an f32 scale per token-head
+    (``1/d_head`` extra bytes), ~3-4x below a dense f32 cache at equal
+    capacity -- dequant-on-read keeps every float attention path (and the
+    int8 flash kernel's per-head requantization) working unchanged;
+  * **prefix reuse**: completed prompts register their full pages under a
+    rolling hash; admission shares matching pages copy-on-write-by-
+    construction (shared pages are frozen -- writes only ever land on pages
+    the slot allocated fresh, because sharing is page-aligned and writes are
+    append-only), so a repeated system prompt costs zero prefill steps.
+
+Two halves:
+
+  * **device side** -- pure functions used inside the jitted step:
+    :func:`gather_pages` / :func:`scatter_pages` move token rows between the
+    ``(P, page_size, ...)`` pools and ``(B, S, ...)`` views through the page
+    table; :func:`read_seq` / :func:`write_seq` add the quantize-on-write /
+    dequant-on-read layer.  The page table is a *step argument* (it rides
+    the caches pytree), never a captured constant -- a captured table would
+    retrace the step on every admission (``repro.analysis.retrace`` RTR006
+    pins this).
+  * **host side** -- :class:`PagePool`, the scheduler-owned allocator:
+    free-list + refcounts + the prefix index (LRU, evicted under pool
+    pressure).  It never touches device memory; the engine mirrors its
+    decisions into the device page table.  ``invariant_errors`` is the
+    machine-checkable contract (no page aliased by two writable slots,
+    freed pages never referenced, refcounts consistent) that
+    ``repro.analysis.pagetable`` model-checks in CI.
+
+Deviation noted: under ``attn_int8`` the decode kernel still derives its own
+per-head scales from the dequantized page stream instead of consuming the
+per-token page scales directly -- folding per-token K/V scales into the
+int8 QK^T/PV products is the documented kernel follow-up.
+"""
+from __future__ import annotations
+
+import collections
+import dataclasses
+import hashlib
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.quant.qtensor import FMT_MAX, FP8_DTYPE, to_fp8
+
+_EPS = 1e-12
+
+# payload formats the pools support ("fp8" still carries an f32 scale so a
+# channel's abs-max lands on e4m3's top of range, like quantize_weight)
+CACHE_FMTS = ("int8", "fp8")
+
+
+@dataclasses.dataclass(frozen=True)
+class PagedCacheConfig:
+    """Static (trace-time) description of a paged cache.
+
+    ``page_size``      : tokens per page.
+    ``pages_per_slot`` : logical pages a slot's table addresses
+                         (``ceil(max_len / page_size)``).
+    ``pool_pages``     : physical pages per pool tensor.
+    ``fmt``            : ``None`` (float payload at ``dtype``), ``"int8"``,
+                         or ``"fp8"`` -- quantize-on-write payload format.
+    ``dtype_name``     : logical float dtype reads restore (and the storage
+                         dtype when ``fmt`` is None).
+    """
+
+    page_size: int
+    pages_per_slot: int
+    pool_pages: int
+    fmt: str | None = None
+    dtype_name: str = "float32"
+
+    def __post_init__(self) -> None:
+        if self.page_size < 1 or self.pages_per_slot < 1 or self.pool_pages < 1:
+            raise ValueError(f"degenerate paged cache config {self}")
+        if self.fmt is not None and self.fmt not in CACHE_FMTS:
+            raise ValueError(
+                f"cache fmt must be None or one of {CACHE_FMTS}, "
+                f"got {self.fmt!r}")
+
+    @property
+    def dtype(self):
+        return jnp.dtype(self.dtype_name)
+
+    @property
+    def store_dtype(self):
+        """Physical pool dtype: int8 / fp8 payload, or the float dtype."""
+        if self.fmt == "int8":
+            return jnp.int8
+        if self.fmt == "fp8":
+            return FP8_DTYPE
+        return self.dtype
+
+    @property
+    def max_tokens(self) -> int:
+        """Logical token capacity a slot's table addresses."""
+        return self.pages_per_slot * self.page_size
+
+    def seq_pages(self, window: int = 0) -> int:
+        """Logical pages backing one cache buffer: the full table for dense
+        attention, the rolling-window span for SWA."""
+        if window:
+            return min(self.pages_per_slot,
+                       -(-min(window, self.max_tokens) // self.page_size))
+        return self.pages_per_slot
+
+
+def supports_prefix_reuse(cfg) -> bool:
+    """Prefix pages can stand in for prefill only when the ENTIRE per-slot
+    sequence state lives in paged buffers: full-attention dense/moe stages
+    (rolling SWA windows and recurrent SSM/conv state are not addressable
+    by position) and a token frontend (the prefix hash keys on token ids)."""
+    return (cfg.frontend == "none"
+            and all(s.block in ("dense", "moe") and not s.window
+                    and not s.shared_attn_every for s in cfg.stages))
+
+
+# ---------------------------------------------------------------------------
+# device side: quantize / gather / scatter
+# ---------------------------------------------------------------------------
+
+
+def quantize_tokens(x: jax.Array, fmt: str) -> tuple[jax.Array, jax.Array]:
+    """Per-token symmetric quantization over the trailing feature axis.
+
+    ``x`` (..., d) float -> (payload (..., d) int8|fp8, scale (...) f32).
+    One scale per token row (per head when a head axis precedes ``d``), the
+    streaming analog of ``quantize_weight``'s per-channel scales.
+    """
+    xf = x.astype(jnp.float32)
+    amax = jnp.max(jnp.abs(xf), axis=-1)
+    scale = jnp.maximum(amax, _EPS) / FMT_MAX[fmt]
+    q = xf / scale[..., None]
+    if fmt == "fp8":
+        return to_fp8(q), scale
+    qmax = FMT_MAX[fmt]
+    return (jnp.clip(jnp.round(q), -qmax, qmax).astype(jnp.int8), scale)
+
+
+def dequantize_tokens(payload: jax.Array, scale: jax.Array,
+                      dtype) -> jax.Array:
+    """Inverse of :func:`quantize_tokens` (restores ``dtype``)."""
+    return (payload.astype(jnp.float32) * scale[..., None]).astype(dtype)
+
+
+def gather_pages(pool: jax.Array, page_table: jax.Array) -> jax.Array:
+    """(P, page_size, ...) pool + (B, n) page table -> (B, n * page_size, ...)
+    contiguous per-slot view (the dequant-on-read fallback's first half)."""
+    P, ps = pool.shape[0], pool.shape[1]
+    gathered = jnp.take(pool, page_table, axis=0)     # (B, n, ps, ...)
+    B, n = page_table.shape
+    return gathered.reshape((B, n * ps) + pool.shape[2:])
+
+
+def scatter_pages(pool: jax.Array, page_table: jax.Array, values: jax.Array,
+                  idx: jax.Array, valid: jax.Array) -> jax.Array:
+    """Write token rows ``values`` (B, T, ...) at logical token index
+    ``idx`` (B, T) through the page table; invalid lanes are dropped (their
+    writes target an out-of-bounds physical page)."""
+    P, ps = pool.shape[0], pool.shape[1]
+    page = jnp.minimum(idx // ps, page_table.shape[1] - 1)
+    off = idx % ps
+    phys = jnp.take_along_axis(page_table, page, axis=1, mode="clip")
+    phys = jnp.where(valid, phys, P)                  # OOB -> dropped
+    return pool.at[phys, off].set(values.astype(pool.dtype), mode="drop")
+
+
+def read_seq(cache: dict, name: str, page_table: jax.Array, n_pages: int,
+             *, dtype) -> jax.Array:
+    """Gather cache tensor ``name`` into a contiguous (B, n_pages * ps, ...)
+    float view, dequantizing quantized payloads on the way out."""
+    pt = page_table[:, :n_pages]
+    vals = gather_pages(cache[name + "_pages"], pt)
+    scales = cache.get(name + "_scales")
+    if scales is None:
+        return vals.astype(dtype)
+    return dequantize_tokens(vals, gather_pages(scales, pt), dtype)
+
+
+def write_seq(cache: dict, name: str, page_table: jax.Array,
+              values: jax.Array, idx: jax.Array, valid: jax.Array,
+              fmt: str | None) -> dict:
+    """Scatter this step's token rows into the pools (quantize-on-write when
+    the cache carries scale pools); returns the updated leaves only."""
+    pool = cache[name + "_pages"]
+    scales = cache.get(name + "_scales")
+    if scales is None:
+        return {name + "_pages": scatter_pages(pool, page_table, values,
+                                               idx, valid)}
+    payload, scale = quantize_tokens(values, fmt)
+    return {
+        name + "_pages": scatter_pages(pool, page_table, payload, idx, valid),
+        name + "_scales": scatter_pages(scales, page_table, scale, idx, valid),
+    }
+
+
+def init_paged_seq_cache(feats: dict[str, tuple[int, ...]], batch: int,
+                         pcfg: PagedCacheConfig,
+                         float_names: frozenset[str] = frozenset()) -> dict:
+    """Build one layer's paged cache: a ``(pool_pages, page_size) + feat``
+    payload pool per tensor (plus an f32 scale pool when quantized) and the
+    per-slot ``len`` counter.  ``feats`` maps tensor name -> per-token
+    feature shape, e.g. ``{"k": (n_kv, d_head), "v": (n_kv, d_head)}``.
+
+    Tensors named in ``float_names`` stay float even under a quantized
+    ``fmt`` (no scale pool; reads/writes pass through).  MLA uses this for
+    the compressed latent ``c``: that tensor IS the architecture's cache
+    compression already, and int8 error in it re-expands through the
+    up-projection into every head's K and V -- flipping greedy near-ties
+    for a handful of saved bytes -- so only the rope key quantizes."""
+    out: dict = {}
+    for name, feat in feats.items():
+        quantize = pcfg.fmt is not None and name not in float_names
+        out[name + "_pages"] = jnp.zeros(
+            (pcfg.pool_pages, pcfg.page_size) + tuple(feat),
+            pcfg.store_dtype if quantize else pcfg.dtype)
+        if quantize:
+            out[name + "_scales"] = jnp.zeros(
+                (pcfg.pool_pages, pcfg.page_size) + tuple(feat[:-1]),
+                jnp.float32)
+    out["len"] = jnp.zeros((batch,), jnp.int32)
+    return out
+
+
+# leaf names reset_slots must leave untouched: pool tensors have no slot
+# axis (stale rows are unreachable once the slot counters reset), and the
+# page table is owned by the host-side scheduler mirror
+PAGED_LEAF_SUFFIXES = ("_pages", "_scales")
+PAGE_TABLE_KEY = "page_table"
+
+
+# ---------------------------------------------------------------------------
+# byte accounting (the maxtext summarize_pytree_data shape)
+# ---------------------------------------------------------------------------
+
+
+def pytree_bytes(tree) -> int:
+    """Total bytes of every array leaf (device-resident cache footprint)."""
+    return sum(int(np.prod(l.shape)) * jnp.dtype(l.dtype).itemsize
+               for l in jax.tree.leaves(tree))
+
+
+def summarize_pytree(tree, top: int = 8) -> dict:
+    """{"total_bytes", "total_gb", "leaves": [(path, shape, dtype, bytes)]}
+    sorted largest first -- the per-tensor cache accounting rows."""
+    rows = []
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        nbytes = int(np.prod(leaf.shape)) * jnp.dtype(leaf.dtype).itemsize
+        rows.append((jax.tree_util.keystr(path), tuple(leaf.shape),
+                     jnp.dtype(leaf.dtype).name, nbytes))
+    rows.sort(key=lambda r: -r[-1])
+    total = sum(r[-1] for r in rows)
+    return {"total_bytes": total, "total_gb": total / 1024 ** 3,
+            "leaves": rows[:top]}
+
+
+# ---------------------------------------------------------------------------
+# host side: the page allocator + prefix index
+# ---------------------------------------------------------------------------
+
+
+class PagePool:
+    """Host-side page allocator with refcounts and a prefix index.
+
+    The pool never touches device memory: it decides which physical page
+    backs which (slot, logical page) and the engine mirrors that into the
+    device page table.  Pages are refcounted because the prefix index and
+    multiple slots may share one page; a page returns to the free list only
+    at refcount zero.
+
+    Sharing discipline (what makes copy-on-write trivial): only *full*
+    prompt pages are ever registered or shared, and cache writes are
+    append-only at positions >= the shared token count -- so a shared page
+    is frozen by construction and a writable page always has exactly one
+    owner.  ``invariant_errors`` checks exactly that, plus refcount/free-
+    list consistency; ``repro.analysis.pagetable`` drives it over scripted
+    admission/release/eviction scenarios as a CI gate.
+    """
+
+    def __init__(self, n_pages: int, page_size: int):
+        if n_pages < 1 or page_size < 1:
+            raise ValueError(
+                f"PagePool needs n_pages/page_size >= 1, got "
+                f"{n_pages}/{page_size}")
+        self.n_pages = n_pages
+        self.page_size = page_size
+        self.refcount = np.zeros(n_pages, np.int32)
+        self._free: collections.deque[int] = collections.deque(range(n_pages))
+        self._slot_pages: dict[int, list[int]] = {}
+        self._slot_shared: dict[int, int] = {}      # leading shared pages
+        # prefix key -> frozen page ids, insertion order = LRU order
+        self._prefix: collections.OrderedDict[bytes, tuple[int, ...]] = \
+            collections.OrderedDict()
+        self.hits = 0
+        self.misses = 0
+        self.hit_tokens = 0
+        self.evictions = 0
+
+    # -------------------------------------------------------------- prefix
+    @staticmethod
+    def _key(tokens) -> bytes:
+        return hashlib.sha1(np.asarray(tokens, np.int64).tobytes()).digest()
+
+    def match_prefix(self, prompt) -> tuple[tuple[int, ...], int]:
+        """Longest registered page-aligned prefix of ``prompt``, capped at
+        ``len(prompt) - 1`` tokens: the last prompt token is always re-fed
+        so the finishing prefill step has logits to sample from."""
+        ps = self.page_size
+        for k in range((len(prompt) - 1) // ps, 0, -1):
+            ent = self._prefix.get(self._key(prompt[: k * ps]))
+            if ent is not None:
+                self._prefix.move_to_end(self._key(prompt[: k * ps]))
+                return ent, k * ps
+        return (), 0
+
+    def register_prefix(self, prompt, pages) -> int:
+        """Freeze the full prompt pages of a finished request under every
+        page-aligned prefix key (so future lookups find the longest match
+        directly).  Returns the number of new index entries."""
+        ps = self.page_size
+        added = 0
+        for k in range(1, len(prompt) // ps + 1):
+            key = self._key(prompt[: k * ps])
+            if key in self._prefix:
+                self._prefix.move_to_end(key)
+                continue
+            ent = tuple(pages[:k])
+            for p in ent:
+                self._ref(p)
+            self._prefix[key] = ent
+            added += 1
+        return added
+
+    def _evict_one(self) -> bool:
+        if not self._prefix:
+            return False
+        _, ent = self._prefix.popitem(last=False)      # least recently used
+        for p in ent:
+            self._deref(p)
+        self.evictions += 1
+        return True
+
+    # --------------------------------------------------------------- pages
+    def _ref(self, p: int) -> None:
+        self.refcount[p] += 1
+
+    def _deref(self, p: int) -> None:
+        self.refcount[p] -= 1
+        if self.refcount[p] < 0:
+            raise RuntimeError(f"refcount underflow on page {p}")
+        if self.refcount[p] == 0:
+            self._free.append(p)
+
+    def alloc(self, n: int) -> list[int]:
+        """Take ``n`` free pages, evicting LRU prefix entries under
+        pressure; raises RuntimeError when the pool is truly exhausted."""
+        while len(self._free) < n and self._evict_one():
+            pass
+        if len(self._free) < n:
+            raise RuntimeError(
+                f"page pool exhausted: need {n}, have {len(self._free)} "
+                f"of {self.n_pages}")
+        return [self._free.popleft() for _ in range(n)]
+
+    def admit(self, slot: int, prompt, need_tokens: int, *,
+              prefix: bool = True) -> tuple[list[int], int]:
+        """Assign pages for a request needing ``need_tokens`` positions.
+
+        Returns ``(page_ids, shared_tokens)``: the slot's logical->physical
+        page list (shared prefix pages first, then fresh pages) and how many
+        leading prompt tokens the shared pages already hold."""
+        if slot in self._slot_pages:
+            raise ValueError(f"slot {slot} already holds pages")
+        shared, stok = self.match_prefix(prompt) if prefix else ((), 0)
+        for p in shared:
+            self._ref(p)
+        n_total = -(-need_tokens // self.page_size)
+        try:
+            fresh = self.alloc(n_total - len(shared))
+        except RuntimeError:
+            for p in shared:
+                self._deref(p)
+            raise
+        for p in fresh:
+            self._ref(p)
+        self._slot_pages[slot] = list(shared) + fresh
+        self._slot_shared[slot] = len(shared)
+        if stok:
+            self.hits += 1
+            self.hit_tokens += stok
+        else:
+            self.misses += 1
+        return self._slot_pages[slot], stok
+
+    def release(self, slot: int, prompt=None) -> None:
+        """Return a finished slot's pages; with ``prompt`` given, its full
+        prompt pages are first frozen into the prefix index."""
+        pages = self._slot_pages.pop(slot)
+        self._slot_shared.pop(slot)
+        if prompt is not None:
+            self.register_prefix(prompt, pages)
+        for p in pages:
+            self._deref(p)
+
+    def slot_pages(self, slot: int) -> tuple[int, ...]:
+        return tuple(self._slot_pages.get(slot, ()))
+
+    # --------------------------------------------------------------- state
+    @property
+    def free_pages(self) -> int:
+        return len(self._free)
+
+    def stats(self) -> dict:
+        lookups = self.hits + self.misses
+        return {
+            "pages": self.n_pages,
+            "page_size": self.page_size,
+            "free_pages": self.free_pages,
+            "occupancy": 1.0 - self.free_pages / self.n_pages,
+            "prefix_entries": len(self._prefix),
+            "prefix_hits": self.hits,
+            "prefix_hit_tokens": self.hit_tokens,
+            "prefix_hit_rate": self.hits / lookups if lookups else 0.0,
+            "evictions": self.evictions,
+        }
+
+    def invariant_errors(self) -> list[tuple[str, str]]:
+        """Machine-checkable allocator contract; empty = consistent.
+
+        Codes: PGT001 a page aliased into a writable region, PGT002 a freed
+        page still referenced, PGT003 refcount inconsistent with the
+        reference graph, PGT004 free-list corruption (duplicate or leaked
+        page)."""
+        errs: list[tuple[str, str]] = []
+        expected = np.zeros(self.n_pages, np.int64)
+        owners: dict[int, list[int]] = collections.defaultdict(list)
+        writable: dict[int, int] = {}
+        for s, pages in self._slot_pages.items():
+            sh = self._slot_shared.get(s, 0)
+            for i, p in enumerate(pages):
+                expected[p] += 1
+                owners[p].append(s)
+                if i >= sh:
+                    if p in writable:
+                        errs.append((
+                            "PGT001",
+                            f"page {p} is in the writable region of slots "
+                            f"{writable[p]} and {s}"))
+                    writable[p] = s
+        frozen = set()
+        for ent in self._prefix.values():
+            for p in ent:
+                expected[p] += 1
+                frozen.add(p)
+        for p, s in writable.items():
+            if p in frozen:
+                errs.append((
+                    "PGT001",
+                    f"page {p} is writable by slot {s} but frozen in the "
+                    "prefix index"))
+            if len(owners[p]) > 1:
+                errs.append((
+                    "PGT001",
+                    f"page {p} is writable by slot {s} but referenced by "
+                    f"slots {sorted(owners[p])}"))
+        for p in np.nonzero(expected != self.refcount)[0]:
+            errs.append((
+                "PGT003",
+                f"page {int(p)} refcount {int(self.refcount[p])} != "
+                f"{int(expected[p])} references held"))
+        free = list(self._free)
+        free_set = set(free)
+        if len(free) != len(free_set):
+            errs.append(("PGT004", "free list holds duplicate pages"))
+        for p in free:
+            if expected[p] or self.refcount[p] > 0:
+                errs.append((
+                    "PGT002", f"free page {p} is still referenced"))
+        for p in range(self.n_pages):
+            if self.refcount[p] == 0 and p not in free_set:
+                errs.append((
+                    "PGT004",
+                    f"page {p} has refcount 0 but is not on the free list "
+                    "(leaked)"))
+        return errs

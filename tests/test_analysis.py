@@ -376,7 +376,7 @@ class TestLiveRepoClean:
         findings, counts, elapsed = run_all()
         assert [f.render() for f in findings] == []
         assert set(counts) == {"contracts", "retrace", "qt_invariants",
-                               "lint"}
+                               "lint", "pagetable"}
         assert not has_errors(findings)
         # render paths stay exercised even when clean
         assert "findings" in render_json(findings, counts, elapsed)

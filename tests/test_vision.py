@@ -123,6 +123,34 @@ class TestEngine:
             np.testing.assert_allclose(o["det2"], np.asarray(want["det2"][i]),
                                        rtol=1e-5, atol=1e-5)
 
+    def test_letterbox_compiles_outside_timed_loop(self, zoo):
+        """Regression: first-seen letterbox geometries compiled INSIDE the
+        timed loop, so a wave's p99 charged one-time compilation to serving
+        latency.  _warm_geometries pre-traces every (shape, dtype) before
+        the clock starts -- the timed loop must add no new traces, and two
+        identical waves must report comparable latency percentiles."""
+        cfg, params, _ = zoo["mobilenet-v1"]
+        rng = np.random.default_rng(3)
+        # odd geometries + mixed input dtypes (the jit retraces per dtype)
+        shapes = [(17, 31, 3), (23, 9, 3), (17, 31, 3)]
+        reqs = [ImageRequest(image=rng.normal(size=s).astype(np.float32))
+                for s in shapes]
+        reqs.append(ImageRequest(
+            image=(rng.random((17, 31, 3)) * 255).astype(np.uint8)))
+        eng = VisionEngine(params, cfg, batch_slots=4)
+        eng.warmup()
+        assert eng._warm_geometries(reqs) == 3   # 2 shapes x dtypes seen
+        before = preprocess._letterbox_jit.cache_info()
+        eng.infer(reqs)
+        p99_first = eng.last_stats["p99_latency_s"]
+        after = preprocess._letterbox_jit.cache_info()
+        assert after.currsize == before.currsize  # no trace in the loop
+        eng.infer(reqs)
+        p99_second = eng.last_stats["p99_latency_s"]
+        # both waves run warm: neither should carry a compile-sized spike
+        # (a compile is ~100x a warm step; 10x absorbs scheduler jitter)
+        assert p99_first < 10 * p99_second + 0.25
+
     def test_bad_image_shape_rejected(self, zoo):
         """Wrong channel count / rank is always rejected; wrong spatial size
         only when letterboxing is disabled (it is admitted otherwise)."""
