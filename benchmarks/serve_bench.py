@@ -11,6 +11,7 @@ continuous ``ServeEngine``, and its paged-cache variants, and emits
    "paged":       {... + "pool" occupancy/prefix stats},
    "paged_int8":  {...},
    "paged_repeat": {...},    # same prompts again: prefix-cache hits
+   "obs": {...},             # tokens/s with telemetry off vs on + overhead %
    "speedup_tokens_per_s": ...,
    "cache_reduction_int8_vs_dense_f32": ...}
 
@@ -176,6 +177,28 @@ def main() -> None:
     # the index hands their pages back and prefill steps disappear
     run_continuous(prefix_engine, reqs)
     paged_repeat = run_continuous(prefix_engine, reqs)
+    # telemetry overhead row: the warmed continuous engine again, obs off
+    # vs obs on (full optrace ring + span recording + metric publication);
+    # best-of-3 per mode, since a smoke run's wall is tens of ms and a
+    # single pass would measure scheduler noise, not instrumentation cost
+    from repro.obs import optrace
+    obs_off = max(
+        (run_continuous(cont_engine, reqs)["tokens_per_s"]
+         for _ in range(3)))
+    optrace.enable()
+    try:
+        obs_on = max(
+            (run_continuous(cont_engine, reqs)["tokens_per_s"]
+             for _ in range(3)))
+        spans_recorded = len(optrace.spans())
+    finally:
+        optrace.disable()
+    obs_row = {
+        "tokens_per_s_off": obs_off,
+        "tokens_per_s_on": obs_on,
+        "overhead_pct": round(100.0 * (1.0 - obs_on / obs_off), 2),
+        "spans_recorded": spans_recorded,
+    }
     result = {
         "arch": cfg.name,
         "workload": {
@@ -189,6 +212,7 @@ def main() -> None:
         "paged": paged,
         "paged_int8": paged_int8,
         "paged_repeat": paged_repeat,
+        "obs": obs_row,
         "speedup_tokens_per_s": round(
             cont["tokens_per_s"] / wave["tokens_per_s"], 3),
         "cache_reduction_int8_vs_dense_f32": round(
@@ -205,7 +229,8 @@ def main() -> None:
           f"{cont['p99_latency_s']:.2f}s); int8 pages hold "
           f"{result['cache_reduction_int8_vs_dense_f32']:.1f}x less cache "
           f"per slot; repeat wave hit {paged_repeat.get('prefix_hits', 0)} "
-          f"prefixes ({paged_repeat.get('prefix_hit_tokens', 0)} tokens)")
+          f"prefixes ({paged_repeat.get('prefix_hit_tokens', 0)} tokens); "
+          f"obs overhead {obs_row['overhead_pct']:+.1f}% tokens/s")
 
 
 if __name__ == "__main__":

@@ -294,9 +294,91 @@ def _lnt008_pallas_interpret_kwarg(path: str, tree: ast.Module,
     return out
 
 
+_LNT009_CLOCKS = ("time", "perf_counter", "monotonic", "process_time")
+
+
+def _jit_traced_fn_defs(tree: ast.Module) -> list[ast.FunctionDef]:
+    """Functions that execute under a jit tracer: defs passed to
+    ``jax.jit`` (directly or through ``functools.partial``), plus every
+    inner def of a ``make_*step`` factory (the engines' step builders --
+    their closures are exactly what gets traced)."""
+    jitted: set[str] = set()
+    for node in ast.walk(tree):
+        if isinstance(node, ast.Call) \
+                and _dotted(node.func) in ("jax.jit", "jit") and node.args:
+            arg = node.args[0]
+            if isinstance(arg, ast.Name):
+                jitted.add(arg.id)
+            elif isinstance(arg, ast.Call) and arg.args \
+                    and isinstance(arg.args[0], ast.Name):
+                jitted.add(arg.args[0].id)
+    defs = [n for n in ast.walk(tree)
+            if isinstance(n, ast.FunctionDef) and n.name in jitted]
+    for node in ast.walk(tree):
+        if isinstance(node, ast.FunctionDef) and node.name.startswith("make_") \
+                and node.name.endswith("step"):
+            defs.extend(n for n in ast.walk(node)
+                        if isinstance(n, ast.FunctionDef) and n is not node)
+    return defs
+
+
+def _lnt009_host_calls_in_traced(path: str, tree: ast.Module,
+                                 modname: str) -> list[Finding]:
+    """No host clocks or ``repro.obs`` calls inside kernel bodies or
+    jit-traced step functions: both run under a tracer, where a
+    ``time.perf_counter()`` stamps trace time (once, at compile -- a
+    constant thereafter) and a metrics/optrace call is silently dropped by
+    the tracer guard (or worse, records per-trace instead of per-step)."""
+    # aliases bound to host clocks and to repro.obs in this module
+    clock_names: set[str] = set()
+    obs_roots: set[str] = set()
+    for node in ast.walk(tree):
+        if isinstance(node, ast.Import):
+            for a in node.names:
+                if a.name == "time":
+                    clock_names.update(
+                        f"{a.asname or 'time'}.{c}" for c in _LNT009_CLOCKS)
+                elif a.name == "repro.obs" or a.name.startswith("repro.obs."):
+                    obs_roots.add((a.asname or a.name).split(".")[0])
+        elif isinstance(node, ast.ImportFrom) and node.module:
+            if node.module == "time":
+                clock_names.update(a.asname or a.name for a in node.names
+                                   if a.name in _LNT009_CLOCKS)
+            elif node.module == "repro.obs" \
+                    or node.module.startswith("repro.obs."):
+                obs_roots.update(a.asname or a.name for a in node.names)
+            elif node.module == "repro":
+                obs_roots.update(a.asname or a.name for a in node.names
+                                 if a.name == "obs")
+    out = []
+    traced = {id(d): d for d in _kernel_fn_defs(tree)}
+    traced.update((id(d), d) for d in _jit_traced_fn_defs(tree))
+    for fn in traced.values():
+        for node in ast.walk(fn):
+            if not isinstance(node, ast.Call):
+                continue
+            name = _dotted(node.func) or ""
+            if name in clock_names:
+                out.append(error(
+                    "LNT009", PASS, modname,
+                    f"host clock {name}() inside traced function "
+                    f"{fn.name!r}: under jit this stamps trace time once "
+                    "at compile, not per step -- time on the host side",
+                    path=path, line=node.lineno))
+            elif name.split(".")[0] in obs_roots:
+                out.append(error(
+                    "LNT009", PASS, modname,
+                    f"repro.obs call {name}() inside traced function "
+                    f"{fn.name!r}: the tracer guard drops it silently -- "
+                    "record from the host loop instead",
+                    path=path, line=node.lineno))
+    return out
+
+
 _FILE_RULES = (_lnt001_ops_import, _lnt002_tracer_branch, _lnt003_host_ops,
                _lnt005_interpret_literal, _lnt006_raw_einsum,
-               _lnt007_kernel_imports, _lnt008_pallas_interpret_kwarg)
+               _lnt007_kernel_imports, _lnt008_pallas_interpret_kwarg,
+               _lnt009_host_calls_in_traced)
 
 
 def check_file(path: str, tree: ast.Module, modname: str) -> list[Finding]:

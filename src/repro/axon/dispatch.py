@@ -44,7 +44,10 @@ import jax.numpy as jnp
 from repro.axon import registry
 from repro.axon.policy import ExecutionPolicy, current_policy
 from repro.core.dataflows import Dataflow, GemmShape
-from repro.core.mapper import select_tpu_blocking
+from repro.core.energy_model import dram_energy_joules
+from repro.core.mapper import (mapper_cache_info, modeled_traffic,
+                               select_tpu_blocking)
+from repro.obs import optrace as _obs
 from repro.kernels.axon_gemm import axon_gemm
 from repro.kernels.dwconv import dwconv
 from repro.kernels.gemv import gemv as gemv_kernel
@@ -522,7 +525,13 @@ def _quant_einsum(spec: str, a, b, pol: ExecutionPolicy,
                       preferred_element_type=preferred_element_type)
     qt = b
     _qcal.record(qt, a)                    # no-op outside calibration scopes
-    route, _ = quant_route(spec, a, qt, pol, quantized)
+    route, route_reason = quant_route(spec, a, qt, pol, quantized)
+    if _obs.enabled():
+        _obs_record_einsum(
+            spec, a.shape, qt.shape, a.dtype, pol,
+            plan_contraction(spec, tuple(a.shape), tuple(qt.shape)),
+            "dequant" if route == "dequant" else route,
+            route=route, reason=route_reason)
     if route == "dequant":
         return einsum(spec, a, dequantize(qt), policy=pol,
                       preferred_element_type=preferred_element_type)
@@ -638,6 +647,104 @@ def _xla_dwconv(x, w, *, stride, padding, out_dtype):
 
 
 # ---------------------------------------------------------------------------
+# telemetry (repro.obs) -- every helper below is reached only behind an
+# ``_obs.enabled()`` check at the call site, so with telemetry off the
+# dispatch hot path pays one boolean read and allocates nothing
+# ---------------------------------------------------------------------------
+
+
+def _obs_kind(plan: ContractionPlan, pol: ExecutionPolicy) -> str:
+    """The registry kind :func:`_dispatch`/:func:`_fp8_dispatch` will use."""
+    if pol.precision == "fp8" and plan.B == 1:
+        return "fp8_gemm"
+    if pol.zero_gate and plan.B == 1:
+        return "zero_gate"
+    return plan.kind
+
+
+def _obs_record_einsum(spec: str, lhs_shape, rhs_shape, dtype, pol,
+                       plan: ContractionPlan | None, kind: str, *,
+                       op: str = "einsum", route: str | None = None,
+                       reason: str | None = None) -> None:
+    """Record one GeMM-path dispatch with its mapper blocking and modeled
+    FLOPs / HBM bytes / DRAM energy from the ``repro.core`` models."""
+    itemsize = jnp.dtype(dtype).itemsize
+    block = order = hit = None
+    flops = nbytes = 0.0
+    if plan is not None:
+        flops = 2.0 * plan.B * plan.M * plan.K * plan.N
+        shape = GemmShape(plan.M, plan.K, plan.N)
+        if kind in ("gemm", "zero_gate") and pol.block is None:
+            # the kernel impl will consult the same LRU entry; probing the
+            # miss count before our own lookup tells hit from miss
+            before = mapper_cache_info().misses
+            sel = select_tpu_blocking(shape, bytes_per_elem=itemsize)
+            hit = mapper_cache_info().misses == before
+            block = (sel.bm, sel.bk, sel.bn)
+            order = sel.loop_order.name
+            nbytes = float(plan.B * modeled_traffic(
+                shape, sel.bm, sel.bk, sel.bn, sel.loop_order, itemsize))
+        else:
+            # gemv / quant / fp8 paths: operands + result, streamed once
+            nbytes = float(plan.B * (plan.M * plan.K + plan.K * plan.N
+                                     + plan.M * plan.N) * itemsize)
+    _obs.record_dispatch(
+        op, kind, spec=spec, lhs=tuple(lhs_shape), rhs=tuple(rhs_shape),
+        dtype=jnp.dtype(dtype).name, backend=pol.resolved_backend(),
+        block=block, order=order, mapper_hit=hit, route=route,
+        reason=reason, flops=flops, bytes=nbytes,
+        energy_j=dram_energy_joules(nbytes))
+
+
+def _obs_record_xla_einsum(spec: str, operands, precision, pol) -> None:
+    """Record the einsum XLA fallback with the reason it fell back."""
+    if pol.resolved_backend() == "xla":
+        reason = "xla backend selected by policy"
+    elif len(operands) != 2:
+        reason = f"{len(operands)} operands (kernels take 2)"
+    elif precision is not None:
+        reason = "explicit precision hint"
+    else:
+        a, b = operands
+        if not (hasattr(a, "dtype") and hasattr(b, "dtype")
+                and jnp.issubdtype(a.dtype, jnp.floating)
+                and jnp.issubdtype(b.dtype, jnp.floating)):
+            reason = "non-float operands"
+        else:
+            reason = "spec is not a matmul-shaped contraction"
+    shapes = [tuple(o.shape) for o in operands if hasattr(o, "shape")]
+    dt = next((jnp.dtype(o.dtype).name for o in operands
+               if hasattr(o, "dtype")), None)
+    _obs.record_dispatch(
+        "einsum", "xla", spec=spec,
+        lhs=shapes[0] if shapes else None,
+        rhs=shapes[1] if len(shapes) > 1 else None, dtype=dt,
+        backend=pol.resolved_backend(), reason=reason)
+
+
+def _obs_record_conv(op: str, kind: str, x, w_shape, pol, H_out: int,
+                     W_out: int, *, route: str | None = None,
+                     reason: str | None = None) -> None:
+    """Record a conv dispatch with modeled im2col GeMM FLOPs/bytes."""
+    N = x.shape[0]
+    kh, kw = w_shape[0], w_shape[1]
+    if len(w_shape) == 4:
+        cig, cout = w_shape[2], w_shape[3]
+    else:                                   # depthwise (kh, kw, C)
+        cig, cout = 1, w_shape[2]
+    ho, wo = max(H_out, 0), max(W_out, 0)
+    flops = 2.0 * N * ho * wo * kh * kw * cig * cout
+    itemsize = jnp.dtype(x.dtype).itemsize
+    w_elems = kh * kw * cig * cout if len(w_shape) == 4 else kh * kw * cout
+    nbytes = float((x.size + w_elems + N * ho * wo * cout) * itemsize)
+    _obs.record_dispatch(
+        op, kind, lhs=tuple(x.shape), rhs=tuple(w_shape),
+        dtype=jnp.dtype(x.dtype).name, backend=pol.resolved_backend(),
+        route=route, reason=reason, flops=flops, bytes=nbytes,
+        energy_j=dram_energy_joules(nbytes))
+
+
+# ---------------------------------------------------------------------------
 # public operators
 # ---------------------------------------------------------------------------
 
@@ -677,10 +784,16 @@ def einsum(spec: str, *operands, precision=None, preferred_element_type=None,
                 and jnp.issubdtype(b.dtype, jnp.floating)):
             plan = plan_contraction(spec, tuple(a.shape), tuple(b.shape))
             if plan is not None:
+                if _obs.enabled():
+                    _obs_record_einsum(spec, a.shape, b.shape,
+                                       jnp.result_type(a.dtype, b.dtype),
+                                       pol, plan, _obs_kind(plan, pol))
                 if pol.precision == "fp8" and plan.B == 1:
                     return _fp8_dispatch(plan, a, b, pol,
                                          preferred_element_type)
                 return _dispatch(plan, a, b, pol, preferred_element_type)
+    if _obs.enabled():
+        _obs_record_xla_einsum(spec, operands, precision, pol)
     return registry.get("xla_einsum")(
         spec, *operands, precision=precision,
         preferred_element_type=preferred_element_type)
@@ -825,6 +938,10 @@ def conv2d(x, w, *, stride=1, padding=0, groups: int = 1, out_dtype=None,
                 and s_act is not None and H_out >= 1 and W_out >= 1
                 and 0 not in x.shape and 0 not in w.shape
                 and jnp.issubdtype(x.dtype, jnp.floating)):
+            if _obs.enabled():
+                _obs_record_conv("conv2d", "quant_conv2d", x, w.shape, pol,
+                                 H_out, W_out, route="quant_conv2d",
+                                 reason="int8 im2col kernel")
             xq = quantize_activation(x, s_act)
             out_dt = x.dtype if out_dtype is None else jnp.dtype(out_dtype)
             return registry.get("quant_conv2d")(
@@ -843,6 +960,9 @@ def conv2d(x, w, *, stride=1, padding=0, groups: int = 1, out_dtype=None,
     stride, padding, H_out, W_out = resolve_conv_geometry(
         stride, padding, kh, kw, x.shape[1], x.shape[2])
     if pol.resolved_backend() == "xla":
+        if _obs.enabled():
+            _obs_record_conv("conv2d", "xla", x, w.shape, pol, H_out, W_out,
+                             reason="xla backend selected by policy")
         return registry.get("xla_conv2d")(x, w, stride=stride,
                                           padding=padding, groups=groups,
                                           out_dtype=out_dtype)
@@ -850,9 +970,14 @@ def conv2d(x, w, *, stride=1, padding=0, groups: int = 1, out_dtype=None,
         # Pallas-ineligible: zero-area output (kernel larger than the padded
         # input, stride overshoot) or empty operands.  XLA produces the
         # correctly-shaped (possibly empty) result.
+        if _obs.enabled():
+            _obs_record_conv("conv2d", "xla", x, w.shape, pol, H_out, W_out,
+                             reason="pallas-ineligible geometry")
         return registry.get("xla_conv2d")(x, w, stride=stride,
                                           padding=padding, groups=groups,
                                           out_dtype=out_dtype)
+    if _obs.enabled():
+        _obs_record_conv("conv2d", "conv2d", x, w.shape, pol, H_out, W_out)
     return registry.get("conv2d")(x, w, pol, stride, padding, groups,
                                   out_dtype, block_rows=block_rows,
                                   block_cout=block_cout, block_cin=block_cin)
@@ -876,8 +1001,17 @@ def depthwise_conv2d(x, w, *, stride=1, padding=0,
         stride, padding, kh, kw, x.shape[1], x.shape[2])
     if pol.resolved_backend() == "xla" or H_out < 1 or W_out < 1 \
             or 0 in x.shape or 0 in w.shape:
+        if _obs.enabled():
+            _obs_record_conv(
+                "depthwise", "xla", x, w.shape, pol, H_out, W_out,
+                reason="xla backend selected by policy"
+                if pol.resolved_backend() == "xla"
+                else "pallas-ineligible geometry")
         return registry.get("xla_dwconv")(x, w, stride=stride,
                                           padding=padding, out_dtype=out_dtype)
+    if _obs.enabled():
+        _obs_record_conv("depthwise", "dwconv", x, w.shape, pol, H_out,
+                         W_out)
     return registry.get("dwconv")(x, w, pol, stride, padding, out_dtype,
                                   block_rows=block_rows, block_c=block_c)
 

@@ -31,6 +31,7 @@ import math
 from repro.core import hw
 from repro.core.dataflows import ALL_DATAFLOWS, Dataflow, GemmShape
 from repro.core.runtime_model import ArrayShape, runtime_scaleup
+from repro.obs import metrics as _obs_metrics, optrace as _obs
 
 
 # ---------------------------------------------------------------------------
@@ -131,6 +132,17 @@ def mapper_cache_info():
     return _select_tpu_blocking_cached.cache_info()
 
 
+def mapper_cache_stats() -> dict:
+    """The cache counters as a stats dict (what the engines report):
+    a falling ``hit_rate`` or rising ``entries`` across a fixed-shape run
+    is a retrace/shape-churn regression showing up in numbers."""
+    hits, misses, _, currsize = mapper_cache_info()
+    total = hits + misses
+    return {"hits": hits, "misses": misses,
+            "hit_rate": hits / total if total else 0.0,
+            "entries": currsize, "sweeps": _sweep_calls}
+
+
 def mapper_cache_clear() -> None:
     """Drop cached decisions and reset the sweep counter (for tests/benches)."""
     global _sweep_calls
@@ -155,6 +167,10 @@ def _select_tpu_blocking_cached(
 ) -> TpuBlocking:
     global _sweep_calls
     _sweep_calls += 1
+    if _obs.enabled():
+        _obs_metrics.counter(
+            "mapper_sweeps_total",
+            "analytic blocking sweeps (mapper cache misses)").inc()
     lane = chip.mxu_shape[0]
     candidates = []
     for bm in (128, 256, 512):

@@ -463,7 +463,16 @@ def main() -> None:
     ap.add_argument("--set", action="append", default=[],
                     help="config override, e.g. --set seq_shard=False "
                          "--set exact_causal=True (hillclimb levers)")
+    ap.add_argument("--trace-out", default=None,
+                    help="enable repro.obs and write per-cell lower/compile "
+                         "spans as a Chrome-trace JSON")
+    ap.add_argument("--metrics-out", default=None,
+                    help="enable repro.obs and write a metrics snapshot")
     args = ap.parse_args()
+
+    if args.trace_out or args.metrics_out:
+        import repro.obs as obs
+        obs.enable()
 
     for kv in args.set:
         key, val = kv.split("=", 1)
@@ -481,8 +490,11 @@ def main() -> None:
             tag += f"_chunk{args.serve_chunk}"
         path = os.path.join(args.out, tag + ".json")
         try:
-            res = lower_cell(arch, shape, multi_pod=args.multi_pod,
-                             serve_chunk=args.serve_chunk)
+            from repro.obs import optrace
+            with optrace.span(f"lower_cell:{tag}", cat="launch",
+                              arch=arch, shape=shape):
+                res = lower_cell(arch, shape, multi_pod=args.multi_pod,
+                                 serve_chunk=args.serve_chunk)
             print(f"[ok] {tag}: compile={res['compile_s']}s "
                   f"live={res['memory']['live_bytes_per_device']/2**30:.2f}GiB "
                   f"coll={res['collectives']['total_bytes']/2**20:.1f}MiB")
@@ -495,6 +507,14 @@ def main() -> None:
             print(f"[FAIL] {tag}: {type(e).__name__}: {e}")
         with open(path, "w") as f:
             json.dump(res, f, indent=1)
+    if args.trace_out or args.metrics_out:
+        import repro.obs as obs
+        if args.trace_out:
+            obs.write_chrome_trace(args.trace_out, process_name="dryrun")
+            print(f"trace written to {args.trace_out}")
+        if args.metrics_out:
+            obs.REGISTRY.write_json(args.metrics_out)
+            print(f"metrics written to {args.metrics_out}")
     raise SystemExit(1 if failures else 0)
 
 

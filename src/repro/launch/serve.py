@@ -32,7 +32,16 @@ def main() -> None:
     ap.add_argument("--prefill-chunk", type=int, default=16)
     ap.add_argument("--queue-policy", choices=QUEUE_POLICIES, default="fifo")
     ap.add_argument("--temperature", type=float, default=0.0)
+    ap.add_argument("--trace-out", default=None,
+                    help="enable repro.obs and write a Chrome-trace JSON "
+                         "(load at ui.perfetto.dev)")
+    ap.add_argument("--metrics-out", default=None,
+                    help="enable repro.obs and write a metrics snapshot")
     args = ap.parse_args()
+
+    if args.trace_out or args.metrics_out:
+        import repro.obs as obs
+        obs.enable()
 
     cfg = get_config(args.arch, reduced=args.reduced)
     params = T.init_params(jax.random.PRNGKey(0), cfg)
@@ -67,6 +76,15 @@ def main() -> None:
               f"{stats['wall_s']:.2f}s ({stats['tokens_per_s']:.1f} tok/s, "
               f"{stats['steps']} steps, p50 latency {np.percentile(lat, 50):.2f}s, "
               f"p99 {np.percentile(lat, 99):.2f}s)")
+
+    if args.trace_out or args.metrics_out:
+        import repro.obs as obs
+        if args.trace_out:
+            obs.write_chrome_trace(args.trace_out, process_name="serve")
+            print(f"trace written to {args.trace_out}")
+        if args.metrics_out:
+            obs.REGISTRY.write_json(args.metrics_out)
+            print(f"metrics written to {args.metrics_out}")
 
 
 if __name__ == "__main__":

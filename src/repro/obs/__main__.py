@@ -1,0 +1,169 @@
+"""``python -m repro.obs`` -- run an instrumented workload, emit artifacts.
+
+Two workload pieces, both tiny in ``--smoke`` mode:
+
+  * **ops** -- an *eager* dispatch sampler: a representative sweep of
+    ``axon.einsum`` / ``matmul`` / ``conv2d`` / ``depthwise_conv2d`` calls
+    (float GeMM/GEMV, zero-gated, quantized int8/int4/fp8, and the
+    deliberate XLA-fallback shapes) executed outside ``jax.jit`` so every
+    dispatch decision lands in the op-trace ring and the kernel-kind /
+    fallback-reason counters.
+  * **serve** -- a short continuous-batching ``ServeEngine`` run on a
+    paged int8 KV cache with the prefix index on, so the per-request
+    lifecycle spans (admit -> queue -> prefill -> first-token -> decode ->
+    done), engine-step slices, page-pool occupancy/prefix-hit gauges, and
+    mapper cache stats all populate.
+
+Artifacts: ``--trace-out`` (Chrome-trace JSON, load at ui.perfetto.dev),
+``--metrics-out`` (registry JSON snapshot), ``--prom-out`` (Prometheus
+text exposition), ``--profile-dir`` (optional ``jax.profiler`` capture).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+import jax
+import jax.numpy as jnp
+
+import repro.axon as axon
+from repro.obs import metrics, optrace, profiler, trace_export
+
+
+def run_op_sampler(*, reps: int = 2) -> None:
+    """Eagerly exercise every dispatch route the tracer can observe."""
+    key = jax.random.PRNGKey(0)
+    ka, kb, kx, kw = jax.random.split(key, 4)
+    a = jax.random.normal(ka, (32, 64), jnp.float32)
+    b = jax.random.normal(kb, (64, 48), jnp.float32)
+    x = jax.random.normal(kx, (1, 8, 8, 16), jnp.float32)
+    w = jax.random.normal(kw, (3, 3, 16, 24), jnp.float32)
+    dw = jax.random.normal(kw, (3, 3, 16), jnp.float32)
+    from repro.quant.qtensor import quantize_weight
+    q8 = quantize_weight(b)
+    q4 = quantize_weight(jax.random.normal(kb, (64, 64), jnp.float32),
+                         fmt="int4")
+    qf8 = quantize_weight(b, fmt="fp8")
+    q3 = quantize_weight(jax.random.normal(kb, (2, 64, 48), jnp.float32),
+                         axis=-1, reduce_axes=(-2,))
+
+    with axon.policy(backend="interpret"):
+        for _ in range(reps):
+            axon.einsum("mk,kn->mn", a, b)                # gemm
+            axon.einsum("k,kn->n", a[0], b)               # gemv (M == 1)
+            axon.matmul(a, b)                             # front door alias
+            axon.einsum("bmk,bkn->bmn", a[None], b[None])  # shared-batch
+            axon.conv2d(x, w, stride=1, padding="SAME")   # im2col conv
+            axon.depthwise_conv2d(x, dw, padding=1)       # VPU depthwise
+            # deliberate XLA fallbacks: 3 operands / non-float / non-matmul
+            axon.einsum("mk,kn,n->m", a, b, jnp.ones((48,)))
+            axon.einsum("mk,kn->mn", a.astype(jnp.int32),
+                        b.astype(jnp.int32))
+            axon.einsum("mn,mn->mn", a[:, :48], a[:, :48] + 1.0)
+    with axon.policy(backend="interpret", zero_gate=True):
+        axon.einsum("mk,kn->mn", a, b)                    # zero_gate
+    with axon.policy(backend="interpret", precision="int8"):
+        axon.einsum("mk,kn->mn", a, q8)                   # quant_gemm
+        axon.einsum("mk,kn->mn",
+                    jax.random.normal(ka, (16, 64)), q4)  # int4_gemm
+        axon.einsum("mk,lkn->lmn", a, q3)                 # dequant fallback
+    with axon.policy(backend="interpret", precision="fp8"):
+        axon.einsum("mk,kn->mn", a, qf8)                  # fp8_gemm
+
+
+def run_serve_smoke(arch: str, *, n_requests: int = 4) -> dict:
+    """Short paged-int8 serve run; returns the engine's last_stats."""
+    from repro.configs import get_config
+    from repro.models import transformer as T
+    from repro.serve.engine import Request, ServeEngine
+
+    cfg = get_config(arch, reduced=True)
+    params = T.init_params(jax.random.PRNGKey(0), cfg)
+    key = jax.random.PRNGKey(7)
+    reqs = []
+    for i in range(n_requests):
+        key, sub = jax.random.split(key)
+        plen = 8 if i % 2 else 4
+        prompt = jax.random.randint(sub, (plen,), 2, cfg.vocab)
+        reqs.append(Request(prompt=[int(t) for t in prompt],
+                            max_new_tokens=6 if i % 2 else 4))
+    page_size = 4
+    max_len = -(-(8 + 6 + 1) // page_size) * page_size
+    engine = ServeEngine(params, cfg, batch_slots=2, max_len=max_len,
+                         prefill_chunk=4, paged=True, page_size=page_size,
+                         cache_fmt="int8",
+                         pool_pages=4 * (max_len // page_size))
+    engine.generate(reqs)
+    return engine.last_stats
+
+
+def main(argv: list[str] | None = None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.obs",
+        description="run an instrumented workload and emit telemetry "
+                    "artifacts")
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny CI-sized workload (seconds on CPU)")
+    ap.add_argument("--workload", choices=("ops", "serve", "all"),
+                    default="all")
+    ap.add_argument("--arch", default="yi-9b")
+    ap.add_argument("--requests", type=int, default=None,
+                    help="serve request count (default: 4 smoke, 8 full)")
+    ap.add_argument("--ring-size", type=int,
+                    default=optrace.DEFAULT_RING_SIZE)
+    ap.add_argument("--trace-out", default="trace.json")
+    ap.add_argument("--metrics-out", default="metrics.json")
+    ap.add_argument("--prom-out", default=None,
+                    help="also write the Prometheus text exposition here")
+    ap.add_argument("--profile-dir", default=None,
+                    help="capture a jax.profiler trace into this directory")
+    args = ap.parse_args(argv)
+
+    optrace.enable(ring_size=args.ring_size)
+    if args.profile_dir:
+        profiler.start(args.profile_dir)
+
+    n_req = args.requests or (4 if args.smoke else 8)
+    serve_stats = None
+    if args.workload in ("ops", "all"):
+        with profiler.wall("op_sampler"):
+            run_op_sampler(reps=1 if args.smoke else 4)
+        print(f"op sampler: {len(optrace.events())} dispatch events "
+              f"({optrace.dropped_ops()} dropped)", file=sys.stderr)
+    if args.workload in ("serve", "all"):
+        with profiler.wall("serve_smoke"):
+            serve_stats = run_serve_smoke(args.arch, n_requests=n_req)
+        print(f"serve: {serve_stats['generated_tokens']} tokens, "
+              f"{serve_stats['tokens_per_s']:.1f} tok/s", file=sys.stderr)
+
+    if args.profile_dir:
+        profiler.stop()
+
+    trace = trace_export.write_chrome_trace(args.trace_out)
+    metrics.REGISTRY.write_json(args.metrics_out)
+    if args.prom_out:
+        with open(args.prom_out, "w") as f:
+            f.write(metrics.prometheus_text())
+
+    snap = metrics.snapshot()
+    summary = {
+        "trace_events": len(trace["traceEvents"]),
+        "metrics": len(snap),
+        "dispatch_kinds": sorted({
+            v["labels"]["kind"]
+            for v in snap.get("axon_dispatch_total", {}).get("values", [])}),
+        "fallback_reasons": sorted({
+            v["labels"]["reason"]
+            for v in snap.get("axon_fallback_total", {}).get("values", [])}),
+        "trace_out": args.trace_out,
+        "metrics_out": args.metrics_out,
+    }
+    if serve_stats is not None and "pool" in serve_stats:
+        summary["pool_occupancy"] = serve_stats["pool"]["occupancy"]
+    print(json.dumps(summary, indent=1))
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,253 @@
+"""Dispatch-level op tracing and host-side span recording.
+
+Off by default and a true no-op while disabled: the dispatcher and the
+engines guard every record behind :func:`enabled` (one attribute read), so
+the hot loop allocates nothing and touches no metric objects until
+:func:`enable` flips the switch.
+
+When enabled, two bounded ring buffers fill up:
+
+  * **op events** -- one :class:`OpEvent` per ``axon.einsum`` / ``matmul``
+    / ``conv2d`` / ``depthwise_conv2d`` dispatch *executed on the host*
+    (kind, operand shapes/dtypes, chosen backend, mapper blocking and
+    cache hit/miss, quant route and fallback reason, modeled
+    FLOPs/bytes/energy from ``repro.core``).  Dispatches issued while JAX
+    is staging a trace (``jax.jit``, ``jax.eval_shape``) are NOT recorded:
+    a jitted engine step dispatches once per compilation, not per
+    execution, and counting those as "ops" would be a lie.  Run the
+    workload eagerly (the ``python -m repro.obs`` CLI does) to observe the
+    dispatch stream.
+  * **spans** -- host wall-time slices (engine steps, per-request serve
+    phases, profiler scopes) that export as Chrome-trace/Perfetto ``X``
+    slices via ``repro.obs.trace_export``.
+
+Recording also feeds the process metrics registry (``repro.obs.metrics``):
+``axon_dispatch_total{op,kind}``, ``axon_fallback_total{op,reason}``, and
+``axon_quant_route_total{route,reason}``.
+"""
+from __future__ import annotations
+
+import contextlib
+import dataclasses
+import time
+from collections import deque
+from typing import Any, Iterator
+
+from repro.obs import metrics
+
+DEFAULT_RING_SIZE = 4096
+
+# Chrome-trace thread-id layout: ops and engine steps on low tids, per-
+# request rows offset so they render as their own lanes under the process.
+TID_OPS = 1
+TID_STEPS = 2
+TID_REQUEST_BASE = 1000
+
+
+@dataclasses.dataclass(frozen=True)
+class OpEvent:
+    """One host-visible dispatch decision."""
+
+    ts_s: float                       # seconds since enable()
+    op: str                           # einsum | matmul | conv2d | depthwise
+    kind: str                         # registry kind, or "xla"
+    spec: str | None = None
+    lhs: tuple[int, ...] | None = None
+    rhs: tuple[int, ...] | None = None
+    dtype: str | None = None
+    backend: str | None = None        # resolved policy backend
+    block: tuple[int, ...] | None = None
+    order: str | None = None          # mapper loop order (OS/WS/IS)
+    mapper_hit: bool | None = None    # blocking decision already cached?
+    route: str | None = None          # quant_route() route, if quantized
+    reason: str | None = None         # fallback / routing reason
+    flops: float = 0.0                # modeled MACs*2
+    bytes: float = 0.0                # modeled HBM operand traffic
+    energy_j: float = 0.0             # modeled DRAM energy
+
+    def args(self) -> dict[str, Any]:
+        """Chrome-trace ``args`` payload (drop Nones, keep it JSON-clean)."""
+        d = dataclasses.asdict(self)
+        d.pop("ts_s")
+        return {k: (list(v) if isinstance(v, tuple) else v)
+                for k, v in d.items() if v is not None}
+
+
+@dataclasses.dataclass(frozen=True)
+class SpanEvent:
+    """One host wall-time slice (Chrome-trace ``X``) or instant (``i``)."""
+
+    name: str
+    ts_s: float                       # seconds since enable()
+    dur_s: float                      # 0.0 => instant event
+    cat: str = "engine"
+    tid: int = TID_STEPS
+    args: dict[str, Any] = dataclasses.field(default_factory=dict)
+    instant: bool = False
+
+
+class _State:
+    __slots__ = ("enabled", "ring", "spans", "t0", "dropped_ops")
+
+    def __init__(self) -> None:
+        self.enabled = False
+        self.ring: deque[OpEvent] = deque(maxlen=DEFAULT_RING_SIZE)
+        self.spans: deque[SpanEvent] = deque(maxlen=DEFAULT_RING_SIZE)
+        self.t0 = time.perf_counter()
+        self.dropped_ops = 0
+
+
+_STATE = _State()
+
+
+def enable(ring_size: int = DEFAULT_RING_SIZE, *, reset: bool = True) -> None:
+    """Turn op tracing on (rings bounded at ``ring_size`` events)."""
+    if ring_size < 1:
+        raise ValueError(f"ring_size must be >= 1, got {ring_size}")
+    if reset or _STATE.ring.maxlen != ring_size:
+        _STATE.ring = deque(maxlen=ring_size)
+        _STATE.spans = deque(maxlen=ring_size)
+        _STATE.t0 = time.perf_counter()
+        _STATE.dropped_ops = 0
+    _STATE.enabled = True
+
+
+def disable() -> None:
+    _STATE.enabled = False
+
+
+def enabled() -> bool:
+    return _STATE.enabled
+
+
+def reset() -> None:
+    """Drop buffered events (keeps the enabled flag as-is)."""
+    _STATE.ring.clear()
+    _STATE.spans.clear()
+    _STATE.t0 = time.perf_counter()
+    _STATE.dropped_ops = 0
+
+
+def epoch() -> float:
+    """``time.perf_counter()`` origin of all recorded timestamps."""
+    return _STATE.t0
+
+
+def now_s() -> float:
+    return time.perf_counter() - _STATE.t0
+
+
+def events() -> list[OpEvent]:
+    return list(_STATE.ring)
+
+
+def spans() -> list[SpanEvent]:
+    return list(_STATE.spans)
+
+
+def dropped_ops() -> int:
+    """Op events evicted from the bounded ring so far."""
+    return _STATE.dropped_ops
+
+
+# ---------------------------------------------------------------------------
+# op recording (called by repro.axon.dispatch)
+# ---------------------------------------------------------------------------
+
+
+def record_dispatch(op: str, kind: str, **fields: Any) -> None:
+    """Record one dispatch decision (no-op when disabled or while JAX is
+    staging a trace -- see the module docstring)."""
+    if not _STATE.enabled or not metrics.host_clean():
+        return
+    ev = OpEvent(ts_s=now_s(), op=op, kind=kind, **fields)
+    if len(_STATE.ring) == _STATE.ring.maxlen:
+        _STATE.dropped_ops += 1
+    _STATE.ring.append(ev)
+    metrics.counter(
+        "axon_dispatch_total", "dispatches by operator and kernel kind",
+        labels=("op", "kind")).inc(op=op, kind=kind)
+    if ev.reason is not None and kind in ("xla", "dequant"):
+        metrics.counter(
+            "axon_fallback_total", "XLA/dequant fallbacks by reason",
+            labels=("op", "reason")).inc(op=op, reason=ev.reason)
+    if ev.route is not None:
+        metrics.counter(
+            "axon_quant_route_total", "quant_route() outcomes",
+            labels=("route", "reason")).inc(route=ev.route,
+                                            reason=ev.reason or "")
+    if ev.mapper_hit is not None:
+        metrics.counter(
+            "axon_mapper_lookups_total", "mapper blocking lookups",
+            labels=("hit",)).inc(hit=str(bool(ev.mapper_hit)).lower())
+
+
+# ---------------------------------------------------------------------------
+# span recording (engines, launch scripts, profiler scopes)
+# ---------------------------------------------------------------------------
+
+
+def add_span(name: str, t_start: float, dur_s: float, *, cat: str = "engine",
+             tid: int = TID_STEPS, args: dict[str, Any] | None = None
+             ) -> None:
+    """Record a completed slice.  ``t_start`` is an absolute
+    ``time.perf_counter()`` value (converted against :func:`epoch`)."""
+    if not _STATE.enabled or not metrics.host_clean():
+        return
+    _STATE.spans.append(SpanEvent(
+        name=name, ts_s=max(0.0, t_start - _STATE.t0),
+        dur_s=max(0.0, dur_s), cat=cat, tid=tid, args=args or {}))
+
+
+def add_instant(name: str, t_at: float | None = None, *, cat: str = "engine",
+                tid: int = TID_STEPS, args: dict[str, Any] | None = None
+                ) -> None:
+    if not _STATE.enabled or not metrics.host_clean():
+        return
+    t = time.perf_counter() if t_at is None else t_at
+    _STATE.spans.append(SpanEvent(
+        name=name, ts_s=max(0.0, t - _STATE.t0), dur_s=0.0, cat=cat,
+        tid=tid, args=args or {}, instant=True))
+
+
+@contextlib.contextmanager
+def span(name: str, *, cat: str = "engine", tid: int = TID_STEPS,
+         **args: Any) -> Iterator[None]:
+    """``with optrace.span("compile", cat="launch"): ...`` -- records the
+    enclosed wall time as one slice (nothing recorded while disabled)."""
+    t0 = time.perf_counter()
+    try:
+        yield
+    finally:
+        add_span(name, t0, time.perf_counter() - t0, cat=cat, tid=tid,
+                 args=args)
+
+
+def serve_request_spans(req_idx: int, *, t_origin: float, queue_s: float,
+                        first_s: float, done_s: float, prompt_len: int,
+                        new_tokens: int, slot: int | None = None) -> None:
+    """Per-request serve lifecycle: admit -> queue -> prefill ->
+    first-token -> decode -> done, one Chrome-trace lane per request.
+
+    Times are the engine's per-call offsets (seconds relative to
+    ``t_origin``, an absolute ``perf_counter`` value at ``generate()``
+    start): ``queue_s`` = admission offset, ``first_s`` = first sampled
+    token, ``done_s`` = completion.
+    """
+    if not _STATE.enabled:
+        return
+    tid = TID_REQUEST_BASE + req_idx
+    base = {"request": req_idx, "prompt_len": prompt_len,
+            "new_tokens": new_tokens}
+    if slot is not None:
+        base["slot"] = slot
+    if queue_s > 0:
+        add_span("queue", t_origin, queue_s, cat="serve", tid=tid, args=base)
+    add_instant("admit", t_origin + queue_s, cat="serve", tid=tid, args=base)
+    add_span("prefill", t_origin + queue_s, max(0.0, first_s - queue_s),
+             cat="serve", tid=tid, args=base)
+    add_instant("first_token", t_origin + first_s, cat="serve", tid=tid,
+                args=base)
+    add_span("decode", t_origin + first_s, max(0.0, done_s - first_s),
+             cat="serve", tid=tid, args=base)
+    add_instant("done", t_origin + done_s, cat="serve", tid=tid, args=base)

@@ -34,7 +34,9 @@ import numpy as np
 
 from repro import axon, quant
 from repro.configs.base import ModelConfig
+from repro.core.mapper import mapper_cache_stats
 from repro.models import transformer as T
+from repro.obs import metrics as _obs_metrics, optrace as _obs
 from repro.serve import kvcache as KV
 
 QUEUE_POLICIES = ("fifo", "sjf")
@@ -351,6 +353,7 @@ class ServeEngine:
         self._validate(requests)
         B = self.batch_slots
         t0 = time.perf_counter()
+        obs_on = _obs.enabled()     # snapshot: one boolean read per call
         order = list(range(len(requests)))
         if self.queue_policy == "sjf":
             order.sort(key=lambda i: len(requests[i].prompt))
@@ -384,10 +387,20 @@ class ServeEngine:
                     tokens[b, 0] = s.last_tok
                     valid[b, 0] = True
             self.rng, sub = jax.random.split(self.rng)
+            t_step = time.perf_counter() if obs_on else 0.0
             nxt, caches = self._step(self.params, caches,
                                      jnp.asarray(tokens), jnp.asarray(valid),
                                      sub)
-            nxt = np.asarray(nxt)
+            nxt = np.asarray(nxt)   # host transfer: step's device sync point
+            if obs_on:
+                _obs.add_span(
+                    "serve_step", t_step, time.perf_counter() - t_step,
+                    cat="serve", args={
+                        "step": steps, "width": C,
+                        "prefill_slots": sum(
+                            1 for s in slots if s.state == "prefill"),
+                        "decode_slots": sum(
+                            1 for s in slots if s.state == "decode")})
             steps += 1
             n_prefill += sum(fed)
             now = time.perf_counter() - t0
@@ -430,6 +443,12 @@ class ServeEngine:
                         "done_s": now,
                         "latency_s": now,       # all requests arrive at t=0
                     }
+                    if obs_on:
+                        _obs.serve_request_spans(
+                            s.req_idx, t_origin=t0, queue_s=s.t_admit,
+                            first_s=s.t_first, done_s=now,
+                            prompt_len=len(s.prompt),
+                            new_tokens=len(s.out), slot=b)
                     slots[b] = _Slot()          # freed: backfilled next step
 
         wall = time.perf_counter() - t0
@@ -446,6 +465,9 @@ class ServeEngine:
             "prefill_tokens_per_s": n_prefill / wall if wall > 0 else 0.0,
             "cache_bytes": KV.pytree_bytes(caches),
             "cache_bytes_per_slot": KV.pytree_bytes(caches) // B,
+            # mapper cache health: a fixed-shape serve loop should be all
+            # hits after warmup -- misses mid-run mean shape churn
+            "mapper_cache": mapper_cache_stats(),
         }
         if self.pool is not None:
             self._caches = caches
@@ -453,7 +475,59 @@ class ServeEngine:
             self.last_stats["prefix_hits"] = self.pool.hits - hits0
             self.last_stats["prefix_hit_tokens"] = \
                 self.pool.hit_tokens - hit_tok0
+        if obs_on:
+            self._publish_metrics(per_req)
         return outputs
+
+    def _publish_metrics(self, per_req: list[dict | None]) -> None:
+        """Push this call's stats into the repro.obs registry (telemetry
+        enabled only -- ``generate`` never touches metric objects
+        otherwise)."""
+        st = self.last_stats
+        _obs_metrics.counter(
+            "serve_requests_total", "requests completed").inc(
+                sum(1 for r in per_req if r is not None))
+        _obs_metrics.counter(
+            "serve_tokens_total", "tokens generated").inc(
+                st["generated_tokens"])
+        _obs_metrics.counter(
+            "serve_prefill_tokens_total", "prompt tokens prefilled").inc(
+                st["prefill_tokens"])
+        _obs_metrics.counter(
+            "serve_steps_total", "engine steps executed").inc(st["steps"])
+        _obs_metrics.gauge(
+            "serve_tokens_per_s", "last call's generation throughput").set(
+                st["tokens_per_s"])
+        lat = _obs_metrics.histogram(
+            "serve_request_latency_seconds", "request completion latency")
+        ttft = _obs_metrics.histogram(
+            "serve_ttft_seconds", "time to first token (from admission)")
+        for r in per_req:
+            if r is not None:
+                lat.observe(r["latency_s"])
+                ttft.observe(r["ttft_s"])
+        mc = st["mapper_cache"]
+        _obs_metrics.gauge(
+            "mapper_cache_hit_rate", "blocking-decision cache hit rate").set(
+                mc["hit_rate"])
+        _obs_metrics.gauge(
+            "mapper_cache_entries", "blocking-decision cache entries").set(
+                mc["entries"])
+        if self.pool is not None:
+            ps = st["pool"]
+            _obs_metrics.gauge(
+                "pagepool_occupancy", "fraction of KV pages in use").set(
+                    ps["occupancy"])
+            _obs_metrics.gauge(
+                "pagepool_free_pages", "KV pages currently free").set(
+                    ps["free_pages"])
+            _obs_metrics.gauge(
+                "pagepool_prefix_hit_rate",
+                "prefix-index share of requested prompt tokens").set(
+                    ps["prefix_hit_rate"])
+            _obs_metrics.gauge(
+                "pagepool_evictions", "prefix pages evicted (lifetime)").set(
+                    ps["evictions"])
 
 
 class WaveServeEngine:

@@ -37,6 +37,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro import axon
+from repro.core.mapper import mapper_cache_stats
+from repro.obs import metrics as _obs_metrics, optrace as _obs
 from repro.quant import is_quantized
 from repro.vision import models, preprocess
 from repro.vision.models import VisionConfig
@@ -181,8 +183,10 @@ class VisionEngine:
         outputs: list[Any | None] = [None] * len(requests)
         lat = np.zeros(len(requests))
         queue_delay = np.zeros(len(requests))
+        compute_s = np.zeros(len(requests))
         steps = 0
         occupancy = 0
+        obs_on = _obs.enabled()     # snapshot: one boolean read per call
         t0 = time.perf_counter()
 
         while pending:
@@ -202,26 +206,90 @@ class VisionEngine:
             nB = step_batch(len(lane_imgs), B)
             if len(lane_imgs) < nB:            # pad empty lanes on device
                 lane_imgs.extend([self._zero_lane()] * (nB - len(lane_imgs)))
+            t_compute = time.perf_counter()
             out = self._step(self.params, jnp.stack(lane_imgs))
             out = jax.block_until_ready(out)
             done = time.perf_counter() - t0
             steps += 1
             occupancy += len(lanes)
+            if obs_on:
+                # batch_compute nests inside the vision_step slice (the
+                # step also covers admission/letterboxing)
+                _obs.add_span("vision_step", t0 + now, done - now,
+                              cat="vision", args={"step": steps - 1,
+                                                  "images": len(lanes)})
+                _obs.add_span("batch_compute", t_compute,
+                              t0 + done - t_compute, cat="vision",
+                              args={"step": steps - 1, "batch": nB})
             for b, ridx in enumerate(lanes):
                 outputs[ridx] = jax.tree.map(lambda a, b=b: np.asarray(a[b]),
                                              out)
                 lat[ridx] = done - requests[ridx].arrival_s
+                compute_s[ridx] = done - now
+                if obs_on:
+                    tid = _obs.TID_REQUEST_BASE + ridx
+                    args = {"request": ridx, "lane": b}
+                    if queue_delay[ridx] > 0:
+                        _obs.add_span("queue",
+                                      t0 + requests[ridx].arrival_s,
+                                      queue_delay[ridx], cat="vision",
+                                      tid=tid, args=args)
+                    _obs.add_span("compute", t0 + now, done - now,
+                                  cat="vision", tid=tid, args=args)
 
         wall = time.perf_counter() - t0
         n = len(requests)
+
+        def _pct(arr, q):
+            return float(np.percentile(arr, q)) if n else 0.0
+
         self.last_stats = {
             "images": n,
             "steps": steps,
             "wall_s": wall,
             "img_per_s": n / wall if wall > 0 else 0.0,
-            "p50_latency_s": float(np.percentile(lat, 50)) if n else 0.0,
-            "p99_latency_s": float(np.percentile(lat, 99)) if n else 0.0,
+            "p50_latency_s": _pct(lat, 50),
+            "p99_latency_s": _pct(lat, 99),
+            # queue wait vs compute reported separately (the serve-engine
+            # convention): latency = queue_s + compute_s per image
             "mean_queue_s": float(queue_delay.mean()) if n else 0.0,
+            "p50_queue_s": _pct(queue_delay, 50),
+            "p99_queue_s": _pct(queue_delay, 99),
+            "mean_compute_s": float(compute_s.mean()) if n else 0.0,
+            "p50_compute_s": _pct(compute_s, 50),
+            "p99_compute_s": _pct(compute_s, 99),
             "mean_occupancy": occupancy / (steps * B) if steps else 0.0,
+            "mapper_cache": mapper_cache_stats(),
         }
+        if obs_on:
+            self._publish_metrics(lat, queue_delay, compute_s)
         return outputs
+
+    def _publish_metrics(self, lat, queue_delay, compute_s) -> None:
+        """Push this call's stats into the repro.obs registry (telemetry
+        enabled only)."""
+        st = self.last_stats
+        _obs_metrics.counter(
+            "vision_images_total", "images inferred").inc(st["images"])
+        _obs_metrics.counter(
+            "vision_steps_total", "vision engine steps").inc(st["steps"])
+        _obs_metrics.gauge(
+            "vision_img_per_s", "last call's image throughput").set(
+                st["img_per_s"])
+        h_lat = _obs_metrics.histogram(
+            "vision_image_latency_seconds", "per-image completion latency")
+        h_q = _obs_metrics.histogram(
+            "vision_image_queue_seconds", "per-image queue wait")
+        h_c = _obs_metrics.histogram(
+            "vision_image_compute_seconds", "per-image batch compute time")
+        for i in range(len(lat)):
+            h_lat.observe(float(lat[i]))
+            h_q.observe(float(queue_delay[i]))
+            h_c.observe(float(compute_s[i]))
+        mc = st["mapper_cache"]
+        _obs_metrics.gauge(
+            "mapper_cache_hit_rate", "blocking-decision cache hit rate").set(
+                mc["hit_rate"])
+        _obs_metrics.gauge(
+            "mapper_cache_entries", "blocking-decision cache entries").set(
+                mc["entries"])

@@ -365,6 +365,51 @@ class TestLintFixtures:
         src = "out = pl.pallas_call(_k, grid=(1,))(a)\n"
         assert "LNT008" in rules(_lint(src))
 
+    def test_host_clock_in_kernel_body_is_lnt009(self):
+        src = (
+            "import time\n"
+            "def _k(a_ref, o_ref):\n"
+            "    t = time.perf_counter()\n"
+            "    o_ref[...] = a_ref[...]\n"
+            "out = pl.pallas_call(_k, grid=(1,), interpret=flag)(a)\n"
+        )
+        assert "LNT009" in rules(_lint(src))
+
+    def test_host_clock_in_jitted_step_is_lnt009(self):
+        src = (
+            "from time import perf_counter\n"
+            "import jax\n"
+            "def step(params, tokens):\n"
+            "    t0 = perf_counter()\n"
+            "    return tokens\n"
+            "step = jax.jit(step)\n"
+        )
+        assert "LNT009" in rules(_lint(src, "repro.serve.fixture"))
+
+    def test_obs_call_in_step_factory_is_lnt009(self):
+        src = (
+            "from repro.obs import metrics\n"
+            "def make_chunk_step(cfg):\n"
+            "    def step(params, tokens):\n"
+            "        metrics.counter('steps').inc()\n"
+            "        return tokens\n"
+            "    return step\n"
+        )
+        assert "LNT009" in rules(_lint(src, "repro.serve.fixture"))
+
+    def test_host_clock_in_host_loop_is_not_lnt009(self):
+        # the engines' generate()/infer() loops time on the host by
+        # design; only traced bodies are off-limits
+        src = (
+            "import time\n"
+            "import repro.obs as obs\n"
+            "def generate(reqs):\n"
+            "    t0 = time.perf_counter()\n"
+            "    obs.optrace.add_span('x', t0, 0.0)\n"
+            "    return []\n"
+        )
+        assert "LNT009" not in rules(_lint(src, "repro.serve.fixture"))
+
 
 # ---------------------------------------------------------------------------
 # meta: the live repo is clean, end to end

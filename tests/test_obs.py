@@ -1,0 +1,424 @@
+"""repro.obs telemetry: metric semantics, tracer guard, ring bounding,
+Chrome-trace schema, serve span nesting, and the off-by-default no-op.
+
+The load-bearing properties:
+
+  * recording under ANY JAX trace (``jax.eval_shape``, jit staging) is
+    silently dropped -- instrumentation can sit next to jitted call sites
+    without double-counting abstract evaluations or leaking tracers;
+  * with telemetry disabled the engines are a true no-op: bit-identical
+    tokens, zero metric objects created, zero events buffered;
+  * every exported trace passes the same schema validator the CLI runs,
+    so "Perfetto accepts it" is enforced by code.
+"""
+import dataclasses
+import json
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+import repro.obs as obs
+from repro.configs import get_config
+from repro.models import transformer as T
+from repro.obs import metrics, optrace, profiler, trace_export
+from repro.serve.engine import Request, ServeEngine
+
+KEY = jax.random.PRNGKey(0)
+
+
+@pytest.fixture(autouse=True)
+def _clean_obs():
+    """Every test starts and ends with telemetry off and state empty."""
+    optrace.disable()
+    optrace.reset()
+    metrics.clear()
+    yield
+    optrace.disable()
+    optrace.reset()
+    metrics.clear()
+
+
+def _cfg(arch="yi-9b"):
+    cfg = get_config(arch, reduced=True)
+    return dataclasses.replace(cfg, capacity_factor=64.0)
+
+
+def _requests(cfg, specs, seed=1):
+    key = jax.random.PRNGKey(seed)
+    reqs = []
+    for plen, mnew in specs:
+        key, sub = jax.random.split(key)
+        prompt = [int(t) for t in jax.random.randint(sub, (plen,), 2,
+                                                     cfg.vocab)]
+        reqs.append(Request(prompt=prompt, max_new_tokens=mnew))
+    return reqs
+
+
+# ---------------------------------------------------------------------------
+# metric semantics
+# ---------------------------------------------------------------------------
+
+
+class TestMetrics:
+    def test_counter_inc_and_value(self):
+        c = metrics.counter("t_c", "help", labels=("op",))
+        c.inc(op="a")
+        c.inc(2.5, op="a")
+        c.inc(op="b")
+        assert c.value(op="a") == 3.5
+        assert c.value(op="b") == 1.0
+        assert c.value(op="never") == 0.0
+
+    def test_counter_rejects_negative(self):
+        c = metrics.counter("t_cneg")
+        with pytest.raises(ValueError):
+            c.inc(-1.0)
+
+    def test_label_schema_enforced(self):
+        c = metrics.counter("t_cl", labels=("op",))
+        with pytest.raises(ValueError):
+            c.inc(kind="x")               # wrong label name
+        with pytest.raises(ValueError):
+            c.inc()                       # missing label
+
+    def test_gauge_set_and_add(self):
+        g = metrics.gauge("t_g")
+        g.set(4.0)
+        assert g.value() == 4.0
+        g.add(-1.5)
+        assert g.value() == 2.5
+        g.set(0.25)
+        assert g.value() == 0.25
+
+    def test_histogram_buckets_sum_count(self):
+        h = metrics.histogram("t_h", buckets=(0.1, 1.0, 10.0))
+        for v in (0.05, 0.5, 0.5, 5.0, 50.0):
+            h.observe(v)
+        (key, st), = h._values.items()
+        assert st["counts"] == [1, 2, 1, 1]    # last bin is the +Inf tail
+        assert st["count"] == 5
+        assert st["sum"] == pytest.approx(56.05)
+        assert h.percentile(50) == 1.0
+        assert h.percentile(99) == 10.0        # +Inf tail reports last bound
+
+    def test_registry_name_conflicts_raise(self):
+        metrics.counter("t_dup", labels=("a",))
+        with pytest.raises(ValueError):
+            metrics.gauge("t_dup")             # different type
+        with pytest.raises(ValueError):
+            metrics.counter("t_dup", labels=("b",))  # different schema
+        # identical re-registration returns the same object
+        assert metrics.counter("t_dup", labels=("a",)) is \
+            metrics.counter("t_dup", labels=("a",))
+
+    def test_snapshot_and_json_roundtrip(self, tmp_path):
+        metrics.counter("t_snap", "a counter", labels=("k",)).inc(k="x")
+        metrics.histogram("t_snap_h").observe(0.01)
+        path = str(tmp_path / "m.json")
+        metrics.REGISTRY.write_json(path)
+        snap = json.load(open(path))
+        assert snap["t_snap"]["type"] == "counter"
+        assert snap["t_snap"]["values"] == [
+            {"labels": {"k": "x"}, "value": 1.0}]
+        h = snap["t_snap_h"]
+        assert h["type"] == "histogram"
+        assert h["values"][0]["count"] == 1
+        assert len(h["values"][0]["counts"]) == len(h["buckets"]) + 1
+
+    def test_prometheus_text_format(self):
+        metrics.counter("t_prom", "helpful", labels=("op",)).inc(op='a"b')
+        metrics.histogram("t_prom_h", buckets=(1.0,)).observe(0.5)
+        text = metrics.prometheus_text()
+        assert "# HELP t_prom helpful" in text
+        assert "# TYPE t_prom counter" in text
+        assert 't_prom{op="a\\"b"} 1.0' in text
+        assert 't_prom_h_bucket{le="1"} 1' in text
+        assert 't_prom_h_bucket{le="+Inf"} 1' in text
+        assert "t_prom_h_count 1" in text
+
+
+# ---------------------------------------------------------------------------
+# tracer guard
+# ---------------------------------------------------------------------------
+
+
+class TestTracerGuard:
+    def test_no_recording_under_eval_shape(self):
+        c = metrics.counter("t_guard_es")
+
+        def f(x):
+            c.inc()
+            return x * 2
+
+        jax.eval_shape(f, jnp.ones((4,)))
+        assert c.value() == 0.0
+        f(jnp.ones((4,)))                     # eager: records
+        assert c.value() == 1.0
+
+    def test_no_recording_under_jit_trace(self):
+        c = metrics.counter("t_guard_jit")
+
+        def f(x):
+            c.inc()
+            return x + 1
+
+        jf = jax.jit(f)
+        jf(jnp.ones((4,)))                    # traces once: inc dropped
+        jf(jnp.ones((4,)))                    # cached: python never runs
+        assert c.value() == 0.0
+
+    def test_tracer_valued_record_dropped(self):
+        g = metrics.gauge("t_guard_val")
+        optrace.enable()
+
+        @jax.jit
+        def f(x):
+            g.set(x[0])                       # x[0] is a Tracer
+            return x
+
+        f(jnp.ones((4,)))
+        assert g.value() == 0.0
+
+    def test_no_dispatch_events_under_jit(self):
+        import repro.axon as axon
+        optrace.enable()
+        a = jnp.ones((32, 64), jnp.float32)
+        b = jnp.ones((64, 48), jnp.float32)
+
+        @jax.jit
+        def f(a, b):
+            return axon.einsum("mk,kn->mn", a, b,
+                               policy=axon.ExecutionPolicy(
+                                   backend="interpret"))
+
+        f(a, b)
+        assert optrace.events() == []
+        # the same call eagerly DOES record
+        with axon.policy(backend="interpret"):
+            axon.einsum("mk,kn->mn", a, b)
+        assert len(optrace.events()) == 1
+        ev = optrace.events()[0]
+        assert ev.op == "einsum" and ev.kind == "gemm"
+        assert ev.block is not None and ev.order in ("OS", "WS", "IS")
+
+
+# ---------------------------------------------------------------------------
+# ring bounding
+# ---------------------------------------------------------------------------
+
+
+class TestRingBuffer:
+    def test_op_ring_is_bounded(self):
+        optrace.enable(ring_size=8)
+        for i in range(20):
+            optrace.record_dispatch("einsum", "gemm", spec=f"s{i}")
+        evs = optrace.events()
+        assert len(evs) == 8
+        assert optrace.dropped_ops() == 12
+        assert [e.spec for e in evs] == [f"s{i}" for i in range(12, 20)]
+        # the counters saw every record, not just the surviving ring slice
+        assert metrics.REGISTRY.get("axon_dispatch_total").value(
+            op="einsum", kind="gemm") == 20.0
+
+    def test_enable_resets_and_rejects_bad_size(self):
+        optrace.enable(ring_size=4)
+        optrace.record_dispatch("einsum", "gemm")
+        optrace.enable(ring_size=4)            # reset=True drops the buffer
+        assert optrace.events() == []
+        with pytest.raises(ValueError):
+            optrace.enable(ring_size=0)
+
+
+# ---------------------------------------------------------------------------
+# chrome-trace schema
+# ---------------------------------------------------------------------------
+
+
+class TestTraceExport:
+    def test_roundtrip_is_schema_valid(self, tmp_path):
+        optrace.enable()
+        optrace.record_dispatch("einsum", "gemm", spec="mk,kn->mn",
+                                lhs=(8, 16), rhs=(16, 8), flops=2048.0)
+        with optrace.span("unit_span", cat="test", answer=42):
+            pass
+        optrace.add_instant("marker", cat="test")
+        path = str(tmp_path / "trace.json")
+        trace = trace_export.write_chrome_trace(path)
+        assert trace_export.validate_chrome_trace(trace) == []
+        loaded = json.load(open(path))         # full JSON round-trip
+        assert trace_export.validate_chrome_trace(loaded) == []
+        assert loaded["displayTimeUnit"] == "ms"
+        names = {e["name"] for e in loaded["traceEvents"]}
+        assert {"einsum:gemm", "unit_span", "marker",
+                "process_name", "thread_name"} <= names
+        x = next(e for e in loaded["traceEvents"]
+                 if e["name"] == "unit_span")
+        assert x["ph"] == "X" and x["dur"] >= 0 and x["args"]["answer"] == 42
+        i = next(e for e in loaded["traceEvents"]
+                 if e["name"] == "einsum:gemm")
+        assert i["ph"] == "i" and i["args"]["spec"] == "mk,kn->mn"
+        assert i["args"]["lhs"] == [8, 16]      # tuples JSON-ified
+
+    def test_validator_catches_bad_traces(self):
+        assert trace_export.validate_chrome_trace([]) != []
+        assert trace_export.validate_chrome_trace({}) != []
+        bad = {"traceEvents": [{"name": "x", "ph": "Q", "pid": 1, "tid": 1,
+                                "ts": 0}]}
+        assert any("phase" in e for e in
+                   trace_export.validate_chrome_trace(bad))
+        bad = {"traceEvents": [{"name": "x", "ph": "X", "pid": 1, "tid": 1,
+                                "ts": -5, "dur": 1}]}
+        assert any("ts" in e for e in
+                   trace_export.validate_chrome_trace(bad))
+        bad = {"traceEvents": [{"name": "x", "ph": "X", "pid": 1, "tid": 1,
+                                "ts": 0}]}      # X without dur
+        assert any("dur" in e for e in
+                   trace_export.validate_chrome_trace(bad))
+
+    def test_write_refuses_invalid(self, tmp_path, monkeypatch):
+        optrace.enable()
+        monkeypatch.setattr(trace_export, "chrome_trace",
+                            lambda *a, **k: {"traceEvents": [{"ph": "Q"}]})
+        with pytest.raises(ValueError):
+            trace_export.write_chrome_trace(str(tmp_path / "t.json"))
+
+
+# ---------------------------------------------------------------------------
+# serve integration: span nesting + metrics for a 2-request run
+# ---------------------------------------------------------------------------
+
+
+class TestServeSpans:
+    def test_two_request_run_nests_spans(self):
+        cfg = _cfg()
+        params = T.init_params(KEY, cfg)
+        engine = ServeEngine(params, cfg, batch_slots=2, max_len=16,
+                             prefill_chunk=4, paged=True, page_size=4)
+        reqs = _requests(cfg, [(3, 4), (6, 3)])
+        optrace.enable()
+        outs = engine.generate(reqs)
+        assert all(len(o) > 0 for o in outs)
+
+        spans = optrace.spans()
+        steps = [s for s in spans if s.name == "serve_step"]
+        assert len(steps) == engine.last_stats["steps"]
+        t_end = max(s.ts_s + s.dur_s for s in steps)
+        for ridx in range(2):
+            tid = optrace.TID_REQUEST_BASE + ridx
+            lane = {s.name: s for s in spans if s.tid == tid}
+            assert {"admit", "prefill", "first_token", "decode",
+                    "done"} <= set(lane)
+            pre, dec = lane["prefill"], lane["decode"]
+            # phases tile the request lifecycle in order...
+            assert pre.ts_s <= dec.ts_s
+            assert dec.ts_s == pytest.approx(pre.ts_s + pre.dur_s,
+                                             abs=1e-6)
+            # ...and end within the engine-step envelope (completion is
+            # stamped just after the final step span closes)
+            assert dec.ts_s + dec.dur_s <= t_end + 0.05
+            assert pre.args["request"] == ridx
+            assert pre.args["prompt_len"] == len(reqs[ridx].prompt)
+
+        snap = metrics.snapshot()
+        assert metrics.REGISTRY.get("serve_requests_total").value() == 2.0
+        assert metrics.REGISTRY.get("serve_tokens_total").value() == \
+            sum(len(o) for o in outs)
+        for name in ("pagepool_occupancy", "pagepool_prefix_hit_rate",
+                     "mapper_cache_hit_rate", "serve_ttft_seconds"):
+            assert name in snap, name
+        # stats carry the mapper cache health row (both engines' convention)
+        mc = engine.last_stats["mapper_cache"]
+        assert set(mc) >= {"hits", "misses", "hit_rate", "entries"}
+
+        trace = trace_export.chrome_trace()
+        assert trace_export.validate_chrome_trace(trace) == []
+
+
+# ---------------------------------------------------------------------------
+# off-by-default no-op
+# ---------------------------------------------------------------------------
+
+
+class TestOffByDefault:
+    def test_disabled_run_allocates_nothing(self):
+        cfg = _cfg()
+        params = T.init_params(KEY, cfg)
+        engine = ServeEngine(params, cfg, batch_slots=2, max_len=16,
+                             prefill_chunk=4)
+        engine.generate(_requests(cfg, [(3, 3), (5, 2)]))
+        assert len(metrics.REGISTRY) == 0      # zero metric objects
+        assert optrace.events() == []
+        assert optrace.spans() == []
+
+    def test_tokens_bit_identical_obs_on_vs_off(self):
+        cfg = _cfg()
+        params = T.init_params(KEY, cfg)
+        reqs = _requests(cfg, [(3, 4), (6, 3), (4, 5)])
+
+        def run(enabled):
+            if enabled:
+                optrace.enable()
+            else:
+                optrace.disable()
+            engine = ServeEngine(params, cfg, batch_slots=2, max_len=16,
+                                 prefill_chunk=4, seed=7)
+            return engine.generate(reqs)
+
+        off = run(False)
+        on = run(True)
+        assert on == off
+        assert len(optrace.spans()) > 0        # the on run did record
+
+
+# ---------------------------------------------------------------------------
+# profiler scopes
+# ---------------------------------------------------------------------------
+
+
+class TestProfiler:
+    def test_wall_scope_records_when_enabled(self):
+        optrace.enable()
+        with profiler.wall("unit") as scope:
+            scope.ready(jnp.ones((8, 8)) * 2)
+        assert scope.elapsed_s > 0
+        h = metrics.REGISTRY.get("obs_wall_seconds")
+        assert h is not None
+        key = ("unit",)
+        assert h._values[key]["count"] == 1
+        assert any(s.name == "unit" and s.cat == "wall"
+                   for s in optrace.spans())
+
+    def test_wall_scope_noop_when_disabled(self):
+        with profiler.wall("unit") as scope:
+            scope.ready(jnp.ones((2,)))
+        assert scope.elapsed_s > 0             # timing still returned
+        assert len(metrics.REGISTRY) == 0      # nothing recorded
+
+
+# ---------------------------------------------------------------------------
+# the CLI smoke contract (what CI runs and uploads)
+# ---------------------------------------------------------------------------
+
+
+class TestCliSmoke:
+    def test_smoke_emits_valid_artifacts(self, tmp_path):
+        from repro.obs.__main__ import main
+        trace_path = str(tmp_path / "trace.json")
+        metrics_path = str(tmp_path / "metrics.json")
+        rc = main(["--smoke", "--requests", "2",
+                   "--trace-out", trace_path,
+                   "--metrics-out", metrics_path])
+        assert rc == 0
+        trace = json.load(open(trace_path))
+        assert trace_export.validate_chrome_trace(trace) == []
+        snap = json.load(open(metrics_path))
+        # the acceptance-criteria snapshot contents
+        kinds = {v["labels"]["kind"]
+                 for v in snap["axon_dispatch_total"]["values"]}
+        assert {"gemm", "gemv", "conv2d", "dwconv", "xla"} <= kinds
+        assert snap["axon_fallback_total"]["values"]   # fallback reasons
+        assert "mapper_cache_hit_rate" in snap
+        assert "pagepool_occupancy" in snap
+        assert "pagepool_prefix_hit_rate" in snap
