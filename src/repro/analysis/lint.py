@@ -25,6 +25,15 @@ scope -- they deliberately poke deprecated and interpret-mode paths):
           ``repro.kernels`` -- the registry is the only sanctioned route
   LNT008  a ``pl.pallas_call`` whose ``interpret=`` is missing or a
           literal -- it must thread a policy-derived variable
+  LNT009  a host clock or ``repro.obs`` recording call inside a kernel
+          body or jit-traced step -- under the tracer it stamps trace
+          time / is dropped silently; record from the host loop.  The
+          ``repro.obs.annotate`` scope API is whitelisted (jit-legal by
+          design).
+  LNT010  a dynamic annotation label (f-string interpolation, ``.format``,
+          ``%``) on ``annotate.scope``/``host_scope`` anywhere, or on
+          ``jax.named_scope`` / ``jax.profiler.TraceAnnotation`` in traced
+          code -- labels must be static so scope cardinality stays bounded
 
 Every rule reports ``path:line`` so findings are clickable.
 """
@@ -322,16 +331,16 @@ def _jit_traced_fn_defs(tree: ast.Module) -> list[ast.FunctionDef]:
     return defs
 
 
-def _lnt009_host_calls_in_traced(path: str, tree: ast.Module,
-                                 modname: str) -> list[Finding]:
-    """No host clocks or ``repro.obs`` calls inside kernel bodies or
-    jit-traced step functions: both run under a tracer, where a
-    ``time.perf_counter()`` stamps trace time (once, at compile -- a
-    constant thereafter) and a metrics/optrace call is silently dropped by
-    the tracer guard (or worse, records per-trace instead of per-step)."""
-    # aliases bound to host clocks and to repro.obs in this module
+def _obs_import_aliases(tree: ast.Module
+                        ) -> tuple[set[str], set[str], set[str]]:
+    """(clock_names, obs_roots, annotate_names) bound in this module.
+
+    ``annotate_names`` holds aliases of ``repro.obs.annotate`` (and of its
+    ``scope``/``host_scope`` functions): the one repro.obs API that is
+    legal inside traced code -- it only pushes ``jax.named_scope`` there."""
     clock_names: set[str] = set()
     obs_roots: set[str] = set()
+    annotate_names: set[str] = set()
     for node in ast.walk(tree):
         if isinstance(node, ast.Import):
             for a in node.names:
@@ -340,16 +349,45 @@ def _lnt009_host_calls_in_traced(path: str, tree: ast.Module,
                         f"{a.asname or 'time'}.{c}" for c in _LNT009_CLOCKS)
                 elif a.name == "repro.obs" or a.name.startswith("repro.obs."):
                     obs_roots.add((a.asname or a.name).split(".")[0])
+                    if a.name == "repro.obs.annotate" and a.asname:
+                        annotate_names.add(a.asname)
         elif isinstance(node, ast.ImportFrom) and node.module:
             if node.module == "time":
                 clock_names.update(a.asname or a.name for a in node.names
                                    if a.name in _LNT009_CLOCKS)
-            elif node.module == "repro.obs" \
-                    or node.module.startswith("repro.obs."):
+            elif node.module == "repro.obs":
+                obs_roots.update(a.asname or a.name for a in node.names)
+                annotate_names.update(a.asname or a.name for a in node.names
+                                      if a.name == "annotate")
+            elif node.module == "repro.obs.annotate":
+                obs_roots.update(a.asname or a.name for a in node.names)
+                annotate_names.update(a.asname or a.name for a in node.names
+                                      if a.name in ("scope", "host_scope"))
+            elif node.module.startswith("repro.obs."):
                 obs_roots.update(a.asname or a.name for a in node.names)
             elif node.module == "repro":
                 obs_roots.update(a.asname or a.name for a in node.names
                                  if a.name == "obs")
+    return clock_names, obs_roots, annotate_names
+
+
+def _is_annotate_call(name: str, annotate_names: set[str]) -> bool:
+    """True when a dotted call name resolves to the annotate API."""
+    root = name.split(".")[0]
+    return (name in annotate_names or root in annotate_names
+            or ".annotate." in f".{name}.")
+
+
+def _lnt009_host_calls_in_traced(path: str, tree: ast.Module,
+                                 modname: str) -> list[Finding]:
+    """No host clocks or ``repro.obs`` calls inside kernel bodies or
+    jit-traced step functions: both run under a tracer, where a
+    ``time.perf_counter()`` stamps trace time (once, at compile -- a
+    constant thereafter) and a metrics/optrace call is silently dropped by
+    the tracer guard (or worse, records per-trace instead of per-step).
+    The ``repro.obs.annotate`` API is whitelisted: it exists precisely to
+    be called under the tracer (``jax.named_scope`` is jit-legal)."""
+    clock_names, obs_roots, annotate_names = _obs_import_aliases(tree)
     out = []
     traced = {id(d): d for d in _kernel_fn_defs(tree)}
     traced.update((id(d), d) for d in _jit_traced_fn_defs(tree))
@@ -365,7 +403,8 @@ def _lnt009_host_calls_in_traced(path: str, tree: ast.Module,
                     f"{fn.name!r}: under jit this stamps trace time once "
                     "at compile, not per step -- time on the host side",
                     path=path, line=node.lineno))
-            elif name.split(".")[0] in obs_roots:
+            elif name.split(".")[0] in obs_roots \
+                    and not _is_annotate_call(name, annotate_names):
                 out.append(error(
                     "LNT009", PASS, modname,
                     f"repro.obs call {name}() inside traced function "
@@ -375,10 +414,71 @@ def _lnt009_host_calls_in_traced(path: str, tree: ast.Module,
     return out
 
 
+# annotation label expressions that force a retrace or explode the scope
+# cardinality: f-strings with interpolations, .format(), %-formatting
+def _dynamic_label(expr: ast.expr | None) -> str | None:
+    """Why a label expression is dynamic, or None when it is acceptable.
+
+    Constants, names, attributes and ``+`` concatenations of them are fine
+    (``"axon:" + kind`` resolves to a handful of values); interpolation
+    baked per call site is not -- each distinct label is a distinct name
+    stack entry, and values interpolated from tracers don't even render."""
+    if isinstance(expr, ast.JoinedStr):
+        if any(isinstance(v, ast.FormattedValue) for v in expr.values):
+            return "f-string label"
+        return None
+    if isinstance(expr, ast.Call) and isinstance(expr.func, ast.Attribute) \
+            and expr.func.attr == "format":
+        return ".format() label"
+    if isinstance(expr, ast.BinOp) and isinstance(expr.op, ast.Mod):
+        return "%-formatted label"
+    return None
+
+
+def _lnt010_dynamic_annotation_labels(path: str, tree: ast.Module,
+                                      modname: str) -> list[Finding]:
+    """Annotation names must be static: a per-request or per-step label on
+    ``annotate.scope``/``host_scope`` (anywhere) or on ``jax.named_scope``/
+    ``jax.profiler.TraceAnnotation`` (inside traced defs) creates unbounded
+    scope cardinality in profiles -- and under jit an interpolated tracer
+    renders as its abstract value, once, at trace time."""
+    _, _, annotate_names = _obs_import_aliases(tree)
+    out: list[Finding] = []
+
+    traced = {id(d) for d in _kernel_fn_defs(tree)}
+    traced.update(id(d) for d in _jit_traced_fn_defs(tree))
+    in_traced: set[int] = set()
+    for fn in ast.walk(tree):
+        if isinstance(fn, ast.FunctionDef) and id(fn) in traced:
+            in_traced.update(id(n) for n in ast.walk(fn))
+
+    for node in ast.walk(tree):
+        if not (isinstance(node, ast.Call) and node.args):
+            continue
+        name = _dotted(node.func) or ""
+        is_ann = annotate_names and _is_annotate_call(name, annotate_names)
+        is_raw = name in ("jax.named_scope",
+                          "jax.profiler.TraceAnnotation") \
+            and id(node) in in_traced
+        if not (is_ann or is_raw):
+            continue
+        why = _dynamic_label(node.args[0])
+        if why:
+            out.append(error(
+                "LNT010", PASS, modname,
+                f"{why} in {name}(): annotation names must be static "
+                "(constant or a bounded concatenation) -- dynamic labels "
+                "explode scope cardinality and render tracers as abstract "
+                "values",
+                path=path, line=node.lineno))
+    return out
+
+
 _FILE_RULES = (_lnt001_ops_import, _lnt002_tracer_branch, _lnt003_host_ops,
                _lnt005_interpret_literal, _lnt006_raw_einsum,
                _lnt007_kernel_imports, _lnt008_pallas_interpret_kwarg,
-               _lnt009_host_calls_in_traced)
+               _lnt009_host_calls_in_traced,
+               _lnt010_dynamic_annotation_labels)
 
 
 def check_file(path: str, tree: ast.Module, modname: str) -> list[Finding]:

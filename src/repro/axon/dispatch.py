@@ -47,7 +47,9 @@ from repro.core.dataflows import Dataflow, GemmShape
 from repro.core.energy_model import dram_energy_joules
 from repro.core.mapper import (mapper_cache_info, modeled_traffic,
                                select_tpu_blocking)
+from repro.obs import annotate as _ann
 from repro.obs import optrace as _obs
+from repro.obs import profiler as _profiler
 from repro.kernels.axon_gemm import axon_gemm
 from repro.kernels.dwconv import dwconv
 from repro.kernels.gemv import gemv as gemv_kernel
@@ -533,8 +535,9 @@ def _quant_einsum(spec: str, a, b, pol: ExecutionPolicy,
             "dequant" if route == "dequant" else route,
             route=route, reason=route_reason)
     if route == "dequant":
-        return einsum(spec, a, dequantize(qt), policy=pol,
-                      preferred_element_type=preferred_element_type)
+        return _kernel_call("dequant", pol, lambda: einsum(
+            spec, a, dequantize(qt), policy=pol,
+            preferred_element_type=preferred_element_type))
     plan = plan_contraction(spec, tuple(a.shape), tuple(qt.shape))
     naxis = _rhs_sole_n_axis(spec, a.ndim, qt.ndim)
     colscale = _channel_scale(qt, naxis)
@@ -547,8 +550,8 @@ def _quant_einsum(spec: str, a, b, pol: ExecutionPolicy,
     if route == "int4_gemm":
         # weight-only by design: int4 activations would need calibrated
         # clipping far tighter than serving accuracy tolerates
-        out = registry.get("int4_gemm")(at, qt.q, colscale, plan.K, pol,
-                                        out_dtype)
+        out = _kernel_call("int4_gemm", pol, lambda: registry.get(
+            "int4_gemm")(at, qt.q, colscale, plan.K, pol, out_dtype))
     elif route == "fp8_gemm":
         bt = jax.lax.transpose(qt.q, plan.rhs_perm).reshape(plan.K, plan.N)
         if s_act is not None:
@@ -558,13 +561,15 @@ def _quant_einsum(spec: str, a, b, pol: ExecutionPolicy,
             # uncalibrated: e4m3 is a float format -- a saturating direct
             # cast is the scale-1.0 quantization
             at = to_fp8(at)
-        out = registry.get("fp8_gemm")(at, bt, colscale, pol, out_dtype)
+        out = _kernel_call("fp8_gemm", pol, lambda: registry.get(
+            "fp8_gemm")(at, bt, colscale, pol, out_dtype))
     else:
         bt = jax.lax.transpose(qt.q, plan.rhs_perm).reshape(plan.K, plan.N)
         if s_act is not None:
             at = quantize_activation(at, s_act)
             colscale = colscale * s_act
-        out = registry.get("quant_gemm")(at, bt, colscale, pol, out_dtype)
+        out = _kernel_call("quant_gemm", pol, lambda: registry.get(
+            "quant_gemm")(at, bt, colscale, pol, out_dtype))
     out = out.reshape(plan.out_group_shape)
     return jax.lax.transpose(out, plan.out_perm)
 
@@ -653,6 +658,29 @@ def _xla_dwconv(x, w, *, stride, padding, out_dtype):
 # ---------------------------------------------------------------------------
 
 
+def _kernel_call(kind: str, pol: ExecutionPolicy, fn):
+    """Invoke one kernel dispatch under its device-timeline scope.
+
+    Every dispatch site runs inside ``annotate.scope("axon:<kind>")`` so
+    the staged ops carry the kernel kind into profiler device traces
+    (under jit this costs one name-stack push at trace time; numerics are
+    untouched, keeping obs-off runs bit-identical).  When
+    ``optrace.configure(measure_dispatch=True)`` is set and the call is
+    eager, the dispatch is additionally timed through
+    ``block_until_ready`` into a ``dispatch:<kind>`` wall scope -- the
+    measured side that ``repro.obs.attribution`` joins against the ring's
+    modeled FLOPs/bytes."""
+    if _obs.measuring() and jax.core.trace_state_clean():
+        with _profiler.wall("dispatch:" + kind, kind=kind,
+                            backend=pol.resolved_backend()) as w:
+            with _ann.scope("axon:" + kind):
+                out = fn()
+            w.ready(out)
+        return out
+    with _ann.scope("axon:" + kind):
+        return fn()
+
+
 def _obs_kind(plan: ContractionPlan, pol: ExecutionPolicy) -> str:
     """The registry kind :func:`_dispatch`/:func:`_fp8_dispatch` will use."""
     if pol.precision == "fp8" and plan.B == 1:
@@ -696,6 +724,33 @@ def _obs_record_einsum(spec: str, lhs_shape, rhs_shape, dtype, pol,
         energy_j=dram_energy_joules(nbytes))
 
 
+def _xla_einsum_cost(spec: str, operands) -> tuple[float, float]:
+    """Naive modeled (flops, bytes) for an arbitrary einsum fallback:
+    one MAC per point of the full index space, operands + result streamed
+    once.  Keeps the attribution join total over every dispatched kind;
+    (0, 0) when the spec can't be sized (ellipsis, shapeless operands)."""
+    try:
+        ins, out = spec.replace(" ", "").split("->")
+        if "." in spec:
+            return 0.0, 0.0
+        dims: dict[str, int] = {}
+        for term, o in zip(ins.split(","), operands):
+            for ax, d in zip(term, o.shape):
+                dims[ax] = int(d)
+        flops = 2.0
+        for d in dims.values():
+            flops *= d
+        out_elems = 1
+        for ax in out:
+            out_elems *= dims[ax]
+        itemsize = max(jnp.dtype(o.dtype).itemsize for o in operands)
+        nbytes = float((sum(int(o.size) for o in operands) + out_elems)
+                       * itemsize)
+        return flops, nbytes
+    except Exception:
+        return 0.0, 0.0
+
+
 def _obs_record_xla_einsum(spec: str, operands, precision, pol) -> None:
     """Record the einsum XLA fallback with the reason it fell back."""
     if pol.resolved_backend() == "xla":
@@ -715,11 +770,14 @@ def _obs_record_xla_einsum(spec: str, operands, precision, pol) -> None:
     shapes = [tuple(o.shape) for o in operands if hasattr(o, "shape")]
     dt = next((jnp.dtype(o.dtype).name for o in operands
                if hasattr(o, "dtype")), None)
+    flops, nbytes = _xla_einsum_cost(
+        spec, [o for o in operands if hasattr(o, "shape")])
     _obs.record_dispatch(
         "einsum", "xla", spec=spec,
         lhs=shapes[0] if shapes else None,
         rhs=shapes[1] if len(shapes) > 1 else None, dtype=dt,
-        backend=pol.resolved_backend(), reason=reason)
+        backend=pol.resolved_backend(), reason=reason,
+        flops=flops, bytes=nbytes, energy_j=dram_energy_joules(nbytes))
 
 
 def _obs_record_conv(op: str, kind: str, x, w_shape, pol, H_out: int,
@@ -794,9 +852,9 @@ def einsum(spec: str, *operands, precision=None, preferred_element_type=None,
                 return _dispatch(plan, a, b, pol, preferred_element_type)
     if _obs.enabled():
         _obs_record_xla_einsum(spec, operands, precision, pol)
-    return registry.get("xla_einsum")(
+    return _kernel_call("xla", pol, lambda: registry.get("xla_einsum")(
         spec, *operands, precision=precision,
-        preferred_element_type=preferred_element_type)
+        preferred_element_type=preferred_element_type))
 
 
 def _dispatch(plan: ContractionPlan, a, b, pol: ExecutionPolicy,
@@ -815,7 +873,8 @@ def _dispatch(plan: ContractionPlan, a, b, pol: ExecutionPolicy,
     # would need a batched pallas grid that the kernel doesn't implement yet.
     if pol.zero_gate and plan.B == 1:
         kind = "zero_gate"
-    out = registry.get(kind)(at, bt, pol, out_dtype)      # (B, M, N)
+    out = _kernel_call(kind, pol, lambda: registry.get(kind)(
+        at, bt, pol, out_dtype))                          # (B, M, N)
     out = out.reshape(plan.out_group_shape)
     return jax.lax.transpose(out, plan.out_perm)
 
@@ -833,7 +892,8 @@ def _fp8_dispatch(plan: ContractionPlan, a, b, pol: ExecutionPolicy,
     at = to_fp8(jax.lax.transpose(a, plan.lhs_perm).reshape(plan.M, plan.K))
     bt = to_fp8(jax.lax.transpose(b, plan.rhs_perm).reshape(plan.K, plan.N))
     ones = jnp.ones((plan.N,), jnp.float32)
-    out = registry.get("fp8_gemm")(at, bt, ones, pol, out_dtype)
+    out = _kernel_call("fp8_gemm", pol, lambda: registry.get(
+        "fp8_gemm")(at, bt, ones, pol, out_dtype))
     out = out.reshape(plan.out_group_shape)
     return jax.lax.transpose(out, plan.out_perm)
 
@@ -944,10 +1004,11 @@ def conv2d(x, w, *, stride=1, padding=0, groups: int = 1, out_dtype=None,
                                  reason="int8 im2col kernel")
             xq = quantize_activation(x, s_act)
             out_dt = x.dtype if out_dtype is None else jnp.dtype(out_dtype)
-            return registry.get("quant_conv2d")(
-                xq, w.q, colscale * s_act, pol, st, pads, out_dt,
-                block_rows=block_rows, block_cout=block_cout,
-                block_cin=block_cin)
+            return _kernel_call("quant_conv2d", pol, lambda: registry.get(
+                "quant_conv2d")(
+                    xq, w.q, colscale * s_act, pol, st, pads, out_dt,
+                    block_rows=block_rows, block_cout=block_cout,
+                    block_cin=block_cin))
         w = dequantize(w)
     kh, kw, cig, cout = w.shape
     if groups < 1:
@@ -963,9 +1024,9 @@ def conv2d(x, w, *, stride=1, padding=0, groups: int = 1, out_dtype=None,
         if _obs.enabled():
             _obs_record_conv("conv2d", "xla", x, w.shape, pol, H_out, W_out,
                              reason="xla backend selected by policy")
-        return registry.get("xla_conv2d")(x, w, stride=stride,
-                                          padding=padding, groups=groups,
-                                          out_dtype=out_dtype)
+        return _kernel_call("xla", pol, lambda: registry.get("xla_conv2d")(
+            x, w, stride=stride, padding=padding, groups=groups,
+            out_dtype=out_dtype))
     if H_out < 1 or W_out < 1 or 0 in x.shape or 0 in w.shape:
         # Pallas-ineligible: zero-area output (kernel larger than the padded
         # input, stride overshoot) or empty operands.  XLA produces the
@@ -973,14 +1034,14 @@ def conv2d(x, w, *, stride=1, padding=0, groups: int = 1, out_dtype=None,
         if _obs.enabled():
             _obs_record_conv("conv2d", "xla", x, w.shape, pol, H_out, W_out,
                              reason="pallas-ineligible geometry")
-        return registry.get("xla_conv2d")(x, w, stride=stride,
-                                          padding=padding, groups=groups,
-                                          out_dtype=out_dtype)
+        return _kernel_call("xla", pol, lambda: registry.get("xla_conv2d")(
+            x, w, stride=stride, padding=padding, groups=groups,
+            out_dtype=out_dtype))
     if _obs.enabled():
         _obs_record_conv("conv2d", "conv2d", x, w.shape, pol, H_out, W_out)
-    return registry.get("conv2d")(x, w, pol, stride, padding, groups,
-                                  out_dtype, block_rows=block_rows,
-                                  block_cout=block_cout, block_cin=block_cin)
+    return _kernel_call("conv2d", pol, lambda: registry.get("conv2d")(
+        x, w, pol, stride, padding, groups, out_dtype,
+        block_rows=block_rows, block_cout=block_cout, block_cin=block_cin))
 
 
 def depthwise_conv2d(x, w, *, stride=1, padding=0,
@@ -1007,13 +1068,14 @@ def depthwise_conv2d(x, w, *, stride=1, padding=0,
                 reason="xla backend selected by policy"
                 if pol.resolved_backend() == "xla"
                 else "pallas-ineligible geometry")
-        return registry.get("xla_dwconv")(x, w, stride=stride,
-                                          padding=padding, out_dtype=out_dtype)
+        return _kernel_call("xla", pol, lambda: registry.get("xla_dwconv")(
+            x, w, stride=stride, padding=padding, out_dtype=out_dtype))
     if _obs.enabled():
         _obs_record_conv("depthwise", "dwconv", x, w.shape, pol, H_out,
                          W_out)
-    return registry.get("dwconv")(x, w, pol, stride, padding, out_dtype,
-                                  block_rows=block_rows, block_c=block_c)
+    return _kernel_call("dwconv", pol, lambda: registry.get("dwconv")(
+        x, w, pol, stride, padding, out_dtype,
+        block_rows=block_rows, block_c=block_c))
 
 
 def explain(spec: str, *operands) -> dict:

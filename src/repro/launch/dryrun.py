@@ -468,11 +468,22 @@ def main() -> None:
                          "spans as a Chrome-trace JSON")
     ap.add_argument("--metrics-out", default=None,
                     help="enable repro.obs and write a metrics snapshot")
+    ap.add_argument("--stream-dir", default=None,
+                    help="stream periodic metric snapshots while a full "
+                         "--all sweep lowers (long runs: watch progress "
+                         "from another terminal)")
+    ap.add_argument("--stream-interval", type=float, default=None)
     args = ap.parse_args()
 
-    if args.trace_out or args.metrics_out:
+    if args.trace_out or args.metrics_out or args.stream_dir:
         import repro.obs as obs
+        from repro.obs import streaming
         obs.enable()
+        if args.stream_dir:
+            streaming.start(args.stream_dir,
+                            interval_s=args.stream_interval
+                            if args.stream_interval is not None
+                            else streaming.DEFAULT_INTERVAL_S)
 
     for kv in args.set:
         key, val = kv.split("=", 1)
@@ -507,8 +518,12 @@ def main() -> None:
             print(f"[FAIL] {tag}: {type(e).__name__}: {e}")
         with open(path, "w") as f:
             json.dump(res, f, indent=1)
-    if args.trace_out or args.metrics_out:
+    if args.trace_out or args.metrics_out or args.stream_dir:
         import repro.obs as obs
+        if args.stream_dir:
+            from repro.obs import streaming
+            streaming.stop()
+            print(f"streamed snapshots in {args.stream_dir}")
         if args.trace_out:
             obs.write_chrome_trace(args.trace_out, process_name="dryrun")
             print(f"trace written to {args.trace_out}")

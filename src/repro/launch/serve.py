@@ -37,11 +37,36 @@ def main() -> None:
                          "(load at ui.perfetto.dev)")
     ap.add_argument("--metrics-out", default=None,
                     help="enable repro.obs and write a metrics snapshot")
+    ap.add_argument("--prom-out", default=None,
+                    help="enable repro.obs and write the Prometheus text "
+                         "exposition")
+    ap.add_argument("--profile-dir", default=None,
+                    help="capture a jax.profiler device trace into this "
+                         "directory (named scopes nest under serve steps)")
+    ap.add_argument("--sample-every", type=int, default=1,
+                    help="op-ring sampling stride (counters stay exact)")
+    ap.add_argument("--stream-dir", default=None,
+                    help="stream periodic metric snapshots (JSONL + prom "
+                         "textfile) into this directory during the serve")
+    ap.add_argument("--stream-interval", type=float, default=None,
+                    help="seconds between streaming snapshots")
     args = ap.parse_args()
 
-    if args.trace_out or args.metrics_out:
+    obs_on = bool(args.trace_out or args.metrics_out or args.prom_out
+                  or args.stream_dir or args.profile_dir
+                  or args.sample_every > 1)
+    if obs_on:
         import repro.obs as obs
+        from repro.obs import profiler, streaming
         obs.enable()
+        obs.configure(sample_every=args.sample_every)
+        if args.profile_dir:
+            profiler.start(args.profile_dir)
+        if args.stream_dir:
+            interval = args.stream_interval \
+                if args.stream_interval is not None \
+                else streaming.DEFAULT_INTERVAL_S
+            streaming.start(args.stream_dir, interval_s=interval)
 
     cfg = get_config(args.arch, reduced=args.reduced)
     params = T.init_params(jax.random.PRNGKey(0), cfg)
@@ -77,14 +102,30 @@ def main() -> None:
               f"{stats['steps']} steps, p50 latency {np.percentile(lat, 50):.2f}s, "
               f"p99 {np.percentile(lat, 99):.2f}s)")
 
-    if args.trace_out or args.metrics_out:
+    if stats and "attribution" in stats:
+        att = stats["attribution"]
+        print(f"attribution: modeled {att['modeled_flops']:.3g} FLOPs, "
+              f"step coverage {att['modeled_step_coverage']:.0%}, "
+              f"roofline {att['roofline']}")
+
+    if obs_on:
         import repro.obs as obs
+        from repro.obs import profiler, streaming
+        if args.profile_dir and profiler.stop():
+            print(f"profiler trace in {args.profile_dir}")
+        if args.stream_dir:
+            streaming.stop()
+            print(f"streamed snapshots in {args.stream_dir}")
         if args.trace_out:
             obs.write_chrome_trace(args.trace_out, process_name="serve")
             print(f"trace written to {args.trace_out}")
         if args.metrics_out:
             obs.REGISTRY.write_json(args.metrics_out)
             print(f"metrics written to {args.metrics_out}")
+        if args.prom_out:
+            with open(args.prom_out, "w") as f:
+                f.write(obs.metrics.prometheus_text())
+            print(f"prometheus exposition written to {args.prom_out}")
 
 
 if __name__ == "__main__":

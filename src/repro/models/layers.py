@@ -17,6 +17,7 @@ import jax.numpy as jnp
 
 from repro import axon
 from repro.kernels.flash_attention import int8_flash_attention_fwd
+from repro.obs import annotate as _ann
 from repro.parallel.sharding import constrain, constrain_priority
 from repro.serve import kvcache as KV
 
@@ -330,8 +331,11 @@ def attention_fwd(
         n_buf = paged.seq_pages(window)
         size = n_buf * paged.page_size
         v_mask = valid if valid is not None else jnp.ones((B, S), bool)
-        k_old = KV.read_seq(cache, "k", page_table, n_buf, dtype=paged.dtype)
-        v_old = KV.read_seq(cache, "v", page_table, n_buf, dtype=paged.dtype)
+        with _ann.scope("kv_gather"):
+            k_old = KV.read_seq(cache, "k", page_table, n_buf,
+                                dtype=paged.dtype)
+            v_old = KV.read_seq(cache, "v", page_table, n_buf,
+                                dtype=paged.dtype)
         k_in = k.astype(paged.dtype)
         v_in = v.astype(paged.dtype)
         out = cached_attention(q, k_old, v_old, k_in, v_in,
@@ -339,10 +343,11 @@ def attention_fwd(
                                window=window)
         idx = positions % size if window else positions       # (B, S) logical
         new_cache = dict(cache)
-        new_cache.update(KV.write_seq(cache, "k", page_table, k_in, idx,
-                                      v_mask, paged.fmt))
-        new_cache.update(KV.write_seq(cache, "v", page_table, v_in, idx,
-                                      v_mask, paged.fmt))
+        with _ann.scope("kv_scatter"):
+            new_cache.update(KV.write_seq(cache, "k", page_table, k_in, idx,
+                                          v_mask, paged.fmt))
+            new_cache.update(KV.write_seq(cache, "v", page_table, v_in, idx,
+                                          v_mask, paged.fmt))
         new_cache["len"] = pos0 + v_mask.sum(-1).astype(pos0.dtype)
     else:
         # slot-cached path: decode (S=1) or a teacher-forced prefill chunk.

@@ -13,6 +13,7 @@ import jax
 import jax.numpy as jnp
 
 from repro import axon
+from repro.obs import annotate as _ann
 from repro.models.layers import (
     Params,
     _dense_init,
@@ -98,15 +99,17 @@ def mla_fwd(p: Params, x: jax.Array, cfg, *, positions,
             n_buf = paged.seq_pages(0)                        # MLA: no SWA
             S_c = n_buf * paged.page_size
             paged_cache = dict(cache)
-            paged_cache.update(KV.write_seq(cache, "c", page_table, c,
-                                            positions, v_mask, paged.fmt))
-            paged_cache.update(KV.write_seq(cache, "k_pe", page_table,
-                                            k_pe[:, :, 0], positions, v_mask,
-                                            paged.fmt))
-            c_cache = KV.read_seq(paged_cache, "c", page_table, n_buf,
-                                  dtype=paged.dtype)
-            pe_cache = KV.read_seq(paged_cache, "k_pe", page_table, n_buf,
-                                   dtype=paged.dtype)
+            with _ann.scope("kv_scatter"):
+                paged_cache.update(KV.write_seq(cache, "c", page_table, c,
+                                                positions, v_mask, paged.fmt))
+                paged_cache.update(KV.write_seq(cache, "k_pe", page_table,
+                                                k_pe[:, :, 0], positions,
+                                                v_mask, paged.fmt))
+            with _ann.scope("kv_gather"):
+                c_cache = KV.read_seq(paged_cache, "c", page_table, n_buf,
+                                      dtype=paged.dtype)
+                pe_cache = KV.read_seq(paged_cache, "k_pe", page_table, n_buf,
+                                       dtype=paged.dtype)
         else:
             paged_cache = None
             S_c = cache["c"].shape[1]

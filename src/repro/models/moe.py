@@ -28,6 +28,7 @@ import jax.numpy as jnp
 
 from repro import axon
 from repro.models.layers import Params, _dense_init
+from repro.obs import annotate as _ann
 from repro.parallel.sharding import constrain
 
 
@@ -52,10 +53,11 @@ def _route_chunk(p: Params, x: jax.Array, cfg) -> tuple[jax.Array, jax.Array]:
     k, E = cfg.top_k, cfg.n_experts
     Tk = S * k
 
-    logits = axon.einsum("bsd,de->bse", x.astype(jnp.float32),
-                        p["router"].astype(jnp.float32))
-    probs = jax.nn.softmax(logits, axis=-1)                # (B, S, E)
-    vals, idx = jax.lax.top_k(probs, k)                    # (B, S, k)
+    with _ann.scope("moe_route"):
+        logits = axon.einsum("bsd,de->bse", x.astype(jnp.float32),
+                            p["router"].astype(jnp.float32))
+        probs = jax.nn.softmax(logits, axis=-1)            # (B, S, E)
+        vals, idx = jax.lax.top_k(probs, k)                # (B, S, k)
     vals = vals / jnp.maximum(vals.sum(-1, keepdims=True), 1e-9)
 
     # Switch aux loss: E * mean_e(frac tokens -> e) * mean_e(router prob)
@@ -90,11 +92,13 @@ def _route_chunk(p: Params, x: jax.Array, cfg) -> tuple[jax.Array, jax.Array]:
     spec = ("model", None) if cfg.expert_shard == "ep" else (None, "model")
     buf = constrain(buf, "batch", spec[0], None, None)
 
-    g = axon.einsum("becd,edf->becf", buf, p["w_gate"])
-    u = axon.einsum("becd,edf->becf", buf, p["w_up"])
-    h = jax.nn.silu(g.astype(jnp.float32)).astype(x.dtype) * u
-    h = constrain(h, "batch", spec[0], None, spec[1])
-    y = axon.einsum("becf,efd->becd", h, p["w_down"]).reshape(B, E * cap, D)
+    with _ann.scope("moe_experts"):
+        g = axon.einsum("becd,edf->becf", buf, p["w_gate"])
+        u = axon.einsum("becd,edf->becf", buf, p["w_up"])
+        h = jax.nn.silu(g.astype(jnp.float32)).astype(x.dtype) * u
+        h = constrain(h, "batch", spec[0], None, spec[1])
+        y = axon.einsum("becf,efd->becd", h,
+                        p["w_down"]).reshape(B, E * cap, D)
 
     # gather back to slots, un-sort, combine with router weights
     y = jnp.concatenate([y, jnp.zeros((B, 1, D), y.dtype)], axis=1)

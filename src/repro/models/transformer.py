@@ -25,6 +25,7 @@ import jax.numpy as jnp
 from repro import axon
 from repro.configs.base import ModelConfig, StageCfg
 from repro.models import layers as L
+from repro.obs import annotate as _ann
 from repro.models import mla as MLA
 from repro.models import moe as MOE
 from repro.models import ssm as SSM
@@ -95,22 +96,31 @@ def block_fwd(p: Params, x: jax.Array, cfg: ModelConfig, stage: StageCfg, *,
     """
     aux = jnp.zeros((), jnp.float32)
     if stage.block in ("dense", "moe"):
-        h = L.rmsnorm(p["ln1"], x)
-        a, new_attn_cache = _attn_apply(p["attn"], h, cfg, stage, positions,
-                                        None if cache is None else cache["attn"],
-                                        exact_causal, valid,
-                                        page_table, paged)
-        x = x + a
-        h = L.rmsnorm(p["ln2"], x)
+        with _ann.scope("attention"):
+            h = L.rmsnorm(p["ln1"], x)
+            a, new_attn_cache = _attn_apply(p["attn"], h, cfg, stage, positions,
+                                            None if cache is None else cache["attn"],
+                                            exact_causal, valid,
+                                            page_table, paged)
+            x = x + a
         if stage.block == "moe":
-            f, aux = MOE.moe_fwd(p["ffn"], h, cfg)
+            with _ann.scope("moe"):
+                h = L.rmsnorm(p["ln2"], x)
+                f, aux = MOE.moe_fwd(p["ffn"], h, cfg)
         else:
-            f = L.mlp_fwd(p["ffn"], h)
+            with _ann.scope("mlp"):
+                h = L.rmsnorm(p["ln2"], x)
+                f = L.mlp_fwd(p["ffn"], h)
         x = x + f
         new_cache = None if cache is None else {"attn": new_attn_cache}
         return x, new_cache, aux
 
     # ssm blocks
+    with _ann.scope("ssm"):
+        return _ssm_block(p, x, aux, cfg, stage, cache, valid)
+
+
+def _ssm_block(p, x, aux, cfg, stage, cache, valid):
     h = L.rmsnorm(p["ln1"], x)
     fwd_fn = SSM.mamba1_fwd if stage.block == "mamba1" else SSM.mamba2_fwd
     step_fn = SSM.mamba1_step if stage.block == "mamba1" else SSM.mamba2_step
@@ -292,15 +302,16 @@ def init_params(key, cfg: ModelConfig) -> Params:
 
 
 def _embed_inputs(params: Params, batch: dict, cfg: ModelConfig) -> jax.Array:
-    if cfg.frontend == "audio":
-        x = batch["embeds"].astype(cfg.cdtype)       # stubbed EnCodec frontend
-    elif cfg.frontend == "vlm":
-        tok = jnp.take(params["embed"], batch["tokens"], axis=0)
-        x = jnp.concatenate(
-            [batch["pixel_embeds"].astype(tok.dtype), tok], axis=1)
-    else:
-        x = jnp.take(params["embed"], batch["tokens"], axis=0)
-    return constrain(x.astype(cfg.cdtype), "batch", None, None)
+    with _ann.scope("embed"):
+        if cfg.frontend == "audio":
+            x = batch["embeds"].astype(cfg.cdtype)   # stubbed EnCodec frontend
+        elif cfg.frontend == "vlm":
+            tok = jnp.take(params["embed"], batch["tokens"], axis=0)
+            x = jnp.concatenate(
+                [batch["pixel_embeds"].astype(tok.dtype), tok], axis=1)
+        else:
+            x = jnp.take(params["embed"], batch["tokens"], axis=0)
+        return constrain(x.astype(cfg.cdtype), "batch", None, None)
 
 
 def forward(params: Params, batch: dict, cfg: ModelConfig, *,
@@ -314,7 +325,8 @@ def forward(params: Params, batch: dict, cfg: ModelConfig, *,
         x, a = stage_fwd(p_s, x, cfg, s, positions=positions,
                          exact_causal=exact_causal)
         aux = aux + a
-    return L.rmsnorm(params["final_norm"], x), aux
+    with _ann.scope("norm"):
+        return L.rmsnorm(params["final_norm"], x), aux
 
 
 def _lm_head(params: Params, cfg: ModelConfig) -> jax.Array:
@@ -407,10 +419,11 @@ def init_caches(cfg: ModelConfig, batch: int, max_len: int,
 
 
 def _head_logits(params: Params, x: jax.Array, cfg: ModelConfig) -> jax.Array:
-    logits = axon.einsum("bsd,dv->bsv", x, _lm_head(params, cfg))
-    logits = jnp.where(jnp.arange(cfg.vocab_pad) >= cfg.vocab, -1e30,
-                       logits.astype(jnp.float32))[..., : cfg.vocab_pad]
-    return logits[..., : cfg.vocab]
+    with _ann.scope("lm_head"):
+        logits = axon.einsum("bsd,dv->bsv", x, _lm_head(params, cfg))
+        logits = jnp.where(jnp.arange(cfg.vocab_pad) >= cfg.vocab, -1e30,
+                           logits.astype(jnp.float32))[..., : cfg.vocab_pad]
+        return logits[..., : cfg.vocab]
 
 
 def decode_step(params: Params, caches: Params, batch: dict,
@@ -418,11 +431,13 @@ def decode_step(params: Params, caches: Params, batch: dict,
                 paged: KV.PagedCacheConfig | None = None
                 ) -> tuple[jax.Array, Params]:
     """One-token decode: batch['tokens'] (B, 1) (or 'embeds' (B, 1, D))."""
-    if cfg.frontend == "audio":
-        x = batch["embeds"].astype(cfg.cdtype)
-    else:
-        x = jnp.take(params["embed"], batch["tokens"], axis=0).astype(cfg.cdtype)
-    x = constrain(x, "batch", None, None)
+    with _ann.scope("embed"):
+        if cfg.frontend == "audio":
+            x = batch["embeds"].astype(cfg.cdtype)
+        else:
+            x = jnp.take(params["embed"], batch["tokens"],
+                         axis=0).astype(cfg.cdtype)
+        x = constrain(x, "batch", None, None)
     positions = caches["pos"][:, None]                  # (B, 1) per slot
     page_table = caches.get(KV.PAGE_TABLE_KEY)
     new_stage_caches = []
@@ -430,7 +445,8 @@ def decode_step(params: Params, caches: Params, batch: dict,
         x, nc = stage_decode(p_s, x, c_s, cfg, s, positions=positions,
                              page_table=page_table, paged=paged)
         new_stage_caches.append(nc)
-    x = L.rmsnorm(params["final_norm"], x)
+    with _ann.scope("norm"):
+        x = L.rmsnorm(params["final_norm"], x)
     new_caches = {"pos": caches["pos"] + 1, "stages": new_stage_caches}
     if page_table is not None:
         new_caches[KV.PAGE_TABLE_KEY] = page_table
@@ -459,11 +475,13 @@ def prefill_step(params: Params, caches: Params, batch: dict,
     standard capacity-vs-chunking trade of GShard-style MoE serving.
     Batch-of-N vs batch-of-1 identity is unaffected (routing is per row).
     """
-    if cfg.frontend == "audio":
-        x = batch["embeds"].astype(cfg.cdtype)
-    else:
-        x = jnp.take(params["embed"], batch["tokens"], axis=0).astype(cfg.cdtype)
-    x = constrain(x, "batch", None, None)
+    with _ann.scope("embed"):
+        if cfg.frontend == "audio":
+            x = batch["embeds"].astype(cfg.cdtype)
+        else:
+            x = jnp.take(params["embed"], batch["tokens"],
+                         axis=0).astype(cfg.cdtype)
+        x = constrain(x, "batch", None, None)
     valid = valid.astype(bool)
     C = x.shape[1]
     positions = caches["pos"][:, None] + jnp.arange(C)[None, :]   # (B, C)
@@ -473,7 +491,8 @@ def prefill_step(params: Params, caches: Params, batch: dict,
         x, nc = stage_decode(p_s, x, c_s, cfg, s, positions=positions,
                              valid=valid, page_table=page_table, paged=paged)
         new_stage_caches.append(nc)
-    x = L.rmsnorm(params["final_norm"], x)
+    with _ann.scope("norm"):
+        x = L.rmsnorm(params["final_norm"], x)
     new_caches = {
         "pos": caches["pos"] + valid.sum(-1).astype(jnp.int32),
         "stages": new_stage_caches,

@@ -22,19 +22,21 @@ Or from the shell::
     python -m repro.obs --smoke --trace-out trace.json \
         --metrics-out metrics.json
 """
-from repro.obs import metrics, optrace, profiler, trace_export
+from repro.obs import (annotate, attribution, metrics, optrace, profiler,
+                       streaming, trace_export)
 from repro.obs.metrics import (Counter, Gauge, Histogram, MetricsRegistry,
                                REGISTRY, host_clean)
-from repro.obs.optrace import (OpEvent, SpanEvent, disable, enable, enabled,
-                               record_dispatch, span)
+from repro.obs.optrace import (OpEvent, SpanEvent, configure, disable,
+                               enable, enabled, record_dispatch, span)
 from repro.obs.trace_export import (chrome_trace, validate_chrome_trace,
                                     write_chrome_trace)
 
 __all__ = [
-    "metrics", "optrace", "profiler", "trace_export",
+    "annotate", "attribution", "metrics", "optrace", "profiler",
+    "streaming", "trace_export",
     "Counter", "Gauge", "Histogram", "MetricsRegistry", "REGISTRY",
     "host_clean",
-    "OpEvent", "SpanEvent", "disable", "enable", "enabled",
+    "OpEvent", "SpanEvent", "configure", "disable", "enable", "enabled",
     "record_dispatch", "span",
     "chrome_trace", "validate_chrome_trace", "write_chrome_trace",
 ]

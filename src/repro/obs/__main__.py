@@ -15,8 +15,14 @@ Two workload pieces, both tiny in ``--smoke`` mode:
     mapper cache stats all populate.
 
 Artifacts: ``--trace-out`` (Chrome-trace JSON, load at ui.perfetto.dev),
-``--metrics-out`` (registry JSON snapshot), ``--prom-out`` (Prometheus
-text exposition), ``--profile-dir`` (optional ``jax.profiler`` capture).
+``--metrics-out`` (registry JSON snapshot), ``--attribution-out``
+(measured-vs-modeled attribution per kernel kind -- the op sampler runs
+with ``measure_dispatch`` on, so every eager kernel call is wall-timed),
+``--prom-out`` (Prometheus text exposition), ``--profile-dir`` (optional
+``jax.profiler`` capture: named device scopes nest under the host wall
+spans), ``--stream-dir`` (periodic JSONL + Prometheus textfile snapshots
+while the workload runs), ``--sample-every`` (record every Nth dispatch
+into the ring; counters stay exact).
 """
 from __future__ import annotations
 
@@ -28,7 +34,8 @@ import jax
 import jax.numpy as jnp
 
 import repro.axon as axon
-from repro.obs import metrics, optrace, profiler, trace_export
+from repro.obs import (attribution, metrics, optrace, profiler, streaming,
+                       trace_export)
 
 
 def run_op_sampler(*, reps: int = 2) -> None:
@@ -114,15 +121,30 @@ def main(argv: list[str] | None = None) -> int:
                     default=optrace.DEFAULT_RING_SIZE)
     ap.add_argument("--trace-out", default="trace.json")
     ap.add_argument("--metrics-out", default="metrics.json")
+    ap.add_argument("--attribution-out", default="attribution.json",
+                    help="measured-vs-modeled attribution report")
     ap.add_argument("--prom-out", default=None,
                     help="also write the Prometheus text exposition here")
     ap.add_argument("--profile-dir", default=None,
                     help="capture a jax.profiler trace into this directory")
+    ap.add_argument("--sample-every", type=int, default=1,
+                    help="record every Nth dispatch into the op ring "
+                         "(side counters stay exact)")
+    ap.add_argument("--stream-dir", default=None,
+                    help="stream periodic metric snapshots (JSONL + prom "
+                         "textfile) into this directory while running")
+    ap.add_argument("--stream-interval", type=float,
+                    default=streaming.DEFAULT_INTERVAL_S)
     args = ap.parse_args(argv)
 
     optrace.enable(ring_size=args.ring_size)
+    # the op sampler is eager, so dispatch walls are measurable -- that is
+    # the measured half of the attribution join
+    optrace.configure(sample_every=args.sample_every, measure_dispatch=True)
     if args.profile_dir:
         profiler.start(args.profile_dir)
+    if args.stream_dir:
+        streaming.start(args.stream_dir, interval_s=args.stream_interval)
 
     n_req = args.requests or (4 if args.smoke else 8)
     serve_stats = None
@@ -139,14 +161,19 @@ def main(argv: list[str] | None = None) -> int:
 
     if args.profile_dir:
         profiler.stop()
+    if args.stream_dir:
+        streaming.stop()           # final flush: short runs still snapshot
 
     trace = trace_export.write_chrome_trace(args.trace_out)
     metrics.REGISTRY.write_json(args.metrics_out)
+    attr_rep = attribution.write_json(args.attribution_out)
     if args.prom_out:
         with open(args.prom_out, "w") as f:
             f.write(metrics.prometheus_text())
 
     snap = metrics.snapshot()
+    measured = [r["kind"] for r in attr_rep["kinds"]
+                if r["measured_wall_s"]]
     summary = {
         "trace_events": len(trace["traceEvents"]),
         "metrics": len(snap),
@@ -156,11 +183,22 @@ def main(argv: list[str] | None = None) -> int:
         "fallback_reasons": sorted({
             v["labels"]["reason"]
             for v in snap.get("axon_fallback_total", {}).get("values", [])}),
+        "measured_kinds": sorted(set(measured)),
+        "sample_every": optrace.sample_every(),
+        "sampled_out_ops": optrace.sampled_out_ops(),
         "trace_out": args.trace_out,
         "metrics_out": args.metrics_out,
+        "attribution_out": args.attribution_out,
     }
     if serve_stats is not None and "pool" in serve_stats:
         summary["pool_occupancy"] = serve_stats["pool"]["occupancy"]
+    if serve_stats is not None and "attribution" in serve_stats:
+        summary["serve_modeled_step_coverage"] = \
+            serve_stats["attribution"]["modeled_step_coverage"]
+    if args.stream_dir:
+        snaps = streaming.read_jsonl(
+            f"{args.stream_dir}/{streaming.JSONL_NAME}")
+        summary["stream_snapshots"] = len(snaps)
     print(json.dumps(summary, indent=1))
     return 0
 

@@ -1,0 +1,74 @@
+"""Jit-safe device-timeline annotation.
+
+The optrace/metrics layer is host-only by construction: the tracer guard
+drops any record made under a jit trace, and LNT009 bans host clocks from
+traced step functions.  That leaves the jitted step *interior* -- where all
+production time is spent -- opaque.  The sanctioned way to label it is the
+name stack: ``jax.named_scope`` pushes a scope name at trace time, the
+staged ops carry it into HLO metadata, and ``jax.profiler`` device traces
+render those names as nested tracks -- so "attention" / "moe" / "axon:gemm"
+show up on the device timeline under the same Perfetto view as the host
+serve spans.
+
+Two primitives:
+
+  * :func:`scope` -- legal anywhere.  Under a trace it only pushes the
+    name stack (zero runtime cost; the label is baked into the lowered
+    HLO).  On the host, while a ``jax.profiler`` capture is running, it
+    additionally enters a ``jax.profiler.TraceAnnotation`` so eager
+    sections line up on the profiler's host track.
+  * :func:`host_scope` -- host-only ``TraceAnnotation`` (no name-stack
+    entry), for engine loops that want their step dispatch visible on the
+    profiler timeline; gate with ``enabled=`` so telemetry-off runs skip
+    even the capture check.
+
+The TraceAnnotation (a TraceMe) is only entered while a profiler capture
+is active: it has no consumer otherwise, and entering one per engine step
+or per eager dispatch is measurable overhead on sub-millisecond steps.
+
+Labels must be static strings (a plain literal or a host-computed name
+such as ``"axon:" + kind``).  Interpolating a *traced* value into a label
+(f-string / ``str.format`` on tracers) either crashes at trace time or
+bakes one trace's repr into every subsequent step -- lint rule LNT010
+rejects both forms inside traced code.
+"""
+from __future__ import annotations
+
+import contextlib
+
+import jax
+
+__all__ = ["scope", "host_scope"]
+
+
+def _capturing() -> bool:
+    """True while a ``jax.profiler`` capture is running (repro.obs.profiler
+    tracks it).  Imported lazily: profiler imports this module at top."""
+    from repro.obs import profiler
+    return profiler.active()
+
+
+@contextlib.contextmanager
+def scope(name: str):
+    """Label everything staged (or run) inside the block with ``name``."""
+    if jax.core.trace_state_clean() and _capturing():
+        with jax.named_scope(name), jax.profiler.TraceAnnotation(name):
+            yield
+    else:
+        with jax.named_scope(name):
+            yield
+
+
+@contextlib.contextmanager
+def host_scope(name: str, *, enabled: bool = True):
+    """Host-side profiler annotation only (no name-stack entry).
+
+    A no-op when ``enabled`` is falsy, when no profiler capture is
+    running, or when called under a trace -- an engine can wrap its step
+    dispatch unconditionally and stay a true no-op with telemetry off.
+    """
+    if enabled and jax.core.trace_state_clean() and _capturing():
+        with jax.profiler.TraceAnnotation(name):
+            yield
+    else:
+        yield

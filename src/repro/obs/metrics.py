@@ -235,7 +235,7 @@ class MetricsRegistry:
         for name in sorted(self._metrics):
             m = self._metrics[name]
             if m.help:
-                lines.append(f"# HELP {name} {m.help}")
+                lines.append(f"# HELP {name} {_escape_help(m.help)}")
             lines.append(f"# TYPE {name} {m.type}")
             for key, val in m._series():
                 labels = m.labels_dict(key)
@@ -271,7 +271,16 @@ def _prom_line(name: str, labels: dict[str, str], value: Any) -> str:
 
 
 def _escape(s: str) -> str:
+    """Label-value escaping per the exposition-format spec: backslash,
+    double-quote, and newline (in that order, so the escapes themselves
+    survive)."""
     return s.replace("\\", r"\\").replace('"', r"\"").replace("\n", r"\n")
+
+
+def _escape_help(s: str) -> str:
+    """HELP-text escaping: only backslash and newline (quotes are legal
+    verbatim in help text, unlike in label values)."""
+    return s.replace("\\", r"\\").replace("\n", r"\n")
 
 
 # the process-default registry and its convenience constructors

@@ -87,7 +87,9 @@ class SpanEvent:
 
 
 class _State:
-    __slots__ = ("enabled", "ring", "spans", "t0", "dropped_ops")
+    __slots__ = ("enabled", "ring", "spans", "t0", "dropped_ops",
+                 "sample_every", "op_seq", "sampled_out",
+                 "measure_dispatch", "traced")
 
     def __init__(self) -> None:
         self.enabled = False
@@ -95,6 +97,13 @@ class _State:
         self.spans: deque[SpanEvent] = deque(maxlen=DEFAULT_RING_SIZE)
         self.t0 = time.perf_counter()
         self.dropped_ops = 0
+        # recording configuration (sticky across enable()/disable())
+        self.sample_every = 1
+        self.measure_dispatch = False
+        # sampling + traced-cost bookkeeping (reset with the rings)
+        self.op_seq = 0
+        self.sampled_out = 0
+        self.traced: dict[tuple[str, str], list[float]] = {}
 
 
 _STATE = _State()
@@ -109,7 +118,47 @@ def enable(ring_size: int = DEFAULT_RING_SIZE, *, reset: bool = True) -> None:
         _STATE.spans = deque(maxlen=ring_size)
         _STATE.t0 = time.perf_counter()
         _STATE.dropped_ops = 0
+        _STATE.op_seq = 0
+        _STATE.sampled_out = 0
+        _STATE.traced = {}
     _STATE.enabled = True
+
+
+def configure(*, sample_every: int | None = None,
+              measure_dispatch: bool | None = None) -> dict[str, Any]:
+    """Adjust recording behaviour; returns the active configuration.
+
+    ``sample_every=N`` keeps every side counter exact but appends only
+    every Nth eager dispatch to the op ring (the rest are tallied in
+    :func:`sampled_out_ops`), so always-on tracing stays cheap at
+    production dispatch rates.  ``measure_dispatch=True`` asks the
+    dispatcher to time each eager kernel call through
+    ``jax.block_until_ready`` and record a ``dispatch:<kind>`` wall scope
+    -- the measured side of ``repro.obs.attribution`` -- at the cost of
+    serializing dispatch, so leave it off for throughput runs.
+
+    Configuration is sticky across :func:`enable`/:func:`disable`; pass
+    explicit values to restore defaults (``sample_every=1``,
+    ``measure_dispatch=False``).
+    """
+    if sample_every is not None:
+        if sample_every < 1:
+            raise ValueError(
+                f"sample_every must be >= 1, got {sample_every}")
+        _STATE.sample_every = int(sample_every)
+    if measure_dispatch is not None:
+        _STATE.measure_dispatch = bool(measure_dispatch)
+    return {"sample_every": _STATE.sample_every,
+            "measure_dispatch": _STATE.measure_dispatch}
+
+
+def sample_every() -> int:
+    return _STATE.sample_every
+
+
+def measuring() -> bool:
+    """True when enabled AND dispatch-wall measurement was requested."""
+    return _STATE.enabled and _STATE.measure_dispatch
 
 
 def disable() -> None:
@@ -121,11 +170,14 @@ def enabled() -> bool:
 
 
 def reset() -> None:
-    """Drop buffered events (keeps the enabled flag as-is)."""
+    """Drop buffered events (keeps the enabled flag and configuration)."""
     _STATE.ring.clear()
     _STATE.spans.clear()
     _STATE.t0 = time.perf_counter()
     _STATE.dropped_ops = 0
+    _STATE.op_seq = 0
+    _STATE.sampled_out = 0
+    _STATE.traced = {}
 
 
 def epoch() -> float:
@@ -150,20 +202,59 @@ def dropped_ops() -> int:
     return _STATE.dropped_ops
 
 
+def sampled_out_ops() -> int:
+    """Dispatches counted but skipped by ``configure(sample_every=N)``."""
+    return _STATE.sampled_out
+
+
+def traced_costs() -> dict[tuple[str, str], dict[str, float]]:
+    """Modeled cost of dispatches staged *under a trace* while enabled.
+
+    A jitted step dispatches once per compilation, so these are per-trace
+    sums keyed by ``(op, kind)`` -- the modeled cost of one traced step
+    body, not of any execution.  Engines difference :func:`traced_totals`
+    around a jitted call to learn each step signature's modeled cost.
+    """
+    return {k: {"count": v[0], "flops": v[1], "bytes": v[2],
+                "energy_j": v[3]}
+            for k, v in _STATE.traced.items()}
+
+
+def traced_totals() -> dict[str, float]:
+    """Aggregate of :func:`traced_costs` across all (op, kind)."""
+    tot = {"count": 0.0, "flops": 0.0, "bytes": 0.0, "energy_j": 0.0}
+    for row in _STATE.traced.values():
+        tot["count"] += row[0]
+        tot["flops"] += row[1]
+        tot["bytes"] += row[2]
+        tot["energy_j"] += row[3]
+    return tot
+
+
 # ---------------------------------------------------------------------------
 # op recording (called by repro.axon.dispatch)
 # ---------------------------------------------------------------------------
 
 
 def record_dispatch(op: str, kind: str, **fields: Any) -> None:
-    """Record one dispatch decision (no-op when disabled or while JAX is
-    staging a trace -- see the module docstring)."""
-    if not _STATE.enabled or not metrics.host_clean():
+    """Record one dispatch decision (no-op when disabled; while JAX is
+    staging a trace only the modeled-cost ledger is fed -- see the module
+    docstring)."""
+    if not _STATE.enabled:
+        return
+    if not metrics.host_clean():
+        # Staged under a trace: this dispatch runs once per compilation,
+        # not per execution, so no op event and no counters.  Its modeled
+        # cost is still a host constant (shapes are static), so keep the
+        # per-(op, kind) ledger that attribution uses to cost jitted steps.
+        row = _STATE.traced.setdefault((op, kind), [0.0, 0.0, 0.0, 0.0])
+        row[0] += 1.0
+        row[1] += float(fields.get("flops") or 0.0)
+        row[2] += float(fields.get("bytes") or 0.0)
+        row[3] += float(fields.get("energy_j") or 0.0)
         return
     ev = OpEvent(ts_s=now_s(), op=op, kind=kind, **fields)
-    if len(_STATE.ring) == _STATE.ring.maxlen:
-        _STATE.dropped_ops += 1
-    _STATE.ring.append(ev)
+    # side counters first: they stay exact under sampling
     metrics.counter(
         "axon_dispatch_total", "dispatches by operator and kernel kind",
         labels=("op", "kind")).inc(op=op, kind=kind)
@@ -180,6 +271,13 @@ def record_dispatch(op: str, kind: str, **fields: Any) -> None:
         metrics.counter(
             "axon_mapper_lookups_total", "mapper blocking lookups",
             labels=("hit",)).inc(hit=str(bool(ev.mapper_hit)).lower())
+    _STATE.op_seq += 1
+    if _STATE.sample_every > 1 and _STATE.op_seq % _STATE.sample_every:
+        _STATE.sampled_out += 1
+        return
+    if len(_STATE.ring) == _STATE.ring.maxlen:
+        _STATE.dropped_ops += 1
+    _STATE.ring.append(ev)
 
 
 # ---------------------------------------------------------------------------

@@ -23,7 +23,7 @@ from typing import Any, Iterator
 
 import jax
 
-from repro.obs import metrics, optrace
+from repro.obs import annotate, metrics, optrace
 
 _ACTIVE_DIR: str | None = None
 
@@ -86,7 +86,11 @@ def wall(name: str, **args: Any) -> Iterator[WallScope]:
     scope = WallScope(name)
     t0 = time.perf_counter()
     try:
-        yield scope
+        # host-side TraceAnnotation: when a jax.profiler capture is
+        # running, the wall scope shows up on the same timeline as the
+        # named device scopes it encloses
+        with annotate.host_scope(name, enabled=optrace.enabled()):
+            yield scope
     finally:
         scope.elapsed_s = time.perf_counter() - t0
         if optrace.enabled():

@@ -36,7 +36,10 @@ from repro import axon, quant
 from repro.configs.base import ModelConfig
 from repro.core.mapper import mapper_cache_stats
 from repro.models import transformer as T
+from repro.obs import annotate as _ann
+from repro.obs import attribution as _attr
 from repro.obs import metrics as _obs_metrics, optrace as _obs
+from repro.obs import streaming as _streaming
 from repro.serve import kvcache as KV
 
 QUEUE_POLICIES = ("fifo", "sjf")
@@ -286,6 +289,11 @@ class ServeEngine:
                              donate_argnums=(1,))
         self._reset = jax.jit(T.reset_slots, donate_argnums=(0,))
         self.last_stats: dict[str, Any] | None = None
+        # per-trace modeled cost of one chunk step, keyed by token width:
+        # jitted steps never hit the op ring (one dispatch per compilation),
+        # so the modeled FLOPs/bytes are captured from the traced-cost
+        # ledger the first time each width is traced with telemetry on
+        self._traced_step_cost: dict[int, dict[str, float]] = {}
 
     def declared_step_widths(self) -> tuple[int, ...]:
         """Token widths this engine's chunk step will ever be traced at."""
@@ -369,6 +377,12 @@ class ServeEngine:
                                    dtype=self.cache_dtype)
         steps = 0
         n_prefill = 0
+        modeled = {"flops": 0.0, "bytes": 0.0, "energy_j": 0.0}
+        covered_steps = 0
+        # publish pool/mapper gauges on the streaming cadence for the
+        # duration of this call (no-op without an active exporter)
+        streaming_on = obs_on and _streaming.add_collector(
+            self._stream_collector)
 
         while pending or any(s.state != "free" for s in slots):
             caches = self._admit(slots, pending, requests, caches,
@@ -388,10 +402,26 @@ class ServeEngine:
                     valid[b, 0] = True
             self.rng, sub = jax.random.split(self.rng)
             t_step = time.perf_counter() if obs_on else 0.0
-            nxt, caches = self._step(self.params, caches,
-                                     jnp.asarray(tokens), jnp.asarray(valid),
-                                     sub)
-            nxt = np.asarray(nxt)   # host transfer: step's device sync point
+            ledger0 = (_obs.traced_totals()
+                       if obs_on and C not in self._traced_step_cost else None)
+            with _ann.host_scope("serve_step", enabled=obs_on):
+                nxt, caches = self._step(self.params, caches,
+                                         jnp.asarray(tokens),
+                                         jnp.asarray(valid), sub)
+                nxt = np.asarray(nxt)   # host transfer: device sync point
+            if ledger0 is not None:
+                after = _obs.traced_totals()
+                if after["count"] > ledger0["count"]:
+                    # this step traced: the ledger delta IS the modeled
+                    # per-execution cost of a width-C chunk step
+                    self._traced_step_cost[C] = {
+                        k: after[k] - ledger0[k]
+                        for k in ("flops", "bytes", "energy_j")}
+            cost = self._traced_step_cost.get(C) if obs_on else None
+            if cost is not None:
+                for k in modeled:
+                    modeled[k] += cost[k]
+                covered_steps += 1
             if obs_on:
                 _obs.add_span(
                     "serve_step", t_step, time.perf_counter() - t_step,
@@ -476,7 +506,14 @@ class ServeEngine:
             self.last_stats["prefix_hit_tokens"] = \
                 self.pool.hit_tokens - hit_tok0
         if obs_on:
+            # achieved-intensity attribution: modeled step cost from the
+            # traced ledger vs this call's measured wall time
+            self.last_stats["attribution"] = _attr.engine_row(
+                wall_s=wall, modeled=modeled, steps=steps,
+                covered_steps=covered_steps)
             self._publish_metrics(per_req)
+        if streaming_on:
+            _streaming.remove_collector(self._stream_collector)
         return outputs
 
     def _publish_metrics(self, per_req: list[dict | None]) -> None:
@@ -506,7 +543,12 @@ class ServeEngine:
             if r is not None:
                 lat.observe(r["latency_s"])
                 ttft.observe(r["ttft_s"])
-        mc = st["mapper_cache"]
+        self._publish_resource_gauges()
+
+    def _publish_resource_gauges(self) -> None:
+        """Mapper/page-pool gauges -- published at end of ``generate`` and,
+        when a streaming exporter is running, on every snapshot cadence."""
+        mc = mapper_cache_stats()
         _obs_metrics.gauge(
             "mapper_cache_hit_rate", "blocking-decision cache hit rate").set(
                 mc["hit_rate"])
@@ -514,7 +556,7 @@ class ServeEngine:
             "mapper_cache_entries", "blocking-decision cache entries").set(
                 mc["entries"])
         if self.pool is not None:
-            ps = st["pool"]
+            ps = self.pool.stats()
             _obs_metrics.gauge(
                 "pagepool_occupancy", "fraction of KV pages in use").set(
                     ps["occupancy"])
@@ -528,6 +570,12 @@ class ServeEngine:
             _obs_metrics.gauge(
                 "pagepool_evictions", "prefix pages evicted (lifetime)").set(
                     ps["evictions"])
+
+    def _stream_collector(self) -> None:
+        """Streaming-exporter callback: refresh resource gauges mid-serve
+        so long runs stream live occupancy, not just the final state."""
+        if _obs.enabled():
+            self._publish_resource_gauges()
 
 
 class WaveServeEngine:

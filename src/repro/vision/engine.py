@@ -38,7 +38,10 @@ import numpy as np
 
 from repro import axon
 from repro.core.mapper import mapper_cache_stats
+from repro.obs import annotate as _ann
+from repro.obs import attribution as _attr
 from repro.obs import metrics as _obs_metrics, optrace as _obs
+from repro.obs import streaming as _streaming
 from repro.quant import is_quantized
 from repro.vision import models, preprocess
 from repro.vision.models import VisionConfig
@@ -109,6 +112,9 @@ class VisionEngine:
         self.policy = pol
         self._step = jax.jit(make_infer_step(cfg, policy=pol))
         self.last_stats: dict[str, Any] | None = None
+        # modeled cost of one traced infer step (single fixed batch shape),
+        # captured from the traced-cost ledger like the serve engine's
+        self._traced_step_cost: dict[str, float] | None = None
 
     def declared_step_batches(self) -> tuple[int, ...]:
         """Batch dims this engine's infer step will ever be traced at."""
@@ -187,6 +193,10 @@ class VisionEngine:
         steps = 0
         occupancy = 0
         obs_on = _obs.enabled()     # snapshot: one boolean read per call
+        modeled = {"flops": 0.0, "bytes": 0.0, "energy_j": 0.0}
+        covered_steps = 0
+        streaming_on = obs_on and _streaming.add_collector(
+            self._stream_collector)
         t0 = time.perf_counter()
 
         while pending:
@@ -207,8 +217,21 @@ class VisionEngine:
             if len(lane_imgs) < nB:            # pad empty lanes on device
                 lane_imgs.extend([self._zero_lane()] * (nB - len(lane_imgs)))
             t_compute = time.perf_counter()
-            out = self._step(self.params, jnp.stack(lane_imgs))
-            out = jax.block_until_ready(out)
+            ledger0 = (_obs.traced_totals()
+                       if obs_on and self._traced_step_cost is None else None)
+            with _ann.host_scope("vision_step", enabled=obs_on):
+                out = self._step(self.params, jnp.stack(lane_imgs))
+                out = jax.block_until_ready(out)
+            if ledger0 is not None:
+                after = _obs.traced_totals()
+                if after["count"] > ledger0["count"]:
+                    self._traced_step_cost = {
+                        k: after[k] - ledger0[k]
+                        for k in ("flops", "bytes", "energy_j")}
+            if obs_on and self._traced_step_cost is not None:
+                for k in modeled:
+                    modeled[k] += self._traced_step_cost[k]
+                covered_steps += 1
             done = time.perf_counter() - t0
             steps += 1
             occupancy += len(lanes)
@@ -262,7 +285,12 @@ class VisionEngine:
             "mapper_cache": mapper_cache_stats(),
         }
         if obs_on:
+            self.last_stats["attribution"] = _attr.engine_row(
+                wall_s=wall, modeled=modeled, steps=steps,
+                covered_steps=covered_steps)
             self._publish_metrics(lat, queue_delay, compute_s)
+        if streaming_on:
+            _streaming.remove_collector(self._stream_collector)
         return outputs
 
     def _publish_metrics(self, lat, queue_delay, compute_s) -> None:
@@ -286,10 +314,18 @@ class VisionEngine:
             h_lat.observe(float(lat[i]))
             h_q.observe(float(queue_delay[i]))
             h_c.observe(float(compute_s[i]))
-        mc = st["mapper_cache"]
+        self._publish_resource_gauges()
+
+    def _publish_resource_gauges(self) -> None:
+        mc = mapper_cache_stats()
         _obs_metrics.gauge(
             "mapper_cache_hit_rate", "blocking-decision cache hit rate").set(
                 mc["hit_rate"])
         _obs_metrics.gauge(
             "mapper_cache_entries", "blocking-decision cache entries").set(
                 mc["entries"])
+
+    def _stream_collector(self) -> None:
+        """Streaming-exporter callback: refresh mapper gauges mid-run."""
+        if _obs.enabled():
+            self._publish_resource_gauges()

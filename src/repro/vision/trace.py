@@ -135,7 +135,13 @@ def paper_report(cfg: VisionConfig, *, array: tuple[int, int] = (16, 16),
     bandwidth) and DRAM energy.  Returns the throughput and energy ratios
     the paper headlines, plus per-layer detail and the operand-precision
     sweep (``"precision"``: int8 vs bf16 traffic/energy/runtime for the
-    Axon orchestration -- the modeled counterpart of ``repro.quant``)."""
+    Axon orchestration -- the modeled counterpart of ``repro.quant``).
+
+    The ``"attribution"`` section tethers the analytic numbers above to
+    measurement: when telemetry has measured dispatch walls (repro.obs
+    with ``measure_dispatch`` on), it carries per-kernel-kind achieved
+    FLOP/s and modeled-vs-measured error; otherwise it says why it is
+    empty.  The analytic report never depends on telemetry being on."""
     arr = ArrayShape(*array)
     convs = conv_shapes(cfg)
     gemms = [lower_to_gemm(c) for c in convs]
@@ -164,4 +170,11 @@ def paper_report(cfg: VisionConfig, *, array: tuple[int, int] = (16, 16),
         "energy_ratio": e_sa / e_ax,
         "precision": precision_report(cfg, array=array,
                                       feeder_group=feeder_group),
+        "attribution": _attribution_section(),
     }
+
+
+def _attribution_section() -> dict:
+    # lazy import: repro.obs must stay optional for the pure-analytic path
+    from repro.obs import attribution
+    return attribution.paper_section()

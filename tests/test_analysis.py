@@ -410,6 +410,76 @@ class TestLintFixtures:
         )
         assert "LNT009" not in rules(_lint(src, "repro.serve.fixture"))
 
+    def test_annotate_scope_in_traced_step_is_not_lnt009(self):
+        # the annotate API exists to be called under the tracer
+        src = (
+            "from repro.obs import annotate as _ann\n"
+            "import jax\n"
+            "def make_chunk_step(cfg):\n"
+            "    def step(params, tokens):\n"
+            "        with _ann.scope('attention'):\n"
+            "            return tokens\n"
+            "    return step\n"
+        )
+        assert "LNT009" not in rules(_lint(src, "repro.serve.fixture"))
+
+    def test_fstring_annotate_label_is_lnt010(self):
+        src = (
+            "from repro.obs import annotate as _ann\n"
+            "def fwd(x, layer):\n"
+            "    with _ann.scope(f'layer_{layer}'):\n"
+            "        return x\n"
+        )
+        assert "LNT010" in rules(_lint(src, "repro.models.fixture"))
+
+    def test_format_annotate_label_is_lnt010(self):
+        src = (
+            "from repro.obs.annotate import host_scope\n"
+            "def run(name):\n"
+            "    with host_scope('req_{}'.format(name)):\n"
+            "        return None\n"
+        )
+        assert "LNT010" in rules(_lint(src, "repro.serve.fixture"))
+
+    def test_static_and_concat_annotate_labels_are_clean(self):
+        # constants, names, and bounded "+" concatenation are all fine
+        src = (
+            "from repro.obs import annotate as _ann\n"
+            "def dispatch(kind, fn):\n"
+            "    with _ann.scope('axon:' + kind):\n"
+            "        return fn()\n"
+            "def fwd(x):\n"
+            "    with _ann.scope('attention'):\n"
+            "        return x\n"
+        )
+        assert "LNT010" not in rules(_lint(src, "repro.axon.fixture"))
+
+    def test_fstring_named_scope_in_traced_def_is_lnt010(self):
+        src = (
+            "import jax\n"
+            "def make_chunk_step(cfg):\n"
+            "    def step(params, i):\n"
+            "        with jax.named_scope(f'step_{i}'):\n"
+            "            return params\n"
+            "    return step\n"
+        )
+        assert "LNT010" in rules(_lint(src, "repro.serve.fixture"))
+
+    def test_fstring_named_scope_on_host_is_not_lnt010(self):
+        # host-side code may interpolate (e.g. dryrun's per-cell optrace
+        # spans) -- only traced bodies and the annotate API are bounded
+        src = (
+            "import jax\n"
+            "from repro.obs import optrace\n"
+            "def lower_cell(tag):\n"
+            "    with jax.named_scope(f'lower_cell:{tag}'):\n"
+            "        return None\n"
+            "def span_cell(tag):\n"
+            "    with optrace.span(f'lower_cell:{tag}'):\n"
+            "        return None\n"
+        )
+        assert "LNT010" not in rules(_lint(src, "repro.launch.fixture"))
+
 
 # ---------------------------------------------------------------------------
 # meta: the live repo is clean, end to end

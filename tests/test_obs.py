@@ -22,7 +22,8 @@ import pytest
 import repro.obs as obs
 from repro.configs import get_config
 from repro.models import transformer as T
-from repro.obs import metrics, optrace, profiler, trace_export
+from repro.obs import (annotate, attribution, metrics, optrace, profiler,
+                       streaming, trace_export)
 from repro.serve.engine import Request, ServeEngine
 
 KEY = jax.random.PRNGKey(0)
@@ -30,13 +31,20 @@ KEY = jax.random.PRNGKey(0)
 
 @pytest.fixture(autouse=True)
 def _clean_obs():
-    """Every test starts and ends with telemetry off and state empty."""
+    """Every test starts and ends with telemetry off and state empty.
+
+    ``configure`` is sticky across enable/disable by design, so the
+    fixture restores the defaults explicitly on both sides."""
+    streaming.stop()
     optrace.disable()
     optrace.reset()
+    optrace.configure(sample_every=1, measure_dispatch=False)
     metrics.clear()
     yield
+    streaming.stop()
     optrace.disable()
     optrace.reset()
+    optrace.configure(sample_every=1, measure_dispatch=False)
     metrics.clear()
 
 
@@ -422,3 +430,246 @@ class TestCliSmoke:
         assert "mapper_cache_hit_rate" in snap
         assert "pagepool_occupancy" in snap
         assert "pagepool_prefix_hit_rate" in snap
+
+# ---------------------------------------------------------------------------
+# prometheus exposition escaping
+# ---------------------------------------------------------------------------
+
+
+class TestPrometheusEscaping:
+    def test_help_line_escapes_backslash_and_newline(self):
+        metrics.counter(
+            "esc_total", 'help with "quotes", a \\ and a\nnewline').inc()
+        text = metrics.prometheus_text()
+        help_lines = [ln for ln in text.splitlines()
+                      if ln.startswith("# HELP esc_total")]
+        # quotes are legal verbatim in HELP text; backslash and newline
+        # must be escaped or the exposition parser sees a torn line
+        assert help_lines == [
+            r'# HELP esc_total help with "quotes", a \\ and a\nnewline']
+
+    def test_hostile_label_values_escaped(self):
+        c = metrics.counter("esc_lbl_total", "t", labels=("who",))
+        hostile = 'a\\b"c\nd'
+        c.inc(who=hostile)
+        text = metrics.prometheus_text()
+        sample = [ln for ln in text.splitlines()
+                  if ln.startswith("esc_lbl_total{")]
+        assert sample == ['esc_lbl_total{who="a\\\\b\\"c\\nd"} 1.0']
+        # every exposition line is complete: no raw newline ever splits a
+        # sample line in half
+        for ln in text.splitlines():
+            assert ln.startswith(("#", "esc_lbl_total", "esc_total")), ln
+
+
+# ---------------------------------------------------------------------------
+# ring sampling (production-rate mode)
+# ---------------------------------------------------------------------------
+
+
+class TestSampling:
+    def _burst(self, n):
+        for i in range(n):
+            optrace.record_dispatch("einsum", "gemm", backend="interpret",
+                                    flops=1.0, bytes=2.0)
+
+    def test_counters_exact_ring_one_in_n(self):
+        optrace.enable(ring_size=4096)
+        optrace.configure(sample_every=4)
+        self._burst(100)
+        # side counters never sampled: exact
+        c = metrics.REGISTRY.get("axon_dispatch_total")
+        assert c.value(op="einsum", kind="gemm") == 100.0
+        # ring holds exactly every 4th dispatch; the rest are tallied
+        assert len(optrace.events()) == 25
+        assert optrace.sampled_out_ops() == 75
+        assert optrace.dropped_ops() == 0      # nothing evicted
+
+    def test_sampling_is_deterministic(self):
+        def run():
+            optrace.enable(ring_size=4096)
+            optrace.configure(sample_every=8)
+            self._burst(64)
+            return [(e.op, e.kind) for e in optrace.events()]
+        a = run()
+        b = run()
+        assert a == b and len(a) == 8
+
+    def test_dropped_ops_counts_evictions_not_sampling(self):
+        optrace.enable(ring_size=8)
+        self._burst(20)
+        assert len(optrace.events()) == 8      # bounded
+        assert optrace.dropped_ops() == 12     # evicted, not sampled out
+        assert optrace.sampled_out_ops() == 0
+
+    def test_configure_rejects_bad_stride(self):
+        with pytest.raises(ValueError):
+            optrace.configure(sample_every=0)
+
+
+# ---------------------------------------------------------------------------
+# streaming exporter lifecycle
+# ---------------------------------------------------------------------------
+
+
+class TestStreaming:
+    def test_snapshots_during_long_serve(self, tmp_path):
+        cfg = _cfg()
+        params = T.init_params(KEY, cfg)
+        engine = ServeEngine(params, cfg, batch_slots=2, max_len=32,
+                             prefill_chunk=4, paged=True, page_size=4)
+        reqs = _requests(cfg, [(3, 12), (6, 12), (4, 12)])
+        optrace.enable()
+        exp = streaming.start(str(tmp_path), interval_s=0.05)
+        try:
+            engine.generate(reqs)
+            mid_run = exp.snapshots_written
+        finally:
+            streaming.stop()
+        # the serve is long against a 50ms cadence: snapshots landed
+        # while it ran, not only at the final stop() flush
+        assert mid_run >= 2
+        assert streaming.active() is None      # clean shutdown
+        snaps = streaming.read_jsonl(str(tmp_path / streaming.JSONL_NAME))
+        assert len(snaps) >= 2
+        assert [s["seq"] for s in snaps] == list(range(1, len(snaps) + 1))
+        # the engine's collector published pool gauges on the cadence:
+        # a mid-run snapshot already carries them
+        mid = snaps[min(mid_run, len(snaps)) - 1]
+        assert "pagepool_occupancy" in mid["metrics"]
+        assert "mapper_cache_hit_rate" in mid["metrics"]
+        # prom textfile is whole (atomic os.replace; no tmp file left over)
+        prom = (tmp_path / streaming.PROM_NAME).read_text()
+        assert prom.endswith("\n") and "# TYPE" in prom
+        assert not (tmp_path / (streaming.PROM_NAME + ".tmp")).exists()
+
+    def test_stop_flushes_at_least_once(self, tmp_path):
+        optrace.enable()
+        metrics.gauge("stream_unit_gauge", "g").set(3.0)
+        streaming.start(str(tmp_path), interval_s=60.0)
+        streaming.stop()
+        snaps = streaming.read_jsonl(str(tmp_path / streaming.JSONL_NAME))
+        assert len(snaps) == 1
+        assert snaps[0]["metrics"]["stream_unit_gauge"]["values"]
+
+    def test_read_jsonl_ignores_torn_tail(self, tmp_path):
+        p = tmp_path / streaming.JSONL_NAME
+        p.write_text('{"seq": 1, "metrics": {}}\n{"seq": 2, "met')
+        snaps = streaming.read_jsonl(str(p))
+        assert [s["seq"] for s in snaps] == [1]
+
+    def test_failing_collector_never_kills_exporter(self, tmp_path):
+        def boom():
+            raise RuntimeError("collector crash")
+        optrace.enable()
+        streaming.start(str(tmp_path), interval_s=60.0)
+        assert streaming.add_collector(boom)
+        streaming.stop()                       # final flush runs the collector
+        snaps = streaming.read_jsonl(str(tmp_path / streaming.JSONL_NAME))
+        assert len(snaps) == 1                 # snapshot still written
+
+
+# ---------------------------------------------------------------------------
+# device-timeline annotation
+# ---------------------------------------------------------------------------
+
+
+class TestAnnotate:
+    def test_scope_name_lands_in_compiled_hlo(self):
+        def f(x):
+            with annotate.scope("unit_attention_scope"):
+                return x * 2.0
+        compiled = jax.jit(f).lower(jnp.ones((4,))).compile()
+        # the name stack travels through lowering into the compiled
+        # module's metadata -- that is what the device profiler renders
+        assert "unit_attention_scope" in compiled.as_text()
+
+    def test_scope_does_not_change_results(self):
+        def f(x):
+            with annotate.scope("unit_scope"):
+                return x @ x
+        x = jax.random.normal(KEY, (8, 8))
+        np.testing.assert_array_equal(jax.jit(f)(x), x @ x)
+
+    def test_host_scope_is_noop_without_capture(self):
+        ran = []
+        with annotate.host_scope("serve_step", enabled=True):
+            ran.append(1)
+        with annotate.host_scope("serve_step", enabled=False):
+            ran.append(2)
+        assert ran == [1, 2]
+
+
+# ---------------------------------------------------------------------------
+# measured-vs-modeled attribution
+# ---------------------------------------------------------------------------
+
+
+class TestAttribution:
+    def test_kind_rows_join_measured_and_modeled(self):
+        import repro.axon as ax
+        optrace.enable()
+        optrace.configure(measure_dispatch=True)
+        a = jax.random.normal(KEY, (16, 16), jnp.float32)
+        b = jax.random.normal(KEY, (16, 16), jnp.float32)
+        ax.matmul(a, b)                        # eager: measured + modeled
+        rows = attribution.kind_rows()
+        measured = [r for r in rows if r["measured_wall_s"]]
+        assert measured, rows
+        row = measured[0]
+        assert row["count"] >= 1 and row["measured_calls"] >= 1
+        assert row["modeled_flops"] > 0 and row["modeled_bytes"] > 0
+        assert row["achieved_flops_per_s"] > 0
+        assert row["achieved_bytes_per_s"] > 0
+        assert row["time_error_ratio"] > 0
+        assert row["roofline"] in ("compute-bound", "memory-bound")
+        rep = attribution.report()
+        assert rep["totals"]["measured_wall_s"] > 0
+        assert rep["chip"]["ridge_flops_per_byte"] > 0
+        sec = attribution.paper_section()
+        assert sec["available"] and sec["kinds"]
+
+    def test_paper_section_says_why_when_empty(self):
+        sec = attribution.paper_section()
+        assert sec["available"] is False
+        assert "measure_dispatch" in sec["reason"]
+
+    def test_write_json_roundtrip(self, tmp_path):
+        import repro.axon as ax
+        optrace.enable()
+        optrace.configure(measure_dispatch=True)
+        ax.matmul(jnp.ones((8, 8)), jnp.ones((8, 8)))
+        out = tmp_path / "attribution.json"
+        rep = attribution.write_json(str(out))
+        assert json.load(open(out)) == json.loads(json.dumps(rep))
+
+
+# ---------------------------------------------------------------------------
+# engine achieved-intensity row
+# ---------------------------------------------------------------------------
+
+
+class TestEngineAttributionRow:
+    def test_serve_last_stats_attribution(self):
+        cfg = _cfg()
+        params = T.init_params(KEY, cfg)
+        optrace.enable()
+        engine = ServeEngine(params, cfg, batch_slots=2, max_len=16,
+                             prefill_chunk=4)
+        engine.generate(_requests(cfg, [(3, 4), (6, 3)]))
+        att = engine.last_stats["attribution"]
+        # telemetry was on before the first trace of every step width, so
+        # every executed step has a known per-trace modeled cost
+        assert att["modeled_step_coverage"] == 1.0
+        assert att["modeled_flops"] > 0 and att["modeled_bytes"] > 0
+        assert att["achieved_flops_per_s"] > 0
+        assert att["time_error_ratio"] > 0
+        assert att["roofline"] in ("compute-bound", "memory-bound")
+
+    def test_no_attribution_row_when_disabled(self):
+        cfg = _cfg()
+        params = T.init_params(KEY, cfg)
+        engine = ServeEngine(params, cfg, batch_slots=2, max_len=16,
+                             prefill_chunk=4)
+        engine.generate(_requests(cfg, [(3, 2)]))
+        assert "attribution" not in engine.last_stats
