@@ -12,6 +12,7 @@ continuous ``ServeEngine``, and its paged-cache variants, and emits
    "paged_int8":  {...},
    "paged_repeat": {...},    # same prompts again: prefix-cache hits
    "obs": {...},             # tokens/s with telemetry off vs on + overhead %
+   "mesh_dp": {...},         # data-parallel mesh over all visible devices
    "speedup_tokens_per_s": ...,
    "cache_reduction_int8_vs_dense_f32": ...}
 
@@ -223,6 +224,27 @@ def main() -> None:
         "overhead_pct": round(100.0 * (1.0 - obs_sampled / obs_off), 2),
         "sampled_out_ops": sampled_out,
     }
+    # mesh row: same workload through a data-parallel mesh over every
+    # visible device (model=1: CPU fake devices make TP all-reduces pure
+    # overhead; the row exists to keep the sharded path measured and to
+    # pin the token-identity guarantee, not to show CPU speedup)
+    n_dev = jax.device_count()
+    mesh_row = None
+    if n_dev > 1:
+        from repro.launch.mesh import make_debug_mesh
+        mesh_engine = ServeEngine(params, cfg, batch_slots=args.slots,
+                                  max_len=max_len,
+                                  prefill_chunk=args.prefill_chunk,
+                                  cache_dtype="float32",
+                                  mesh=make_debug_mesh(n_dev, 1))
+        run_continuous(mesh_engine, warm)
+        mesh_row = run_continuous(mesh_engine, reqs)
+        mesh_row["devices"] = n_dev
+        mesh_row["mesh"] = {"data": n_dev, "model": 1}
+        single = [list(map(int, o)) for o in cont_engine.generate(reqs)]
+        meshed = [list(map(int, o)) for o in mesh_engine.generate(reqs)]
+        mesh_row["tokens_match_single"] = single == meshed
+
     result = {
         "arch": cfg.name,
         "workload": {
@@ -238,6 +260,7 @@ def main() -> None:
         "paged_repeat": paged_repeat,
         "obs": obs_row,
         "obs_sampled": obs_sampled_row,
+        **({"mesh_dp": mesh_row} if mesh_row is not None else {}),
         "speedup_tokens_per_s": round(
             cont["tokens_per_s"] / wave["tokens_per_s"], 3),
         "cache_reduction_int8_vs_dense_f32": round(

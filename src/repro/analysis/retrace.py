@@ -17,18 +17,25 @@ which shows up as a multi-second latency spike the tests never catch
       RTR001  a reachable scheduler state produces an undeclared signature
       RTR002  a declared signature no state produces (dead declaration)
 
+The decoupled-prefill lane (``ServeEngine(decouple_prefill=True)``) jits a
+SECOND step whose token width comes from ``serve.engine.prefill_width`` --
+the same enumeration argument applies: every prompt length must resolve to
+a width in ``declared_prefill_widths`` or admission retraces the lane.
+
   * **AST discipline** -- the proof is only sound while the engines keep
     routing their shape decisions through the hooks:
 
       RTR003  ServeEngine.generate decides the token width without calling
               step_width
-      RTR004  jax.jit called inside a serve loop (generate / infer / _wave)
-              instead of once at construction
+      RTR004  jax.jit called inside a serve loop (generate / infer / _wave
+              / _admit / _prefill_request) instead of once at construction
       RTR005  VisionEngine.infer decides the lane padding without calling
               step_batch
       RTR006  the paged-cache page table passed into the step as a keyword
               (it must ride the caches pytree: a table baked in at trace
               time would retrace the chunk step on every admission)
+      RTR007  ServeEngine._prefill_request decides the prefill token width
+              without calling prefill_width
 """
 from __future__ import annotations
 
@@ -45,6 +52,7 @@ PASS = "retrace"
 ENUM_SLOTS = 4
 ENUM_PREFILL_CHUNKS = (1, 2, 16)
 ENUM_BATCH_SLOTS = (1, 4, 8)
+ENUM_PROMPT_LENS = range(1, 64)
 
 
 # ---------------------------------------------------------------------------
@@ -75,6 +83,30 @@ def _check_serve_widths() -> list[Finding]:
                 "RTR002", PASS, "ServeEngine",
                 f"declared token width {w} (prefill_chunk={chunk}) is "
                 "produced by no enumerated slot state; dead declaration"))
+    return out
+
+
+def _check_prefill_widths() -> list[Finding]:
+    from repro.serve import engine as se
+    out: list[Finding] = []
+    for chunk in ENUM_PREFILL_CHUNKS:
+        declared = set(se.declared_prefill_widths(chunk))
+        produced: set[int] = set()
+        for plen in ENUM_PROMPT_LENS:
+            w = se.prefill_width(plen, chunk)
+            produced.add(w)
+            if w not in declared:
+                out.append(error(
+                    "RTR001", PASS, "ServeEngine(prefill)",
+                    f"prompt length {plen} with prefill_chunk={chunk} "
+                    f"produces prefill token width {w}, outside the "
+                    f"declared set {sorted(declared)} -- this prompt would "
+                    "retrace the decoupled prefill step mid-serve"))
+        for w in declared - produced:
+            out.append(warning(
+                "RTR002", PASS, "ServeEngine(prefill)",
+                f"declared prefill width {w} (prefill_chunk={chunk}) is "
+                "produced by no enumerated prompt length; dead declaration"))
     return out
 
 
@@ -181,7 +213,14 @@ def _check_serve_ast() -> list[Finding]:
                 "token width is decided without calling step_width(); the "
                 "retrace proof only covers widths routed through the hook",
                 path=path, line=gen.lineno))
-        for meth_name in ("generate", "_wave"):
+        pre = _method(node, "_prefill_request")
+        if pre is not None and not _calls_name(pre, "prefill_width"):
+            out.append(error(
+                "RTR007", PASS, "ServeEngine._prefill_request",
+                "prefill token width is decided without calling "
+                "prefill_width(); the retrace proof only covers widths "
+                "routed through the hook", path=path, line=pre.lineno))
+        for meth_name in ("generate", "_wave", "_admit", "_prefill_request"):
             meth = _method(node, meth_name)
             if meth is None:
                 continue
@@ -220,5 +259,6 @@ def _check_vision_ast() -> list[Finding]:
 
 def run() -> list[Finding]:
     """Run the retrace-hazard detector over both engines."""
-    return (_check_serve_widths() + _check_vision_batches()
+    return (_check_serve_widths() + _check_prefill_widths()
+            + _check_vision_batches()
             + _check_serve_ast() + _check_vision_ast())

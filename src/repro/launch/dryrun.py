@@ -132,65 +132,12 @@ def input_specs(cfg: ModelConfig, shape: ShapeCfg, mesh, *,
 # ---------------------------------------------------------------------------
 
 
-def make_cache_spec_fn(mesh, cfg: ModelConfig):
-    msize = mesh.shape["model"]
-
-    def entries(path, shape):
-        name = None
-        for k in reversed(path):
-            kk = getattr(k, "key", None)
-            if isinstance(kk, str):
-                name = kk
-                break
-        names = [getattr(k, "key", None) for k in path]
-        lead = 1 if "layers" in names else 0   # stacked per-layer caches
-        core = shape[lead:]
-        pre = (None,) * lead
-
-        if name in ("k", "v") and len(core) == 4:
-            _, s, kvh, dh = core
-            if kvh % msize == 0:
-                return pre + ("batch", None, "model", None)
-            if s % msize == 0:
-                # sequence-sharded cache: scores come out S-sharded, softmax
-                # reduces only (B,H) scalars cross-shard, PV psums (B,H,dv)
-                # -- measured far cheaper than gathering the cache or
-                # psum-ing dh-sharded scores (§Perf iteration 5)
-                return pre + ("batch", "model", None, None)
-            return pre + ("batch", None, None, None)
-        if name == "c" and len(core) == 3:                 # MLA latent
-            s = core[1]
-            if s % msize == 0:
-                return pre + ("batch", "model", None)
-            return pre + ("batch", None, "model")
-        if name == "k_pe":
-            s = core[1]
-            if s % msize == 0:
-                return pre + ("batch", "model", None)
-            return pre + ("batch", None, None)
-        if name is not None and name.startswith("conv") and len(core) == 3:
-            return pre + ("batch", None, "model")
-        if name == "ssm" and len(core) == 3:               # mamba1 (B, di, N)
-            return pre + ("batch", "model", None)
-        if name == "ssm" and len(core) == 4:               # mamba2 (B, H, P, N)
-            return pre + ("batch", "model", None, None)
-        if name in ("len", "pos") and core:
-            # per-slot position counters live with their slot's cache shard
-            return pre + ("batch",) + (None,) * (len(core) - 1)
-        if not core:
-            return (None,) * len(shape)
-        return pre + ("batch",) + (None,) * (len(core) - 1)
-
-    return entries
-
-
-def tree_shardings(tree, mesh, spec_fn):
-    flat, treedef = jax.tree_util.tree_flatten_with_path(tree)
-    out = []
-    for path, leaf in flat:
-        ent = spec_fn(path, leaf.shape)
-        out.append(shd.named_sharding(mesh, *ent, dims=leaf.shape))
-    return jax.tree_util.tree_unflatten(treedef, out)
+# ``make_cache_spec_fn`` / ``tree_shardings`` moved to
+# ``repro.parallel.sharding`` when the serve engines went mesh-parallel
+# (the rules now cover paged pools too); re-exported here for callers of
+# the dry-run module.
+make_cache_spec_fn = shd.make_cache_spec_fn
+tree_shardings = shd.tree_shardings
 
 
 def opt_spec_fn(param_spec_fn):

@@ -2,6 +2,28 @@
 from __future__ import annotations
 
 import argparse
+import os
+import sys
+
+
+def _apply_fake_devices(argv) -> None:
+    """``--fake-devices N`` must take effect before jax initialises its
+    backend (XLA reads the flag exactly once), so it is applied here at
+    import time from the raw argv, ahead of the ``import jax`` below."""
+    for i, a in enumerate(argv):
+        if a == "--fake-devices" and i + 1 < len(argv):
+            n = argv[i + 1]
+        elif a.startswith("--fake-devices="):
+            n = a.split("=", 1)[1]
+        else:
+            continue
+        os.environ["XLA_FLAGS"] = (
+            os.environ.get("XLA_FLAGS", "")
+            + f" --xla_force_host_platform_device_count={int(n)}")
+        return
+
+
+_apply_fake_devices(sys.argv)
 
 import jax
 import numpy as np
@@ -32,6 +54,18 @@ def main() -> None:
     ap.add_argument("--prefill-chunk", type=int, default=16)
     ap.add_argument("--queue-policy", choices=QUEUE_POLICIES, default="fifo")
     ap.add_argument("--temperature", type=float, default=0.0)
+    ap.add_argument("--mesh", default=None, metavar="DATAxMODEL",
+                    help="shard the engine over a device mesh, e.g. 2x4 "
+                         "(data=2, model=4); requires data*model <= "
+                         "jax.device_count()")
+    ap.add_argument("--decouple-prefill", action="store_true",
+                    help="run prompts through a dedicated prefill step and "
+                         "hand the cache to a decode slot via a jitted "
+                         "insert (dense caches only)")
+    ap.add_argument("--fake-devices", type=int, default=None,
+                    help="fake N host devices (XLA "
+                         "--xla_force_host_platform_device_count; applied "
+                         "before jax backend init) for trying --mesh on CPU")
     ap.add_argument("--trace-out", default=None,
                     help="enable repro.obs and write a Chrome-trace JSON "
                          "(load at ui.perfetto.dev)")
@@ -68,6 +102,12 @@ def main() -> None:
                 else streaming.DEFAULT_INTERVAL_S
             streaming.start(args.stream_dir, interval_s=interval)
 
+    from repro.launch.mesh import parse_mesh
+    mesh = parse_mesh(args.mesh)
+    if mesh is not None:
+        print(f"mesh: {dict(mesh.shape)} over {mesh.size} of "
+              f"{jax.device_count()} device(s)")
+
     cfg = get_config(args.arch, reduced=args.reduced)
     params = T.init_params(jax.random.PRNGKey(0), cfg)
     slots = min(args.batch_slots, args.requests)
@@ -90,7 +130,8 @@ def main() -> None:
         engine = ServeEngine(params, cfg, batch_slots=slots, max_len=max_len,
                              prefill_chunk=args.prefill_chunk,
                              queue_policy=args.queue_policy,
-                             temperature=args.temperature)
+                             temperature=args.temperature, mesh=mesh,
+                             decouple_prefill=args.decouple_prefill)
     outs = engine.generate(reqs)
     for i, o in enumerate(outs):
         print(f"req{i} ({len(reqs[i].prompt)}-token prompt): {o}")

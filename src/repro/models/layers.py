@@ -234,6 +234,14 @@ def cached_attention(
         v_all = jnp.concatenate(
             [jnp.where(live_old[:, :, None, None], v_old, 0),
              jnp.where(k_valid[:, :, None, None], v_new, 0)], axis=1)
+        # the int8 path must respect the same sharded cache layout as the
+        # float path below: Q by (kv-)heads over 'model', and the
+        # concatenated cache+chunk K/V pinned to the cache's kv-head shard
+        # -- without these the partitioner was free to gather the whole
+        # quantized cache to every device before the kernel
+        q = constrain_priority(q, 1, [2])
+        k_all = constrain_priority(k_all, 1, [2])
+        v_all = constrain_priority(v_all, 1, [2])
         out = int8_flash_attention_fwd(
             q.transpose(0, 2, 1, 3),                         # (B, H, T, dh)
             k_all.transpose(0, 2, 1, 3),

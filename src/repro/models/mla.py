@@ -126,6 +126,10 @@ def mla_fwd(p: Params, x: jax.Array, cfg, *, positions,
         # accumulation -- no fp32 copies of the latent cache.
         q_eff = axon.einsum("bthn,chn->bthc", q_nope, w_k
                            ).astype(c_cache.dtype)
+        # absorbed attention is per-head independent against a head-less
+        # latent cache: pin the effective queries head-sharded over 'model'
+        # so scores/PV stay TP and only the tiny (B,T,h,·) outputs move
+        q_eff = constrain(q_eff, "batch", None, "model", None)
         scale = (dn + dr) ** -0.5
         s = (axon.einsum("bthc,bsc->bths", q_eff, c_cache,
                         preferred_element_type=jnp.float32)

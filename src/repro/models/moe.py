@@ -100,7 +100,12 @@ def _route_chunk(p: Params, x: jax.Array, cfg) -> tuple[jax.Array, jax.Array]:
         y = axon.einsum("becf,efd->becd", h,
                         p["w_down"]).reshape(B, E * cap, D)
 
-    # gather back to slots, un-sort, combine with router weights
+    # gather back to slots, un-sort, combine with router weights.  The
+    # combine mirrors the dispatch decision above: leave the EP all-to-all
+    # at this boundary and keep the slot tensors d_model-sharded -- an
+    # unconstrained y lets the partitioner replicate the expert buffers
+    # through the gather instead
+    y = constrain(y, "batch", None, "model")
     y = jnp.concatenate([y, jnp.zeros((B, 1, D), y.dtype)], axis=1)
     slots = jnp.take_along_axis(y, dest[..., None], axis=1)   # sorted order
     inv = jnp.argsort(order, axis=-1, stable=True)

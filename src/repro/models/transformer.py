@@ -544,3 +544,35 @@ def reset_slots(caches: Params, mask: jax.Array,
         return jnp.where(m, jnp.zeros((), leaf.dtype), leaf)
 
     return jax.tree_util.tree_map_with_path(_clear, caches)
+
+
+def insert_slot(dst: Params, src: Params, slot: jax.Array,
+                src_slot: int = 0) -> Params:
+    """Hand one lane of a prefill cache off into slot ``slot`` of a decode
+    cache (the insert of the prefill/insert/generate split).
+
+    Every leaf of ``src`` is a same-shape-per-slot twin of its ``dst`` leaf
+    (the prefill lane runs at the decode engine's own batch width so both
+    caches trace identically -- that is what keeps mesh-sharded prefill
+    bit-identical to inline serving); the slot (batch) axis is detected
+    from the pytree path exactly like :func:`reset_slots`.  ``slot`` is a
+    traced scalar, so one jitted insert serves every destination slot
+    without retracing, and because the copy includes the position counters
+    and recurrent SSM/conv state the destination slot needs no separate
+    reset.  Dense caches only: paged pools have no slot axis to insert
+    into (their handoff is a page-table rewrite, owned by the host-side
+    allocator)."""
+    def _ins(path, d, s):
+        names = [getattr(k, "key", None) for k in path]
+        name = next((n for n in reversed(names) if isinstance(n, str)), None)
+        if name == KV.PAGE_TABLE_KEY or (
+                isinstance(name, str)
+                and name.endswith(KV.PAGED_LEAF_SUFFIXES)):
+            raise ValueError(
+                "insert_slot is dense-cache only: paged pools have no slot "
+                "axis (hand off pages through the page table instead)")
+        axis = 1 if "layers" in names else 0
+        piece = jax.lax.dynamic_slice_in_dim(s, src_slot, 1, axis)
+        return jax.lax.dynamic_update_slice_in_dim(
+            d, piece.astype(d.dtype), slot, axis)
+    return jax.tree_util.tree_map_with_path(_ins, dst, src)

@@ -22,9 +22,22 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 
 def current_mesh() -> Mesh | None:
-    from jax._src import mesh as mesh_lib
+    """The ambient ``with mesh:`` context, or None off-mesh.
 
-    m = mesh_lib.thread_resources.env.physical_mesh
+    Reads the public ``jax.interpreters.pxla`` thread resources (stable
+    across 0.4.x); falls back to the private module only if a future jax
+    moves the public alias, and degrades to "no mesh" rather than raising
+    -- every caller treats None as single-device."""
+    try:
+        from jax.interpreters import pxla
+        env = pxla.thread_resources.env
+    except (ImportError, AttributeError):
+        try:
+            from jax._src import mesh as mesh_lib
+            env = mesh_lib.thread_resources.env
+        except (ImportError, AttributeError):
+            return None
+    m = getattr(env, "physical_mesh", None)
     if m is None or m.empty:
         return None
     return m
@@ -121,3 +134,88 @@ def param_sharding(params, mesh: Mesh, spec_fn) -> dict:
         entries = spec_fn(path, leaf.shape)
         shardings.append(named_sharding(mesh, *entries, dims=leaf.shape))
     return jax.tree_util.tree_unflatten(treedef, shardings)
+
+
+def tree_shardings(tree, mesh: Mesh, spec_fn):
+    """NamedSharding pytree for an arbitrary tree (caches, batches) via the
+    same ``spec_fn(path, shape)`` protocol as :func:`param_sharding`."""
+    return param_sharding(tree, mesh, spec_fn)
+
+
+def make_cache_spec_fn(mesh: Mesh, cfg=None):
+    """path/shape -> spec entries for the KV-cache pytree (dense AND paged).
+
+    Dense K/V shard kv-heads over 'model' when divisible, else the sequence
+    dim; paged pools shard the per-token kv-head axis the same way (pages
+    and the slot->page table themselves are never split -- admission
+    rewrites the table host-side and scatter/gather must see whole pages).
+    Used by the serve engine for cache ``out_shardings`` and by the dry-run
+    lowering; ``cfg`` is accepted for signature stability but the rules are
+    shape/path-driven.
+    """
+    del cfg
+    msize = mesh.shape["model"] if "model" in mesh.axis_names else 1
+
+    def entries(path, shape):
+        name = None
+        for k in reversed(path):
+            kk = getattr(k, "key", None)
+            if isinstance(kk, str):
+                name = kk
+                break
+        names = [getattr(k, "key", None) for k in path]
+        lead = 1 if "layers" in names else 0   # stacked per-layer caches
+        core = shape[lead:]
+        pre = (None,) * lead
+
+        if isinstance(name, str) and name.endswith("_pages"):
+            # page pools (pool, page_size, ...feat): shard the kv-head axis
+            # of K/V payload pools; MLA latent/rope pools (3-d) replicate --
+            # their feature dim contracts through the up-projection
+            if len(core) == 4 and core[2] % msize == 0:
+                return pre + (None, None, "model", None)
+            return pre + (None,) * len(core)
+        if isinstance(name, str) and name.endswith("_scales"):
+            # per-token-per-head scale pools mirror their payload pool
+            if len(core) == 3 and core[2] % msize == 0:
+                return pre + (None, None, "model")
+            return pre + (None,) * len(core)
+        if name == "page_table":
+            # owned by the host-side allocator mirror; every shard needs the
+            # full slot->page mapping for gather/scatter index computation
+            return (None,) * len(shape)
+        if name in ("k", "v") and len(core) == 4:
+            _, s, kvh, dh = core
+            if kvh % msize == 0:
+                return pre + ("batch", None, "model", None)
+            if s % msize == 0:
+                # sequence-sharded cache: scores come out S-sharded, softmax
+                # reduces only (B,H) scalars cross-shard, PV psums (B,H,dv)
+                # -- measured far cheaper than gathering the cache or
+                # psum-ing dh-sharded scores (§Perf iteration 5)
+                return pre + ("batch", "model", None, None)
+            return pre + ("batch", None, None, None)
+        if name == "c" and len(core) == 3:                 # MLA latent
+            s = core[1]
+            if s % msize == 0:
+                return pre + ("batch", "model", None)
+            return pre + ("batch", None, "model")
+        if name == "k_pe":
+            s = core[1]
+            if s % msize == 0:
+                return pre + ("batch", "model", None)
+            return pre + ("batch", None, None)
+        if name is not None and name.startswith("conv") and len(core) == 3:
+            return pre + ("batch", None, "model")
+        if name == "ssm" and len(core) == 3:               # mamba1 (B, di, N)
+            return pre + ("batch", "model", None)
+        if name == "ssm" and len(core) == 4:               # mamba2 (B, H, P, N)
+            return pre + ("batch", "model", None, None)
+        if name in ("len", "pos") and core:
+            # per-slot position counters live with their slot's cache shard
+            return pre + ("batch",) + (None,) * (len(core) - 1)
+        if not core:
+            return (None,) * len(shape)
+        return pre + ("batch",) + (None,) * (len(core) - 1)
+
+    return entries

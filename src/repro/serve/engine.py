@@ -31,11 +31,14 @@ from typing import Any
 import jax
 import jax.numpy as jnp
 import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec
 
 from repro import axon, quant
 from repro.configs.base import ModelConfig
 from repro.core.mapper import mapper_cache_stats
 from repro.models import transformer as T
+from repro.parallel import sharding as shd
+from repro.parallel.specs import make_param_spec_fn
 from repro.obs import annotate as _ann
 from repro.obs import attribution as _attr
 from repro.obs import metrics as _obs_metrics, optrace as _obs
@@ -67,6 +70,25 @@ def declared_step_widths(prefill_chunk: int) -> tuple[int, ...]:
     if prefill_chunk == 1:
         return (1,)
     return (prefill_chunk, 1)
+
+
+def prefill_width(prompt_len: int, prefill_chunk: int) -> int:
+    """Token width of every decoupled-prefill step, as a pure function of
+    the prompt length.
+
+    Always ``prefill_chunk``: partial tail chunks are padded through the
+    valid mask, never fed at their own size, so the dedicated batch-1
+    prefill jit is traced at exactly ONE signature regardless of prompt
+    length.  The static analyzer (``repro.analysis.retrace``) enumerates
+    prompt lengths against :func:`declared_prefill_widths` to prove it."""
+    del prompt_len
+    return prefill_chunk
+
+
+def declared_prefill_widths(prefill_chunk: int) -> tuple[int, ...]:
+    """The complete set of token widths the decoupled prefill step is
+    traced at."""
+    return (prefill_chunk,)
 
 
 def make_serve_step(cfg: ModelConfig, *, temperature: float = 0.0,
@@ -197,6 +219,27 @@ class ServeEngine:
                       not fully paged (SWA / SSM / hybrid / embedding
                       frontends).
 
+    Mesh knobs:
+      mesh          : a ``jax.sharding.Mesh`` with axes from {'pod', 'data',
+                      'model'} (``launch.mesh.make_debug_mesh`` /
+                      ``make_production_mesh``).  Parameters are placed via
+                      the TP/FSDP rules in ``parallel.specs``, the KV-cache
+                      pytree (dense AND paged pools) is pinned with
+                      ``NamedSharding`` from ``parallel.sharding.
+                      make_cache_spec_fn``, and every jitted step is traced
+                      under the mesh so the model-level ``constrain`` calls
+                      take effect (tensor-parallel attention/MLP, expert-
+                      parallel MoE).  All specs are divisibility-guarded:
+                      outputs are bit-identical to a single-device engine.
+      decouple_prefill : split serving into prefill -> insert -> generate.
+                      Prompts run through a dedicated batch-1 prefill jit
+                      (one fixed ``prefill_chunk``-wide signature) and the
+                      produced cache is handed to a decode slot via a jitted
+                      ``insert`` (``models.transformer.insert_slot``), so the
+                      main chunk step stays decode-only at width 1 -- the
+                      layout that lets prefill and decode later live on
+                      separate meshes.  Dense caches only.
+
     ``generate`` returns outputs in request order; ``last_stats`` holds
     per-request latency/token counts for the most recent call, with queue
     wait (``queue_s``), time-to-first-token measured from admission
@@ -211,7 +254,8 @@ class ServeEngine:
                  quantized: bool | str = False, attn_int8: bool = False,
                  cache_dtype=None, paged: bool = False, page_size: int = 16,
                  pool_pages: int | None = None, cache_fmt: str | None = None,
-                 prefix_cache: bool = True):
+                 prefix_cache: bool = True, mesh=None,
+                 decouple_prefill: bool = False):
         if queue_policy not in QUEUE_POLICIES:
             raise ValueError(
                 f"queue_policy must be one of {QUEUE_POLICIES}, "
@@ -219,6 +263,11 @@ class ServeEngine:
         if cache_fmt is not None and not paged:
             raise ValueError("cache_fmt (quantized cache pages) requires "
                              "paged=True; dense caches take cache_dtype")
+        if decouple_prefill and paged:
+            raise ValueError(
+                "decouple_prefill requires dense caches: paged pools have "
+                "no slot axis for insert_slot to copy into (the paged "
+                "handoff is a page-table rewrite, not yet wired up)")
         if quantized and not quant.is_quantized(params):
             fmt = "int8" if quantized is True else str(quantized)
             params = quant.quantize_lm_weights(params, fmt=fmt)
@@ -282,12 +331,75 @@ class ServeEngine:
                                          paged=self.paged)
         else:
             self.prefix_cache = False
+        # mesh-parallel serving: place the parameters by the TP/FSDP rules,
+        # pin every cache leaf (pools, counters, page table) with a
+        # NamedSharding, and declare them as the step's out_shardings so
+        # donation keeps the sharded pytree in place across steps.  The
+        # jitted callables are wrapped to trace under the mesh, which is
+        # what arms the model-level `constrain` calls.
+        self.mesh = mesh
+        self.decouple_prefill = bool(decouple_prefill)
+        self._cache_shardings = None
+        self._pt_sharding = None
+        step_out = reset_out = None
+        if mesh is not None:
+            self.params = jax.device_put(
+                self.params,
+                shd.param_sharding(self.params, mesh,
+                                   make_param_spec_fn(cfg)))
+            self._cache_spec_fn = shd.make_cache_spec_fn(mesh, cfg)
+            struct = jax.eval_shape(
+                lambda: T.init_caches(cfg, batch=batch_slots,
+                                      max_len=max_len,
+                                      dtype=self.cache_dtype,
+                                      paged=self.paged))
+            self._cache_shardings = shd.tree_shardings(
+                struct, mesh, self._cache_spec_fn)
+            self._pt_sharding = NamedSharding(mesh, PartitionSpec())
+            if self.paged is not None:
+                self._caches = jax.device_put(self._caches,
+                                              self._cache_shardings)
+            step_out = (NamedSharding(mesh, PartitionSpec()),
+                        self._cache_shardings)
+            reset_out = self._cache_shardings
         # donate the caches operand: the scatter updates and slot resets run
         # in place instead of copying the whole KV pytree every step
-        self._step = jax.jit(make_chunk_step(cfg, temperature=temperature,
-                                             policy=policy, paged=self.paged),
-                             donate_argnums=(1,))
-        self._reset = jax.jit(T.reset_slots, donate_argnums=(0,))
+        self._step = self._under_mesh(jax.jit(
+            make_chunk_step(cfg, temperature=temperature,
+                            policy=policy, paged=self.paged),
+            donate_argnums=(1,), out_shardings=step_out))
+        self._reset = self._under_mesh(jax.jit(
+            T.reset_slots, donate_argnums=(0,), out_shardings=reset_out))
+        # prefill/insert/generate split: a dedicated prefill lane whose
+        # filled cache is handed to a decode slot by a jitted insert
+        # (dynamic slot index -- one trace serves every slot).  The lane
+        # runs at the decode engine's own batch width with a single live
+        # row: dense caches are cheap relative to paged pools, and keeping
+        # the prefill step's shapes/shardings IDENTICAL to the inline
+        # chunk step is what makes mesh-sharded decoupled serving
+        # bit-identical to single-device (a batch-1 lane partitions
+        # differently and drifts in the last ulp)
+        self._prefill_caches = None
+        if self.decouple_prefill:
+            self._prefill_caches = T.init_caches(
+                cfg, batch=batch_slots, max_len=max_len,
+                dtype=self.cache_dtype)
+            prefill_out = insert_out = reset_p_out = None
+            if mesh is not None:
+                self._prefill_caches = jax.device_put(
+                    self._prefill_caches, self._cache_shardings)
+                prefill_out = step_out
+                insert_out = self._cache_shardings
+                reset_p_out = self._cache_shardings
+            self._prefill = self._under_mesh(jax.jit(
+                make_chunk_step(cfg, temperature=temperature, policy=policy),
+                donate_argnums=(1,), out_shardings=prefill_out))
+            self._insert = self._under_mesh(jax.jit(
+                T.insert_slot, donate_argnums=(0,),
+                out_shardings=insert_out))
+            self._reset_prefill = self._under_mesh(jax.jit(
+                T.reset_slots, donate_argnums=(0,),
+                out_shardings=reset_p_out))
         self.last_stats: dict[str, Any] | None = None
         # per-trace modeled cost of one chunk step, keyed by token width:
         # jitted steps never hit the op ring (one dispatch per compilation),
@@ -295,9 +407,35 @@ class ServeEngine:
         # ledger the first time each width is traced with telemetry on
         self._traced_step_cost: dict[int, dict[str, float]] = {}
 
+    def _under_mesh(self, fn):
+        """Wrap a jitted callable so every call (and thus every trace) runs
+        inside the engine's mesh context -- that is what makes the model's
+        ``parallel.sharding.constrain`` calls resolve against the mesh.
+        Identity when the engine is single-device."""
+        if self.mesh is None:
+            return fn
+        mesh = self.mesh
+
+        def wrapped(*args, **kwargs):
+            with mesh:
+                return fn(*args, **kwargs)
+
+        return wrapped
+
     def declared_step_widths(self) -> tuple[int, ...]:
-        """Token widths this engine's chunk step will ever be traced at."""
+        """Token widths this engine's chunk step will ever be traced at.
+        A decoupled-prefill engine runs the main step decode-only (width
+        1); prompt chunks go through the dedicated prefill jit instead."""
+        if self.decouple_prefill:
+            return (1,)
         return declared_step_widths(self.prefill_chunk)
+
+    def declared_prefill_widths(self) -> tuple[int, ...]:
+        """Token widths of the dedicated prefill step (empty when prefill
+        runs inline through the chunk step)."""
+        if not self.decouple_prefill:
+            return ()
+        return declared_prefill_widths(self.prefill_chunk)
 
     # ------------------------------------------------------------- schedule
 
@@ -312,14 +450,20 @@ class ServeEngine:
                     f"max_new_tokens ({req.max_new_tokens}) exceeds "
                     f"max_len={self.max_len}")
 
-    def _admit(self, slots, pending, requests, caches, now):
+    def _admit(self, slots, pending, requests, caches, now, finish=None):
         """Backfill free slots from the pending queue (resets their cache).
 
         Paged engines additionally consult the page pool: admission takes
         pages (sharing any registered prompt prefix), rewrites the slot's
         row of the host page-table mirror, and starts the slot's position
         counters at the shared token count so prefill skips straight past
-        the tokens the shared pages already hold."""
+        the tokens the shared pages already hold.
+
+        Decoupled-prefill engines instead run the whole prompt through the
+        dedicated batch-1 prefill lane here, insert the produced cache into
+        the slot, and hand the first sampled token to ``finish`` (the
+        generate loop's post-sample transition) -- the slot enters the
+        decode loop already holding its first token."""
         reset = np.zeros((self.batch_slots,), bool)
         lens = np.zeros((self.batch_slots,), np.int32)
         for b in range(self.batch_slots):
@@ -327,6 +471,15 @@ class ServeEngine:
                 continue
             idx = pending.popleft()
             req = requests[idx]
+            if self.decouple_prefill:
+                slots[b] = _Slot(state="prefill", req_idx=idx, req=req,
+                                 prompt=np.asarray(req.prompt, np.int32),
+                                 fed=len(req.prompt), t_admit=now)
+                first, pcaches = self._prefill_request(req.prompt)
+                caches = self._insert(caches, pcaches, np.int32(b))
+                slots[b].state = "decode"
+                finish(b, slots[b], first)
+                continue
             shared = 0
             if self.pool is not None:
                 need = len(req.prompt) + req.max_new_tokens
@@ -350,12 +503,41 @@ class ServeEngine:
             reset[b] = True
         if reset.any():
             if self.pool is not None:
-                caches[KV.PAGE_TABLE_KEY] = jnp.asarray(self._pt_host)
+                caches[KV.PAGE_TABLE_KEY] = KV.device_page_table(
+                    self._pt_host, self._pt_sharding)
                 caches = self._reset(caches, jnp.asarray(reset),
                                      jnp.asarray(lens))
             else:
                 caches = self._reset(caches, jnp.asarray(reset))
         return caches
+
+    def _prefill_request(self, prompt) -> tuple[int, Any]:
+        """Run one whole prompt through the dedicated prefill lane (row 0
+        of the prefill cache; the other rows stay masked out).
+
+        Every step feeds token width ``prefill_width(len(prompt),
+        prefill_chunk)`` -- the single declared prefill signature; partial
+        tail chunks are padded through the valid mask, so no prompt length
+        can retrace the prefill jit.  Returns the first sampled token and
+        the filled cache, ready for the ``insert_slot`` handoff."""
+        B = self.batch_slots
+        C = prefill_width(len(prompt), self.prefill_chunk)
+        caches = self._reset_prefill(self._prefill_caches,
+                                     jnp.ones((B,), bool))
+        tok = None
+        for i in range(0, len(prompt), C):
+            n = min(C, len(prompt) - i)
+            tokens = np.zeros((B, C), np.int32)
+            tokens[0, :n] = prompt[i: i + n]
+            valid = np.zeros((B, C), bool)
+            valid[0, :n] = True
+            self.rng, sub = jax.random.split(self.rng)
+            tok, caches = self._prefill(self.params, caches,
+                                        jnp.asarray(tokens),
+                                        jnp.asarray(valid), sub)
+        self._prefill_caches = caches
+        self._prefill_fed += len(prompt)
+        return int(np.asarray(tok)[0]), caches
 
     def generate(self, requests: list[Request]) -> list[list[int]]:
         self._validate(requests)
@@ -369,12 +551,61 @@ class ServeEngine:
         slots = [_Slot() for _ in range(B)]
         outputs: list[list[int] | None] = [None] * len(requests)
         per_req: list[dict | None] = [None] * len(requests)
+        self._prefill_fed = 0          # decoupled-prefill token counter
         if self.pool is not None:
             caches = self._caches      # pool + prefix pages persist per call
             hits0, hit_tok0 = self.pool.hits, self.pool.hit_tokens
         else:
             caches = T.init_caches(self.cfg, batch=B, max_len=self.max_len,
                                    dtype=self.cache_dtype)
+            if self._cache_shardings is not None:
+                caches = jax.device_put(caches, self._cache_shardings)
+
+        def finish(b: int, s: _Slot, tok: int) -> None:
+            """Post-sample slot transition, shared between the decode loop
+            and decoupled-prefill admission: record the token, flip the
+            slot to decode, and retire + free it when the request is done
+            (eos, max_new reached, or max_new == 0)."""
+            now = time.perf_counter() - t0
+            if s.t_first < 0:
+                s.t_first = now
+            mnew = s.req.max_new_tokens
+            if mnew > 0:
+                s.out.append(tok)
+                s.last_tok = tok
+            s.state = "decode"
+            if mnew == 0 or tok == s.req.eos_id or len(s.out) >= mnew:
+                if self.pool is not None:
+                    # freed pages return to the pool; with prefix caching
+                    # the full prompt pages freeze into the index first so
+                    # later requests can share them
+                    self.pool.release(
+                        b, prompt=tuple(s.req.prompt)
+                        if self.prefix_cache else None)
+                    self._pt_host[b, :] = 0
+                outputs[s.req_idx] = s.out
+                per_req[s.req_idx] = {
+                    "prompt_len": len(s.prompt),
+                    "new_tokens": len(s.out),
+                    # queue wait vs compute, reported separately: all
+                    # requests arrive at t=0, so t_admit IS the queue
+                    # wait and ttft is measured from admission
+                    "queue_s": s.t_admit,
+                    "ttft_s": s.t_first - s.t_admit,
+                    "decode_s": now - s.t_first,
+                    "admit_s": s.t_admit,
+                    "first_token_s": s.t_first,
+                    "done_s": now,
+                    "latency_s": now,           # all requests arrive at t=0
+                }
+                if obs_on:
+                    _obs.serve_request_spans(
+                        s.req_idx, t_origin=t0, queue_s=s.t_admit,
+                        first_s=s.t_first, done_s=now,
+                        prompt_len=len(s.prompt),
+                        new_tokens=len(s.out), slot=b)
+                slots[b] = _Slot()              # freed: backfilled next step
+
         steps = 0
         n_prefill = 0
         modeled = {"flops": 0.0, "bytes": 0.0, "energy_j": 0.0}
@@ -386,7 +617,7 @@ class ServeEngine:
 
         while pending or any(s.state != "free" for s in slots):
             caches = self._admit(slots, pending, requests, caches,
-                                 time.perf_counter() - t0)
+                                 time.perf_counter() - t0, finish)
             C = step_width([s.state for s in slots], self.prefill_chunk)
             tokens = np.zeros((B, C), np.int32)
             valid = np.zeros((B, C), bool)
@@ -433,7 +664,6 @@ class ServeEngine:
                             1 for s in slots if s.state == "decode")})
             steps += 1
             n_prefill += sum(fed)
-            now = time.perf_counter() - t0
             for b, s in enumerate(slots):
                 if s.state == "prefill":
                     s.fed += fed[b]
@@ -441,47 +671,10 @@ class ServeEngine:
                         continue            # prompt not finished: no sample
                 elif s.state != "decode":
                     continue
-                tok = int(nxt[b])
-                if s.t_first < 0:
-                    s.t_first = now
-                mnew = s.req.max_new_tokens
-                if mnew > 0:
-                    s.out.append(tok)
-                    s.last_tok = tok
-                s.state = "decode"
-                if mnew == 0 or tok == s.req.eos_id or len(s.out) >= mnew:
-                    if self.pool is not None:
-                        # freed pages return to the pool; with prefix
-                        # caching the full prompt pages freeze into the
-                        # index first so later requests can share them
-                        self.pool.release(
-                            b, prompt=tuple(s.req.prompt)
-                            if self.prefix_cache else None)
-                        self._pt_host[b, :] = 0
-                    outputs[s.req_idx] = s.out
-                    per_req[s.req_idx] = {
-                        "prompt_len": len(s.prompt),
-                        "new_tokens": len(s.out),
-                        # queue wait vs compute, reported separately: all
-                        # requests arrive at t=0, so t_admit IS the queue
-                        # wait and ttft is measured from admission
-                        "queue_s": s.t_admit,
-                        "ttft_s": s.t_first - s.t_admit,
-                        "decode_s": now - s.t_first,
-                        "admit_s": s.t_admit,
-                        "first_token_s": s.t_first,
-                        "done_s": now,
-                        "latency_s": now,       # all requests arrive at t=0
-                    }
-                    if obs_on:
-                        _obs.serve_request_spans(
-                            s.req_idx, t_origin=t0, queue_s=s.t_admit,
-                            first_s=s.t_first, done_s=now,
-                            prompt_len=len(s.prompt),
-                            new_tokens=len(s.out), slot=b)
-                    slots[b] = _Slot()          # freed: backfilled next step
+                finish(b, s, int(nxt[b]))
 
         wall = time.perf_counter() - t0
+        n_prefill += self._prefill_fed     # decoupled-prefill lane tokens
         n_tok = sum(len(o) for o in outputs if o is not None)
         self.last_stats = {
             "requests": per_req,
@@ -499,6 +692,13 @@ class ServeEngine:
             # hits after warmup -- misses mid-run mean shape churn
             "mapper_cache": mapper_cache_stats(),
         }
+        if self.decouple_prefill:
+            self.last_stats["decoupled_prefill_tokens"] = self._prefill_fed
+        if self.mesh is not None:
+            self.last_stats["mesh"] = {
+                "devices": int(self.mesh.size),
+                "axes": {k: int(v) for k, v in self.mesh.shape.items()},
+            }
         if self.pool is not None:
             self._caches = caches
             self.last_stats["pool"] = self.pool.stats()

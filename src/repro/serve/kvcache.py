@@ -244,6 +244,19 @@ PAGED_LEAF_SUFFIXES = ("_pages", "_scales")
 PAGE_TABLE_KEY = "page_table"
 
 
+def device_page_table(pt_host, sharding=None) -> jax.Array:
+    """Host page-table mirror -> device array for the caches pytree.
+
+    ``sharding`` (a NamedSharding, normally fully replicated) pins the
+    table's placement on a mesh-parallel engine; without it a bare
+    ``jnp.asarray`` would land the table on the default device only and
+    every admission would re-negotiate its layout against the sharded
+    cache pytree inside the step."""
+    if sharding is not None:
+        return jax.device_put(jnp.asarray(pt_host, jnp.int32), sharding)
+    return jnp.asarray(pt_host, jnp.int32)
+
+
 # ---------------------------------------------------------------------------
 # byte accounting (the maxtext summarize_pytree_data shape)
 # ---------------------------------------------------------------------------

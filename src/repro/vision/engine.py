@@ -100,7 +100,7 @@ class VisionEngine:
 
     def __init__(self, params, cfg: VisionConfig, *, batch_slots: int = 8,
                  policy: axon.ExecutionPolicy | None = None,
-                 letterbox: bool = True):
+                 letterbox: bool = True, mesh=None):
         self.params = params
         self.cfg = cfg
         self.batch_slots = batch_slots
@@ -110,7 +110,24 @@ class VisionEngine:
                 and pol.precision == "float":
             pol = dataclasses.replace(pol, precision="int8")
         self.policy = pol
-        self._step = jax.jit(make_infer_step(cfg, policy=pol))
+        # Vision serving is data-parallel: one forward pass per image, no
+        # KV state, so the mesh shards the batch dim over every 'data'-like
+        # axis and replicates the (small) conv/dense params everywhere.
+        self.mesh = mesh
+        self._batch_sharding = None
+        step_out = None
+        if mesh is not None:
+            from jax.sharding import NamedSharding, PartitionSpec
+            from repro.parallel import sharding as shd
+            repl = NamedSharding(mesh, PartitionSpec())
+            self.params = jax.device_put(self.params, repl)
+            self._batch_sharding = shd.named_sharding(
+                mesh, "batch", None, None, None,
+                dims=(batch_slots, *cfg.input_hw, cfg.in_channels))
+            step_out = NamedSharding(mesh, PartitionSpec())
+        jitted = jax.jit(make_infer_step(cfg, policy=pol),
+                         out_shardings=step_out)
+        self._step = self._under_mesh(jitted)
         self.last_stats: dict[str, Any] | None = None
         # modeled cost of one traced infer step (single fixed batch shape),
         # captured from the traced-cost ledger like the serve engine's
@@ -119,6 +136,28 @@ class VisionEngine:
     def declared_step_batches(self) -> tuple[int, ...]:
         """Batch dims this engine's infer step will ever be traced at."""
         return declared_step_batches(self.batch_slots)
+
+    def _under_mesh(self, fn):
+        """Wrap a jitted callable so every call (and hence every trace)
+        runs inside ``with mesh:`` -- arming the model-level ``constrain``
+        annotations without touching the scheduling loop."""
+        if self.mesh is None:
+            return fn
+        mesh = self.mesh
+
+        def wrapped(*args, **kwargs):
+            with mesh:
+                return fn(*args, **kwargs)
+
+        return wrapped
+
+    def _stack_batch(self, lane_imgs: list[jax.Array]) -> jax.Array:
+        """Stack admitted lanes into the step batch, committed to the
+        mesh's data-parallel batch sharding when one is configured."""
+        batch = jnp.stack(lane_imgs)
+        if self._batch_sharding is not None:
+            batch = jax.device_put(batch, self._batch_sharding)
+        return batch
 
     def _validate(self, requests: list[ImageRequest]) -> None:
         want = (*self.cfg.input_hw, self.cfg.in_channels)
@@ -153,6 +192,8 @@ class VisionEngine:
         """Compile the (single) step shape outside any timed region."""
         zero = jnp.zeros((self.batch_slots, *self.cfg.input_hw,
                           self.cfg.in_channels), self.cfg.pdtype)
+        if self._batch_sharding is not None:
+            zero = jax.device_put(zero, self._batch_sharding)
         jax.block_until_ready(self._step(self.params, zero))
 
     def _warm_geometries(self, requests: list[ImageRequest]) -> int:
@@ -220,7 +261,7 @@ class VisionEngine:
             ledger0 = (_obs.traced_totals()
                        if obs_on and self._traced_step_cost is None else None)
             with _ann.host_scope("vision_step", enabled=obs_on):
-                out = self._step(self.params, jnp.stack(lane_imgs))
+                out = self._step(self.params, self._stack_batch(lane_imgs))
                 out = jax.block_until_ready(out)
             if ledger0 is not None:
                 after = _obs.traced_totals()
@@ -284,6 +325,11 @@ class VisionEngine:
             "mean_occupancy": occupancy / (steps * B) if steps else 0.0,
             "mapper_cache": mapper_cache_stats(),
         }
+        if self.mesh is not None:
+            self.last_stats["mesh"] = {
+                "devices": int(self.mesh.size),
+                "axes": dict(self.mesh.shape),
+            }
         if obs_on:
             self.last_stats["attribution"] = _attr.engine_row(
                 wall_s=wall, modeled=modeled, steps=steps,
